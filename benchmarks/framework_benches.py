@@ -1,0 +1,140 @@
+"""Framework-layer benchmarks: elastic restart overhead, checkpoint I/O,
+kernel interpret-mode validation timing, roofline table from the dry-run
+artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def bench_elastic_train_restart(tmp="/tmp/bench_ck"):
+    """Reduced-model train: step time vs (checkpoint save + restore) —
+    derived: restart overhead in equivalent steps."""
+    import shutil
+    shutil.rmtree(tmp, ignore_errors=True)
+    from repro.launch.train import Trainer, build
+    cfg, shape, run = build("internvl2-2b", reduced=True)
+    tr = Trainer(cfg, shape, run, ckpt_dir=tmp, seed=0)
+    tr.train(3, ckpt_every=100, log_every=0, log=lambda *a: None)  # warm
+    t0 = time.time()
+    tr.train(13, ckpt_every=100, log_every=0, log=lambda *a: None)
+    step_s = (time.time() - t0) / 10
+    t0 = time.time()
+    tr.ckpt.save_blocking(13, {"params": tr.params, "opt": tr.opt})
+    save_s = time.time() - t0
+    t0 = time.time()
+    tr.restore(tmp)
+    restore_s = time.time() - t0
+    overhead_steps = (save_s + restore_s) / step_s
+    rows = [f"  step={step_s * 1e3:.1f}ms save={save_s * 1e3:.1f}ms "
+            f"restore={restore_s * 1e3:.1f}ms",
+            f"  restart costs ~{overhead_steps:.1f} steps of work"]
+    return step_s * 1e6, round(overhead_steps, 2), rows
+
+
+def bench_kernels():
+    """interpret-mode us/call + max|err| vs oracle for all four kernels."""
+    from repro.kernels import ops, ref
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+    rows, worst = [], 0.0
+    t_all = time.time()
+
+    def run(name, fn_k, fn_r, *args):
+        nonlocal worst
+        t0 = time.time()
+        o = fn_k(*args)
+        jax.block_until_ready(o)
+        us = (time.time() - t0) * 1e6
+        err = float(jnp.abs(o - fn_r(*args)).max())
+        worst = max(worst, err)
+        rows.append(f"  {name:16s} {us:10.0f}us  max|err|={err:.2e}")
+
+    q = jax.random.normal(ks[0], (2, 128, 4, 64))
+    k = jax.random.normal(ks[1], (2, 128, 2, 64))
+    v = jax.random.normal(ks[2], (2, 128, 2, 64))
+
+    def fa_ref(q, k, v):
+        B, S, H, D = q.shape
+        Hkv = k.shape[2]
+        qr = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+        kr = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+        vr = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+        o = ref.flash_attention_ref(qr, kr, vr, causal=True)
+        return o.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    run("flash_attention",
+        lambda q, k, v: ops.flash_attention(q, k, v, causal=True),
+        fa_ref, q, k, v)
+
+    xc = jax.random.normal(ks[3], (1, 64, 32))
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (1, 64, 32)))
+    bm = jax.random.normal(ks[5], (1, 64, 8))
+    cm = jax.random.normal(ks[6], (1, 64, 8))
+    a = -jnp.exp(jax.random.normal(ks[7], (32, 8)))
+    run("mamba_scan",
+        lambda *t: ops.mamba_scan(*t, block_d=32, block_s=32),
+        ref.mamba_scan_ref, xc, dt, bm, cm, a)
+
+    q2 = jax.random.normal(ks[0], (2, 128, 32))
+    k2 = jax.random.normal(ks[1], (2, 128, 32))
+    v2 = jax.random.normal(ks[2], (2, 128, 32))
+    li = jax.random.normal(ks[3], (2, 128, 1)) - 5
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (2, 128, 1)) + 3)
+    run("mlstm_chunk",
+        lambda *t: ops.mlstm_chunk(*t, block_s=64), ref.mlstm_ref,
+        q2, k2, v2, li, lf)
+
+    x3 = jax.random.normal(ks[5], (4, 64, 32))
+    w3 = jax.random.normal(ks[6], (4, 32, 64))
+    run("moe_gmm", lambda *t: ops.moe_gmm(*t, block_c=32, block_f=32,
+                                          block_k=16),
+        ref.moe_gmm_ref, x3, w3)
+    return (time.time() - t_all) * 1e6 / 4, worst, rows
+
+
+def load_dryrun_results():
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        for r in json.load(open(path)):
+            key = (r["arch"], r["shape"], r["mesh"])
+            if r.get("status") == "ok" or key not in cells:
+                cells[key] = r
+    return cells
+
+
+def bench_roofline_table():
+    """Per (arch x shape x mesh) roofline terms from the dry-run artifacts;
+    derived = worst useful-compute fraction across compute-bound cells."""
+    cells = load_dryrun_results()
+    if not cells:
+        return 0.0, 0, ["  (no dry-run artifacts found)"]
+    rows = [f"  {'arch':24s} {'shape':11s} {'mesh':8s} "
+            f"{'compute_s':>9s} {'memory_s':>9s} {'coll_s':>9s} "
+            f"{'bound':>10s} {'useful':>6s}"]
+    worst_frac, n_ok = 1.0, 0
+    for (arch, shape, mesh), r in sorted(cells.items()):
+        if r.get("status") == "skipped":
+            rows.append(f"  {arch:24s} {shape:11s} {mesh:8s} "
+                        f"{'skip (full attention @500k)':>40s}")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"  {arch:24s} {shape:11s} {mesh:8s} ERROR")
+            continue
+        n_ok += 1
+        rf = r["roofline"]
+        frac = min(1.0, rf["useful_ratio"])
+        worst_frac = min(worst_frac, frac)
+        rows.append(
+            f"  {arch:24s} {shape:11s} {mesh:8s} "
+            f"{rf['compute_s']:9.4f} {rf['memory_s']:9.4f} "
+            f"{rf['collective_s']:9.4f} {rf['bottleneck']:>10s} "
+            f"{frac:6.2f}")
+    return 0.0, n_ok, rows

@@ -1,0 +1,56 @@
+"""Benchmark harness — one function per paper table/figure + framework
+benches. Prints ``name,us_per_call,derived`` CSV rows (with detail blocks
+on indented lines below each row).
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run --only campaign
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import framework_benches as fb
+    from benchmarks import paper_tables as pt
+
+    benches = [
+        ("fig1_fleet_timeline", pt.bench_fig1_fleet_timeline),
+        ("fig2_gpu_hours_doubling", pt.bench_fig2_gpu_hours_doubling),
+        ("claims_table_maxerr_pct", pt.bench_claims_table),
+        ("preemption_economics", pt.bench_preemption_economics),
+        ("budget_control_latency", pt.bench_budget_control),
+        ("nat_keepalive_drops", pt.bench_nat_keepalive),
+        ("overlay_matches_per_s", pt.bench_overlay_throughput),
+        ("elastic_restart_steps", fb.bench_elastic_train_restart),
+        ("kernels_max_err", fb.bench_kernels),
+        ("roofline_cells_ok", fb.bench_roofline_table),
+    ]
+    if args.only:
+        benches = [(n, f) for n, f in benches if args.only in n]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        try:
+            us, derived, rows = fn()
+            print(f"{name},{us:.1f},{derived}")
+            for r in rows:
+                print(r)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},NaN,ERROR")
+            traceback.print_exc(limit=5)
+        sys.stdout.flush()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

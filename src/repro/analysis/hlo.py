@@ -1,0 +1,236 @@
+"""Post-optimization HLO text analysis: dot FLOPs + collective bytes with
+while-loop trip-count multipliers.
+
+XLA's HloCostAnalysis visits each while body ONCE, so for scan-over-layers
+models cost_analysis() undercounts by ~num_layers. This parser rebuilds the
+call graph (entry -> fusions/calls/whiles), reads each while's
+``backend_config known_trip_count`` (XLA annotates lax.scan loops), and
+multiplies nested costs accordingly — giving faithful per-device FLOPs and
+collective bytes for the roofline.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# opcode: first identifier followed by '(' after the shape part; shapes end
+# with ']', '{...}' layout, or ')' for tuples.
+_OPCODE_RE = re.compile(r"[\]\}\)]\s*([a-z][a-z0-9\-]*)\(")
+_TRIP_RE = re.compile(r'known_trip_count"?\s*:\s*\{"?n"?\s*:\s*"?(\d+)')
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CALL_REFS = re.compile(r"(?:calls=|to_apply=|body=|condition=)"
+                        r"%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _shapes_bytes(text):
+    """Sum of bytes over all array shapes in `text` (tuple-aware)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            n = 1
+            for x in dims.split(","):
+                if x:
+                    n *= int(x)
+            total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(text):
+    m = _SHAPE_RE.search(text)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None
+    dims = m.group(2)
+    return tuple(int(x) for x in dims.split(",")) if dims else ()
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    shape: tuple | None
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)   # %name -> shape tuple
+
+
+_HEADER_PARAM_RE = re.compile(r"([\w\.\-]+):\s+((?:[a-z0-9]+\[[0-9,]*\]"
+                              r"(?:\{[0-9,]*\})?)+)")
+
+
+def parse_module(hlo_text):
+    """Returns ({name: Computation}, entry_name)."""
+    comps, cur, entry = {}, None, None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        ls = line.strip()
+        if not ls or ls.startswith("//") or ls.startswith("HloModule"):
+            continue
+        # computation headers sit at column 0: [ENTRY] %name (params) -> ret {
+        at_top = not raw[:1].isspace()
+        if at_top and ls.endswith("{") and "->" in ls and \
+                (ls.startswith("%") or ls.startswith("ENTRY")):
+            toks = ls.split()
+            name = toks[1] if toks[0] == "ENTRY" else toks[0]
+            cur = Computation(name.lstrip("%"))
+            comps[cur.name] = cur
+            if toks[0] == "ENTRY":
+                entry = cur.name
+            # header params into symbol table
+            for pname, pshape in _HEADER_PARAM_RE.findall(ls):
+                cur.symbols[pname] = _first_shape(pshape)
+            continue
+        if ls == "}" or cur is None:
+            continue
+        if "=" not in ls or not ls.startswith("%"):
+            # ROOT lines: 'ROOT %x = ...'
+            if ls.startswith("ROOT %"):
+                ls = ls[5:]
+            else:
+                continue
+        lhs, rhs = ls.split("=", 1)
+        iname = lhs.strip().lstrip("%")
+        om = _OPCODE_RE.search(rhs)
+        opcode = om.group(1) if om else ""
+        shape = _first_shape(rhs)
+        cur.symbols[iname] = shape
+        cur.instrs.append(Instr(iname, opcode, shape, ls))
+    return comps, entry
+
+
+def _operands(line):
+    """Operand %names inside the op's parentheses."""
+    om = _OPCODE_RE.search(line.split("=", 1)[1])
+    if not om:
+        return []
+    start = line.index(om.group(0)) + len(om.group(0))
+    depth, i = 1, start
+    while i < len(line) and depth:
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+        i += 1
+    inner = line[start:i - 1]
+    return [m.group(1) for m in re.finditer(r"%([\w\.\-]+)", inner)]
+
+
+def _dot_flops(instr, comp):
+    out = instr.shape
+    if out is None:
+        return 0
+    out_n = 1
+    for d in out:
+        out_n *= d
+    ops = _operands(instr.line)
+    lhs_shape = comp.symbols.get(ops[0]) if ops else None
+    lc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
+    k = 1
+    if lhs_shape and lc:
+        for idx in lc.group(1).split(","):
+            if idx:
+                k *= lhs_shape[int(idx)]
+    return 2 * out_n * k
+
+
+def _collective_bytes(instr, comp):
+    # output may be a tuple: sum all shapes left of the opcode
+    rhs = instr.line.split("=", 1)[1]
+    om = _OPCODE_RE.search(rhs)
+    out_b = _shapes_bytes(rhs[:om.start() + 1]) if om else 0
+    # XLA promotes bf16 all-reduces to f32 (convert -> reduce ->
+    # reduce-precision); the wire payload on TPU stays 16-bit. The promoted
+    # reduction computation is suffixed "_promoted" — halve those bytes.
+    if "promoted" in instr.line and instr.opcode.startswith("all-reduce"):
+        out_b //= 2
+    return out_b
+
+
+def while_trip_count(comps, instr):
+    m = _TRIP_RE.search(instr.line)
+    if m:
+        return int(m.group(1))
+    cm = re.search(r"condition=%?([\w\.\-]+)", instr.line)
+    cond = comps.get(cm.group(1)) if cm else None
+    if cond is None:
+        return 1
+    consts = []
+    for ins in cond.instrs:
+        consts += [int(x) for x in _CONST_RE.findall(ins.line)]
+    return max(consts) if consts else 1
+
+
+def analyze(hlo_text):
+    """dict: dot_flops, collective_bytes(+by kind), per device, with while
+    multipliers applied."""
+    comps, entry = parse_module(hlo_text)
+    memo = {}
+
+    def cost(name, depth=0):
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return {"flops": 0, "coll": {}}
+        memo[name] = {"flops": 0, "coll": {}}   # cycle guard
+        flops, coll = 0, {}
+
+        def add_coll(kind, b, mult=1):
+            coll[kind] = coll.get(kind, 0) + b * mult
+
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "dot":
+                flops += _dot_flops(ins, comp)
+                continue
+            if any(op.startswith(c) for c in _COLLECTIVES):
+                if op.endswith("-done"):
+                    continue
+                kind = next(c for c in _COLLECTIVES if op.startswith(c))
+                add_coll(kind, _collective_bytes(ins, comp))
+                continue
+            if op == "while":
+                refs = dict(
+                    (k, v) for k, v in
+                    re.findall(r"(body|condition)=%?([\w\.\-]+)", ins.line))
+                trips = while_trip_count(comps, ins)
+                if "body" in refs:
+                    sub = cost(refs["body"], depth + 1)
+                    flops += sub["flops"] * trips
+                    for k, v in sub["coll"].items():
+                        add_coll(k, v, trips)
+                continue
+            subnames = [m.group(1) for m in _CALL_REFS.finditer(ins.line)]
+            bm = _BRANCHES_RE.search(ins.line)
+            if bm:
+                subnames += [s.strip().lstrip("%")
+                             for s in bm.group(1).split(",")]
+            for sub_name in set(subnames):
+                if sub_name == name:
+                    continue
+                sub = cost(sub_name, depth + 1)
+                flops += sub["flops"]
+                for k, v in sub["coll"].items():
+                    add_coll(k, v)
+        out = {"flops": flops, "coll": coll}
+        memo[name] = out
+        return out
+
+    res = cost(entry) if entry else {"flops": 0, "coll": {}}
+    return {"dot_flops": res["flops"],
+            "collective_bytes": sum(res["coll"].values()),
+            "collective_bytes_by_kind": res["coll"]}

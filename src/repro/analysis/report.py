@@ -1,0 +1,85 @@
+"""Render EXPERIMENTS.md tables from dry-run artifacts.
+
+    PYTHONPATH=src python -m repro.analysis.report artifacts/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(art_dir):
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        for r in json.load(open(path)):
+            cells[(r["arch"], r["shape"], r["mesh"])] = r
+    return cells
+
+
+def fmt_bytes(b):
+    for unit, d in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6)):
+        if b >= d:
+            return f"{b / d:.2f}{unit}"
+    return f"{b:.0f}B"
+
+
+def roofline_md(cells, mesh="16x16"):
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | HLO dotF/dev | MODEL_FLOPS | useful | "
+           "coll B/dev | mem/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, m), r in sorted(cells.items()):
+        if m != mesh:
+            continue
+        if r.get("status") == "skipped":
+            out.append(f"| {arch} | {shape} | — | — | — | skipped "
+                       f"(full attention) | — | — | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {arch} | {shape} | ERROR | | | | | | | | |")
+            continue
+        rf = r["roofline"]
+        arg = (r["memory"]["argument_bytes"] or 0)
+        out.append(
+            f"| {arch} | {shape} | {rf['compute_s']:.4f} | "
+            f"{rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
+            f"**{rf['bottleneck']}** | {rf['hlo_flops_device']:.2e} | "
+            f"{rf['model_flops']:.2e} | {min(rf['useful_ratio'], 9.99):.2f} | "
+            f"{fmt_bytes(r['hlo_parsed']['collective_bytes'])} | "
+            f"{fmt_bytes(arg)} |")
+    return "\n".join(out)
+
+
+def dryrun_md(cells):
+    out = ["| arch | shape | mesh | status | compile s | arg bytes/dev | "
+           "temp bytes/dev | dot GF/dev | coll B/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, m), r in sorted(cells.items()):
+        if r.get("status") == "skipped":
+            out.append(f"| {arch} | {shape} | {m} | SKIP (full attn) "
+                       f"| | | | | |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {arch} | {shape} | {m} | ERROR | | | | | |")
+            continue
+        out.append(
+            f"| {arch} | {shape} | {m} | ok | {r['compile_s']:.0f} | "
+            f"{fmt_bytes(r['memory']['argument_bytes'] or 0)} | "
+            f"{fmt_bytes(r['memory']['temp_bytes'] or 0)} | "
+            f"{r['hlo_parsed']['dot_flops'] / 1e9:.0f} | "
+            f"{fmt_bytes(r['hlo_parsed']['collective_bytes'])} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    art = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+    cells = load(art)
+    mode = sys.argv[2] if len(sys.argv) > 2 else "roofline"
+    if mode == "roofline":
+        print(roofline_md(cells))
+    elif mode == "roofline2":
+        print(roofline_md(cells, mesh="2x16x16"))
+    else:
+        print(dryrun_md(cells))

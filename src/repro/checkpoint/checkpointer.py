@@ -1,0 +1,135 @@
+"""Checkpoint/restart for elastic, preemptible training.
+
+Properties the IceCube adaptation needs (DESIGN.md §2):
+  * atomic: tmp-dir + rename; a preemption mid-save never corrupts the
+    latest checkpoint (spot instances give 30 s - 2 min warnings),
+  * async: serialization happens on a background thread off the step
+    critical path (``Checkpointer.save_async``),
+  * reshape-on-restore: arrays are stored sharding-agnostically (full
+    logical arrays), so a run restarted on a different pod count just
+    device_puts them with the new shardings (core/elastic.py),
+  * bounded retention: keep the last K checkpoints.
+
+Format: one .npz per tree (params/opt), leaves keyed by '/'-joined tree
+path, + manifest.json {step, wall_time, tree_hash}.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":      # npz has no native bf16
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _unflatten_into(struct, flat):
+    def pick(path, leaf):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = flat[key].reshape(leaf.shape)
+        if arr.dtype != leaf.dtype:           # bf16 round-trips via f32
+            arr = np.asarray(jax.numpy.asarray(arr).astype(leaf.dtype))
+        return arr
+    return jax.tree_util.tree_map_with_path(pick, struct)
+
+
+def save(ckpt_dir, step, trees: dict):
+    """trees: {"params": ..., "opt": ...}; blocking, atomic."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp-{step}-{os.getpid()}")
+    os.makedirs(tmp, exist_ok=True)
+    for name, tree in trees.items():
+        np.savez(os.path.join(tmp, f"{name}.npz"), **_flatten(tree))
+    manifest = {"step": int(step), "wall_time": time.time(),
+                "trees": sorted(trees)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    final = os.path.join(ckpt_dir, f"step_{int(step):010d}")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir):
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and \
+                os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+            steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir, structs: dict, step=None):
+    """structs: {"params": abstract/concrete tree, ...} -> same trees filled
+    with stored numpy values (host); caller device_puts with its shardings.
+    Returns (step, trees)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{int(step):010d}")
+    out = {}
+    for name, struct in structs.items():
+        with np.load(os.path.join(d, f"{name}.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        out[name] = _unflatten_into(struct, flat)
+    return step, out
+
+
+class Checkpointer:
+    """Async checkpointing with retention. ``save_async`` snapshots to host
+    (device_get) synchronously — cheap — and serializes on a worker thread."""
+
+    def __init__(self, ckpt_dir, keep=3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread = None
+        self.saved_steps = []
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        for s in self.saved_steps[:-self.keep]:
+            p = os.path.join(self.ckpt_dir, f"step_{int(s):010d}")
+            if os.path.exists(p):
+                shutil.rmtree(p)
+        self.saved_steps = self.saved_steps[-self.keep:]
+
+    def save_async(self, step, trees: dict):
+        self.wait()
+        host_trees = {k: jax.device_get(v) for k, v in trees.items()}
+
+        def work():
+            save(self.ckpt_dir, step, host_trees)
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        self.saved_steps.append(step)
+        self._gc()
+
+    def save_blocking(self, step, trees: dict):
+        self.wait()
+        path = save(self.ckpt_dir, step,
+                    {k: jax.device_get(v) for k, v in trees.items()})
+        self.saved_steps.append(step)
+        self._gc()
+        return path

@@ -1,0 +1,20 @@
+"""The paper's contribution (control plane) as composable modules.
+
+provider     — cloud catalogs: capacity, spot pricing, preemption, NAT quirks
+provisioner  — VMSS/InstanceGroups/SpotFleet-style group provisioning
+budget       — CloudBank analogue: ledger, spend-rate, threshold alerts
+overlay      — OSG CE + glideinWMS analogue: pilots, leases, matchmaking
+simulator    — discrete-event cloud simulator binding the above
+campaign     — the paper's staged-ramp / outage / budget-cap controller
+elastic      — pod-pool -> mesh manager for synchronous SPMD training (TPU)
+straggler    — speculative re-execution + slow-pod eviction
+"""
+from repro.core.budget import BudgetLedger  # noqa: F401
+from repro.core.campaign import (CampaignController, PAPER_RAMP,  # noqa: F401
+                                 replay_paper_campaign)
+from repro.core.elastic import ElasticRunner, PodPool  # noqa: F401
+from repro.core.overlay import ComputeElement, Job, Pilot  # noqa: F401
+from repro.core.provider import t4_catalog, tpu_catalog  # noqa: F401
+from repro.core.provisioner import MultiCloudProvisioner  # noqa: F401
+from repro.core.simulator import CloudSimulator, SimConfig  # noqa: F401
+from repro.core.straggler import SpeculativeScheduler, StragglerMonitor  # noqa: F401

@@ -1,0 +1,114 @@
+"""The paper's two-week campaign as a reusable controller (§IV/§V):
+
+  * initial small-scale validation in every region,
+  * staged ramp 400 -> 900 -> 1.2k -> 1.6k -> 2k GPUs, sustaining each step
+    "for extended periods of time to validate the stability of the system",
+  * the CE-outage incident at 2k GPUs: total backend collapse -> instant
+    fleet-wide deprovision ("minimal financial loss") -> ~2 h outage ->
+    resume at 1k GPUs,
+  * budget-driven downscale: resume at only 1k because "at that point in
+    time we had only about 20% of the budget left" — wired to the
+    CloudBank 20 %-remaining threshold alert.
+
+``replay_paper_campaign()`` reproduces the exercise end-to-end and returns
+simulated totals for the benchmark to compare with the published ones
+(~$58k, ~16k GPU-days, ~3.1 fp32 EFLOP-hours, a >=2x boost of IceCube's
+GPU wall-hours).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.core.provider import t4_catalog
+from repro.core.simulator import CloudSimulator, SimConfig
+
+
+@dataclass
+class RampStage:
+    start_h: float
+    target: int
+
+
+PAPER_RAMP: Tuple[RampStage, ...] = (
+    RampStage(0.0, 40),        # small-scale validation in each region
+    RampStage(12.0, 400),
+    RampStage(48.0, 900),
+    RampStage(96.0, 1200),
+    RampStage(144.0, 1600),
+    RampStage(192.0, 2000),    # sustained at 2k ...
+)
+OUTAGE_AT_H = 252.0            # ... until the CE host's network outage (d10.5)
+OUTAGE_DURATION_H = 2.0
+POST_OUTAGE_TARGET = 1000      # resume lower: ~20% budget left
+
+
+@dataclass
+class CampaignController:
+    """Budget-aware staged-ramp controller driving a CloudSimulator."""
+    sim: CloudSimulator
+    ramp: Tuple[RampStage, ...] = PAPER_RAMP
+    budget_floor_fraction: float = 0.2
+    downscale_target: int = POST_OUTAGE_TARGET
+    log: List[str] = field(default_factory=list)
+    _budget_capped: bool = False
+
+    def __post_init__(self):
+        self.sim.ledger.on_threshold(self._on_budget_alert)
+        for stage in self.ramp:
+            self.sim.at(stage.start_h, self._make_setter(stage.target))
+
+    def _make_setter(self, target):
+        def set_target(sim):
+            t = min(target, self.downscale_target) if self._budget_capped \
+                else target
+            sim.prov.scale_to(t, sim.now)
+            self.log.append(f"t={sim.now:6.1f}h scale_to({t})")
+        return set_target
+
+    def _on_budget_alert(self, frac, remaining, rate_per_day):
+        self.log.append(
+            f"BUDGET ALERT: {frac:.0%} remaining (${remaining:,.0f}), "
+            f"rate ${rate_per_day:,.0f}/day")
+        if frac <= self.budget_floor_fraction and not self._budget_capped:
+            self._budget_capped = True
+            self.sim.at(self.sim.now, lambda sim: sim.prov.scale_to(
+                self.downscale_target, sim.now))
+            self.log.append(
+                f"t={self.sim.now:6.1f}h budget floor hit -> "
+                f"cap fleet at {self.downscale_target}")
+
+    def inject_ce_outage(self, at_h: float = OUTAGE_AT_H,
+                         duration_h: float = OUTAGE_DURATION_H,
+                         resume_target: int = POST_OUTAGE_TARGET):
+        def outage(sim):
+            sim.ce.outage = True
+            sim.prov.deprovision_all(sim.now)
+            self.log.append(f"t={sim.now:6.1f}h CE OUTAGE -> deprovision all")
+
+        def recover(sim):
+            sim.ce.outage = False
+            sim.prov.scale_to(resume_target, sim.now)
+            self.log.append(
+                f"t={sim.now:6.1f}h CE recovered -> resume at "
+                f"{resume_target}")
+        self.sim.at(at_h, outage)
+        self.sim.at(at_h + duration_h, recover)
+
+
+def replay_paper_campaign(budget: float = 58000.0, seed: int = 2021,
+                          sim_cfg: Optional[SimConfig] = None):
+    """Run the full two-week exercise; returns (results, controller)."""
+    cfg = sim_cfg or SimConfig(seed=seed)
+    sim = CloudSimulator(t4_catalog(), budget, cfg)
+    ctl = CampaignController(sim)
+    ctl.inject_ce_outage()
+    sim.run_until(cfg.duration_h)
+    return sim.results(), ctl
+
+
+# IceCube baseline for the "approximate doubling" claim (abstract/Fig 2):
+# cloud GPU-hours ~ IceCube's contemporaneous non-cloud GPU-hours. Paper §I
+# gives 8M GPU-h/yr on OSG (IceCube >80%); with dedicated non-OSG resources
+# IceCube's effective baseline is ~9M GPU-h/yr -> ~350k per 2 weeks.
+ICECUBE_BASELINE_GPUH_PER_2W = 9e6 * (14 / 365.0)

@@ -1,0 +1,126 @@
+"""Elastic pod-pool -> mesh management: the TPU adaptation of the paper's
+elastic VM fleet (DESIGN.md §2).
+
+The provisioning unit is a pod slice. Preemption granularity ==
+provisioning granularity == the "pod" mesh axis, so synchronous SPMD
+training survives fleet changes by:
+
+  1. PodPool: membership ledger fed by the provisioner/pilots (join, leave,
+     preemption-notice) with listener callbacks,
+  2. ElasticRunner: on membership change — drain (finish current step),
+     checkpoint (async copy already on host most of the time), rebuild the
+     mesh for the new pod count, re-shard state (device_put with new
+     shardings; checkpoints are sharding-agnostic), re-jit (compile cache
+     keyed by pod count), resume at the same global batch size.
+
+Goodput accounting mirrors the paper's operational stance: preempted work
+since the last checkpoint is lost, everything else is durable.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+from repro import sharding as sh
+from repro.launch.mesh import make_elastic_mesh
+
+
+@dataclass
+class PodPool:
+    """Membership of healthy pods (slices). Thread-free; callers drive it."""
+    min_pods: int = 1
+    max_pods: int = 64
+    pods: Dict[str, float] = field(default_factory=dict)  # id -> joined_at
+    draining: Dict[str, float] = field(default_factory=dict)
+    listeners: List[Callable[[int], None]] = field(default_factory=list)
+
+    def on_change(self, cb: Callable[[int], None]):
+        self.listeners.append(cb)
+
+    def _notify(self):
+        n = self.size
+        for cb in self.listeners:
+            cb(n)
+
+    @property
+    def size(self) -> int:
+        return len(self.pods)
+
+    def join(self, pod_id: str, now: float = 0.0):
+        if pod_id not in self.pods and \
+                len(self.pods) < self.max_pods:
+            self.pods[pod_id] = now
+            self._notify()
+
+    def preemption_notice(self, pod_id: str, now: float = 0.0):
+        """Cloud 30s-2min warning: mark draining; runner checkpoints before
+        the pod disappears."""
+        if pod_id in self.pods:
+            self.draining[pod_id] = now
+
+    def leave(self, pod_id: str, now: float = 0.0):
+        self.draining.pop(pod_id, None)
+        if self.pods.pop(pod_id, None) is not None:
+            self._notify()
+
+
+class ElasticRunner:
+    """Owns sharded train state across pod-count changes."""
+
+    def __init__(self, step_builder, params_host, opt_host, *,
+                 pod_shape=(16, 16), checkpointer=None):
+        """step_builder(mesh) -> jitted (params, opt, batch) -> (p', o', m).
+        params_host/opt_host: host (numpy) trees — the sharding-agnostic
+        source of truth at rebuild time."""
+        self.step_builder = step_builder
+        self.pod_shape = pod_shape
+        self.checkpointer = checkpointer
+        self._host = {"params": params_host, "opt": opt_host}
+        self._jit_cache = {}
+        self.mesh = None
+        self.params = None
+        self.opt = None
+        self.n_pods = 0
+        self.rebuilds = 0
+        self.lost_steps = 0
+
+    # -- (re)build ------------------------------------------------------------
+    def ensure(self, n_pods: int):
+        if n_pods == self.n_pods and self.mesh is not None:
+            return False
+        t0 = time.time()
+        if self.params is not None:
+            # drain: pull current state to host before the fleet changes
+            self._host = {"params": jax.device_get(self.params),
+                          "opt": jax.device_get(self.opt)}
+        self.mesh = make_elastic_mesh(n_pods, pod_shape=self.pod_shape)
+        psh = sh.param_shardings(self._host["params"], self.mesh)
+        osh = sh.opt_shardings(self._host["opt"], self.mesh)
+        self.params = jax.device_put(self._host["params"], psh)
+        self.opt = jax.device_put(self._host["opt"], osh)
+        if n_pods not in self._jit_cache:
+            self._jit_cache[n_pods] = self.step_builder(self.mesh)
+        self.n_pods = n_pods
+        self.rebuilds += 1
+        self.rebuild_s = time.time() - t0
+        return True
+
+    def step(self, batch):
+        fn = self._jit_cache[self.n_pods]
+        self.params, self.opt, metrics = fn(self.params, self.opt, batch)
+        return metrics
+
+    def checkpoint(self, step):
+        if self.checkpointer is not None:
+            self.checkpointer.save_async(
+                step, {"params": self.params, "opt": self.opt})
+
+    def handle_preemption(self, step):
+        """Preemption notice: durable state NOW (blocking — the pod may
+        vanish in 30 s)."""
+        if self.checkpointer is not None:
+            self.checkpointer.save_blocking(
+                step, {"params": self.params, "opt": self.opt})

@@ -1,0 +1,74 @@
+"""Straggler detection & mitigation.
+
+Two consumers:
+  * the job overlay (IceCube-style independent tasks): speculative
+    re-execution — if a job's elapsed time exceeds ``spec_factor`` x the
+    running median of completed jobs, clone it onto an idle pilot and let
+    the first copy win (classic backup tasks),
+  * synchronous training (the TPU adaptation): per-pod step-time EWMA; a pod
+    persistently slower than ``evict_factor`` x the fleet median is evicted
+    from the PodPool (elastic shrink beats a permanently slow step, since
+    SPMD speed == slowest pod).
+"""
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class SpeculativeScheduler:
+    spec_factor: float = 2.0
+    min_samples: int = 5
+    completed_times: List[float] = field(default_factory=list)
+    speculated: int = 0
+
+    def record_completion(self, wall_h: float):
+        self.completed_times.append(wall_h)
+
+    def should_speculate(self, elapsed_h: float) -> bool:
+        if len(self.completed_times) < self.min_samples:
+            return False
+        med = statistics.median(self.completed_times)
+        if elapsed_h > self.spec_factor * med:
+            self.speculated += 1
+            return True
+        return False
+
+
+@dataclass
+class StragglerMonitor:
+    """Per-pod step-time EWMA for synchronous training."""
+    evict_factor: float = 1.5
+    ewma_alpha: float = 0.2
+    min_steps: int = 10
+    times: Dict[str, float] = field(default_factory=dict)   # pod -> ewma
+    counts: Dict[str, int] = field(default_factory=dict)
+    evicted: List[str] = field(default_factory=list)
+
+    def record(self, pod_id: str, step_s: float):
+        prev = self.times.get(pod_id)
+        self.times[pod_id] = step_s if prev is None else \
+            (1 - self.ewma_alpha) * prev + self.ewma_alpha * step_s
+        self.counts[pod_id] = self.counts.get(pod_id, 0) + 1
+
+    def fleet_median(self) -> Optional[float]:
+        vals = [v for k, v in self.times.items() if k not in self.evicted]
+        return statistics.median(vals) if vals else None
+
+    def stragglers(self) -> List[str]:
+        med = self.fleet_median()
+        if med is None:
+            return []
+        out = []
+        for pod, t in self.times.items():
+            if pod in self.evicted or self.counts.get(pod, 0) < self.min_steps:
+                continue
+            if t > self.evict_factor * med:
+                out.append(pod)
+        return out
+
+    def evict(self, pod_id: str):
+        if pod_id not in self.evicted:
+            self.evicted.append(pod_id)

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the data-plane hot spots, each with a pure-jnp
+oracle (ref.py) and a layout-adapting jit wrapper (ops.py). Validated with
+interpret=True on CPU; TPU is the compile target (explicit BlockSpec VMEM
+tiling, MXU-aligned blocks)."""

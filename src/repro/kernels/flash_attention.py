@@ -1,0 +1,111 @@
+"""Flash attention Pallas TPU kernel: online-softmax over KV tiles in VMEM.
+
+TPU adaptation notes (vs. the CUDA flash-attention algorithm):
+  * tiles are MXU-aligned (block_q x block_k = 128 x 128 by default; head
+    dim padded to a multiple of 128 by ops.py),
+  * the KV axis is the innermost grid dimension — TPU grids execute
+    sequentially per core, so the (acc, m, l) online-softmax state lives in
+    VMEM scratch and carries across KV steps (no atomics / shared-memory
+    reductions as on GPU),
+  * causal masking skips fully-masked KV tiles via pl.when (block-level
+    early exit, the TPU analogue of warp-level skipping).
+
+Layout: q (BHG, Sq, D), k/v (BKV, Skv, D) with BHG = B*Hkv*G (GQA groups
+flattened); the kv batch index is bhg // G via BlockSpec index_map.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale, causal, block_q, block_k, kv_len, q_offset):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q + q_offset          # absolute q positions
+    k_start = ki * block_k
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32) * scale         # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < kv_len
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            mask &= qpos >= kpos
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                              # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                           # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip KV tiles strictly above the diagonal
+        pl.when(k_start <= q_start + block_q - 1)(compute)
+    else:
+        compute()
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal, kv_len=None, scale=None,
+                           q_offset=0, block_q=128, block_k=128,
+                           interpret=False):
+    """q: (BHG, Sq, D), k/v: (BKV, Skv, D), BHG = BKV * G. Sq % block_q ==
+    Skv % block_k == 0 (ops.py pads). kv_len masks padded KV positions;
+    scale defaults to D**-0.5 (pass the true-head-dim scale when padded)."""
+    BHG, Sq, D = q.shape
+    BKV, Skv, _ = k.shape
+    G = BHG // BKV
+    grid = (BHG, Sq // block_q, Skv // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale if scale is not None else D ** -0.5,
+        causal=causal, block_q=block_q, block_k=block_k,
+        kv_len=kv_len if kv_len is not None else Skv, q_offset=q_offset)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, qi, ki: (b // G, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, qi, ki: (b // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BHG, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,99 @@
+"""Chunkwise-parallel mLSTM Pallas TPU kernel (xLSTM matrix memory).
+
+TPU adaptation of the TFLA/chunkwise形 GPU kernels: the (dqk, dv) matrix
+state + (dqk,) normalizer + scalar stabilizer live in VMEM scratch and
+carry across the sequential chunk grid dim; within a chunk the math is two
+MXU matmuls (S_intra = Q K^T masked-decayed, then @ V) plus VPU cumsums —
+numerically identical to the stabilized sequential recurrence (see
+models/xlstm.py for the derivation, ref.py for the oracle).
+
+Grid: (B*H, S/block_s). Layout: (BH, S, d) per q/k/v, gates (BH, S, 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, h_ref,
+                  c_ref, n_ref, m_ref, *, block_s, dqk):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (bs, dqk)
+    k = k_ref[0].astype(jnp.float32) * (dqk ** -0.5)
+    v = v_ref[0].astype(jnp.float32)                     # (bs, dv)
+    logi = li_ref[0, :, 0].astype(jnp.float32)           # (bs,)
+    logf = lf_ref[0, :, 0].astype(jnp.float32)
+
+    m0 = m_ref[0, 0]
+    f_cum = jnp.cumsum(logf)                             # (bs,)
+    a = logi - f_cum
+    m_run = jnp.maximum(m0, jax.lax.cummax(a, axis=0))   # (bs,)
+    m_new = f_cum + m_run
+
+    w_state = jnp.exp(m0 - m_run)                        # (bs,)
+    dmask = jnp.exp(a[None, :] - m_run[:, None])         # (bs, bs)
+    bs = q.shape[0]
+    row = jax.lax.broadcasted_iota(jnp.int32, (bs, bs), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (bs, bs), 1)
+    dmask = jnp.where(row >= col, dmask, 0.0)
+
+    s_intra = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32) * dmask
+    num = (jax.lax.dot_general(s_intra, v, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+           + w_state[:, None] * jax.lax.dot_general(
+               q, c_ref[...], (((1,), (0,)), ((), ())),
+               preferred_element_type=jnp.float32))
+    nvec = (w_state[:, None] * n_ref[0][None, :]
+            + jax.lax.dot_general(dmask, k, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32))
+    den = jnp.maximum(jnp.abs((nvec * q).sum(1)), jnp.exp(-m_new))
+    h_ref[0] = (num / den[:, None]).astype(h_ref.dtype)
+
+    # end-of-chunk state
+    mc = m_run[-1]
+    w_j = jnp.exp(a - mc)                                # (bs,)
+    c_ref[...] = jnp.exp(m0 - mc) * c_ref[...] + jax.lax.dot_general(
+        k * w_j[:, None], v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_ref[0] = jnp.exp(m0 - mc) * n_ref[0] + (k * w_j[:, None]).sum(0)
+    m_ref[0, 0] = m_new[-1]
+
+
+def mlstm_chunk_kernel(q, k, v, logi, logf, *, block_s=128, interpret=False):
+    """q/k: (BH, S, dqk); v: (BH, S, dv); logi/logf: (BH, S, 1).
+    Returns h (BH, S, dv)."""
+    BH, S, dqk = q.shape
+    dv = v.shape[2]
+    grid = (BH, S // block_s)
+    kernel = functools.partial(_mlstm_kernel, block_s=block_s, dqk=dqk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, dqk), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, block_s, dqk), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, block_s, dv), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, block_s, 1), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, block_s, 1), lambda b, s: (b, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, dv), lambda b, s: (b, s, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dqk, dv), jnp.float32),
+            pltpu.VMEM((1, dqk), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, logi, logf)

@@ -1,0 +1,108 @@
+"""jit'd public wrappers around the Pallas kernels: model-layout adapters,
+MXU-alignment padding, and interpret-mode fallback on CPU.
+
+``flash_attention`` plugs into models/attention.py via the flash_fn hook
+(RunConfig.attention_impl == "pallas"); the others are drop-in replacements
+for the reference einsums/scans at the same call sites.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.mamba_scan import mamba_scan_kernel
+from repro.kernels.mlstm_chunk import mlstm_chunk_kernel
+from repro.kernels.moe_gmm import moe_gmm_kernel
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
+                    interpret=None):
+    """Model layout: q (B,Sq,H,D), k/v (B,Skv,Hkv,D) -> (B,Sq,H,D)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = D ** -0.5
+    qk = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kk = k.transpose(0, 2, 1, 3).reshape(B * Hkv, -1, D)
+    vv = v.transpose(0, 2, 1, 3).reshape(B * Hkv, -1, D)
+    Skv = kk.shape[1]
+    qk, _ = _pad_to(qk, 2, 128)
+    kk, _ = _pad_to(kk, 2, 128)
+    vv, _ = _pad_to(vv, 2, 128)
+    bq = min(block_q, max(8, Sq))
+    bk = min(block_k, max(8, Skv))
+    qk, pq = _pad_to(qk, 1, bq)
+    kk, _ = _pad_to(kk, 1, bk)
+    vv, _ = _pad_to(vv, 1, bk)
+    o = flash_attention_kernel(qk, kk, vv, causal=causal, kv_len=Skv,
+                               scale=scale, block_q=bq, block_k=bk,
+                               interpret=interpret)
+    o = o[:, :Sq, :D].reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+    return o
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_s",
+                                             "interpret"))
+def mamba_scan(xc, dt, bm, cm, a, *, block_d=128, block_s=64,
+               interpret=None):
+    """xc/dt: (B,S,di); bm/cm: (B,S,N); a: (di,N) -> y (B,S,di)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, S, di = xc.shape
+    bd = min(block_d, di)
+    bs = min(block_s, S)
+    if di % bd or S % bs:
+        xc, _ = _pad_to(xc, 2, bd)
+        dt, _ = _pad_to(dt, 2, bd)
+        a, _ = _pad_to(a, 0, bd)
+        xc, _ = _pad_to(xc, 1, bs)
+        dt, _ = _pad_to(dt, 1, bs)
+        bm, _ = _pad_to(bm, 1, bs)
+        cm, _ = _pad_to(cm, 1, bs)
+    y = mamba_scan_kernel(xc, dt, bm, cm, a, block_d=bd, block_s=bs,
+                          interpret=interpret)
+    return y[:, :S, :di]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def mlstm_chunk(q, k, v, logi, logf, *, block_s=128, interpret=None):
+    """q/k: (BH,S,dqk); v: (BH,S,dv); gates (BH,S,1) -> h (BH,S,dv)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    S = q.shape[1]
+    bs = min(block_s, S)
+    assert S % bs == 0, "pad sequence to a chunk multiple upstream"
+    return mlstm_chunk_kernel(q, k, v, logi, logf, block_s=bs,
+                              interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_k",
+                                             "interpret"))
+def moe_gmm(x, w, *, block_c=128, block_f=128, block_k=128, interpret=None):
+    """x: (E,C,D) @ w: (E,D,F) -> (E,C,F), fp32 accumulation."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    E, C, D = x.shape
+    F = w.shape[2]
+    bc, bf, bk = min(block_c, C), min(block_f, F), min(block_k, D)
+    xp, _ = _pad_to(_pad_to(x, 1, bc)[0], 2, bk)
+    wp, _ = _pad_to(_pad_to(w, 1, bk)[0], 2, bf)
+    o = moe_gmm_kernel(xp, wp, block_c=bc, block_f=bf, block_k=bk,
+                       interpret=interpret)
+    return o[:, :C, :F]

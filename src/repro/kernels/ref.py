@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal, kv_len=None, scale=None,
+                        q_offset=0):
+    """q: (BHG, Sq, D); k/v: (BKV, Skv, D). Plain softmax attention."""
+    BHG, Sq, D = q.shape
+    BKV, Skv, _ = k.shape
+    G = BHG // BKV
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(BKV, G, Sq, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bgqd,bkd->bgqk", qg, k.astype(jnp.float32))
+    kpos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if kv_len is not None:
+        mask &= (kpos < kv_len)[None, :]
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)
+        mask &= qpos[:, None] >= kpos[None, :]
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgqk,bkd->bgqd", p, v.astype(jnp.float32))
+    return o.reshape(BHG, Sq, D).astype(q.dtype)
+
+
+def mamba_scan_ref(xc, dt, bm, cm, a):
+    """Sequential selective scan. Shapes as mamba_scan_kernel."""
+    B, S, di = xc.shape
+
+    def step(h, inputs):
+        xc_t, dt_t, b_t, c_t = inputs
+        a_bar = jnp.exp(dt_t[:, :, None] * a[None])          # (B,di,N)
+        h = a_bar * h + (dt_t * xc_t)[:, :, None] * b_t[:, None, :]
+        y = (h * c_t[:, None, :]).sum(-1)                    # (B,di)
+        return h, y
+
+    h0 = jnp.zeros((B, di, a.shape[1]), jnp.float32)
+    xs = (jnp.moveaxis(xc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(bm, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(cm, 1, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(xc.dtype)           # (B,S,di)
+
+
+def mlstm_ref(q, k, v, logi, logf):
+    """Exact stabilized sequential mLSTM. q/k: (BH,S,dqk); v: (BH,S,dv);
+    logi/logf: (BH,S,1). Returns (BH,S,dv)."""
+    BH, S, dqk = q.shape
+    dv = v.shape[2]
+    kf = k.astype(jnp.float32) * (dqk ** -0.5)
+
+    def step(carry, inputs):
+        C, n, m = carry
+        q_t, k_t, v_t, li_t, lf_t = inputs
+        m1 = jnp.maximum(lf_t + m, li_t)                     # (BH,)
+        fp = jnp.exp(lf_t + m - m1)
+        ip = jnp.exp(li_t - m1)
+        C = fp[:, None, None] * C + ip[:, None, None] * \
+            jnp.einsum("bd,be->bde", k_t, v_t)
+        n = fp[:, None] * n + ip[:, None] * k_t
+        num = jnp.einsum("bd,bde->be", q_t, C)
+        den = jnp.maximum(jnp.abs((n * q_t).sum(-1)), jnp.exp(-m1))
+        return (C, n, m1), num / den[:, None]
+
+    carry = (jnp.zeros((BH, dqk, dv), jnp.float32),
+             jnp.zeros((BH, dqk), jnp.float32),
+             jnp.zeros((BH,), jnp.float32))
+    xs = (jnp.moveaxis(q.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(kf, 1, 0),
+          jnp.moveaxis(v.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(logi[..., 0].astype(jnp.float32), 1, 0),
+          jnp.moveaxis(logf[..., 0].astype(jnp.float32), 1, 0))
+    _, hs = jax.lax.scan(step, carry, xs)
+    return jnp.moveaxis(hs, 0, 1).astype(q.dtype)
+
+
+def moe_gmm_ref(x, w):
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

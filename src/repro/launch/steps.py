@@ -1,0 +1,151 @@
+"""Step builders + abstract input specs for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation); the
+dry-run lowers against them, the trainer/server allocate real buffers with
+the same shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import model as M
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+I32 = jnp.int32
+
+
+# --------------------------------------------------------------------------
+# abstract structures (no allocation)
+# --------------------------------------------------------------------------
+
+def params_struct(cfg: ModelConfig, dtype=BF16):
+    """Abstract param tree with float leaves cast to ``dtype``."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    tree = jax.eval_shape(functools.partial(M.init_params, cfg), key)
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(x.shape, dtype)
+        return x
+    return jax.tree.map(cast, tree)
+
+
+def opt_struct(cfg: ModelConfig, pstruct=None, dtype=BF16):
+    pstruct = pstruct or params_struct(cfg, dtype)
+    return jax.eval_shape(adamw_init, pstruct)
+
+
+def cache_struct(cfg: ModelConfig, batch, max_len, dtype=BF16):
+    return jax.eval_shape(
+        functools.partial(M.init_cache, cfg, batch, max_len, dtype))
+
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.frontend is not None:
+        return seq_len - cfg.frontend.num_patches
+    return seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=BF16):
+    """Model inputs for a cell. train/prefill: token batch (+ stub frontend
+    embeddings); decode: (caches, token, pos)."""
+    B, S = shape.global_batch, shape.seq_len
+    St = _text_len(cfg, S)
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": jax.ShapeDtypeStruct((B, St), I32)}
+        if shape.kind == "train":
+            batch["targets"] = jax.ShapeDtypeStruct((B, St), I32)
+        if cfg.is_encdec:
+            batch["enc_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder.n_frames, cfg.d_model), dtype)
+        if cfg.frontend is not None:
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend.num_patches, cfg.d_model), dtype)
+        return batch
+    # decode: one new token against a seq_len cache
+    return {"caches": cache_struct(cfg, B, S, dtype),
+            "token": jax.ShapeDtypeStruct((B, 1), I32),
+            "pos": jax.ShapeDtypeStruct((), I32)}
+
+
+# --------------------------------------------------------------------------
+# step functions
+# --------------------------------------------------------------------------
+
+def _resolve_flash(run: RunConfig, flash_fn):
+    if flash_fn is None and run.attention_impl == "pallas":
+        from repro.kernels import ops as kops
+        flash_fn = kops.flash_attention
+    return flash_fn
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig, flash_fn=None):
+    dt = jnp.dtype(run.compute_dtype)
+    accum = max(1, run.shape.grad_accum)
+    flash_fn = _resolve_flash(run, flash_fn)
+
+    def loss_fn(params, mb):
+        loss, parts = M.forward_loss(params, cfg, mb, compute_dtype=dt,
+                                     run_cfg=run, flash_fn=flash_fn)
+        return loss, parts
+
+    def train_step(params, opt_state, batch):
+        lr = cosine_schedule(opt_state["step"],
+                             base_lr=run.learning_rate)
+        if accum == 1:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l), None
+
+            (grads, loss), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+
+        new_params, new_opt, om = adamw_update(
+            grads, opt_state, params, lr=lr, beta1=run.beta1,
+            beta2=run.beta2, weight_decay=run.weight_decay,
+            grad_clip=run.grad_clip)
+        return new_params, new_opt, {"loss": loss, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, run: RunConfig):
+    dt = jnp.dtype(run.compute_dtype)
+
+    def prefill_step(params, batch):
+        logits, caches = M.prefill(params, cfg, batch, compute_dtype=dt,
+                                   q_chunk=run.attention_q_chunk)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, run: RunConfig):
+    dt = jnp.dtype(run.compute_dtype)
+
+    def serve_step(params, caches, token, pos):
+        return M.decode_step(params, cfg, caches, token, pos,
+                             compute_dtype=dt)
+
+    return serve_step

@@ -1,0 +1,154 @@
+"""Training launcher: elastic, preemptible, checkpointed.
+
+CPU-runnable end-to-end with --reduced (examples/ use it); on a real fleet
+the same loop runs per-controller with the production mesh. Wires together:
+data pipeline -> jit(train_step) -> async checkpoints -> PodPool events
+(join/leave/preemption-notice) -> straggler monitor.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-9b --reduced \
+        --steps 50 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as sh
+from repro.checkpoint import Checkpointer, latest_step, restore
+from repro.configs import RunConfig, SHAPES, ShapeConfig, get_config, get_reduced
+from repro.core.straggler import StragglerMonitor
+from repro.data import SyntheticPipeline
+from repro.launch import steps as st
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_params
+from repro.optim import adamw_init
+from repro.sharding_ctx import use_mesh
+
+
+def build(arch, *, reduced=True, shape_name="train_4k", steps_override=None,
+          batch=None, seq=None, compute_dtype="float32", grad_accum=1):
+    cfg = get_reduced(arch) if reduced else get_config(arch)
+    base = SHAPES[shape_name]
+    shape = ShapeConfig("custom", seq or (64 if reduced else base.seq_len),
+                        batch or (4 if reduced else base.global_batch),
+                        "train", grad_accum=grad_accum)
+    run = RunConfig(model=cfg, shape=shape, compute_dtype=compute_dtype,
+                    remat=not reduced)
+    return cfg, shape, run
+
+
+class Trainer:
+    def __init__(self, cfg, shape, run, *, mesh=None, ckpt_dir=None,
+                 seed=0, keep=3):
+        self.cfg, self.shape, self.run = cfg, shape, run
+        self.mesh = mesh or make_host_mesh((len(jax.devices()), 1))
+        self.pipe = SyntheticPipeline(cfg, shape, seed=seed, mesh=self.mesh)
+        self.ckpt = Checkpointer(ckpt_dir, keep=keep) if ckpt_dir else None
+        self.monitor = StragglerMonitor()
+        self._preempt_requested = False
+        self.step_num = 0
+
+        with use_mesh(self.mesh):
+            key = jax.random.PRNGKey(seed)
+            params = init_params(cfg, key)
+            if run.compute_dtype != "float32":
+                params = jax.tree.map(
+                    lambda x: x.astype(jnp.dtype(run.compute_dtype))
+                    if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+            opt = adamw_init(params)
+            psh = sh.param_shardings(params, self.mesh)
+            osh = sh.opt_shardings(opt, self.mesh)
+            self.params = jax.device_put(params, psh)
+            self.opt = jax.device_put(opt, osh)
+            fn = st.make_train_step(cfg, run)
+            self._step = jax.jit(fn, in_shardings=(psh, osh, None),
+                                 out_shardings=(psh, osh, None),
+                                 donate_argnums=(0, 1))
+        if ckpt_dir and latest_step(ckpt_dir) is not None:
+            self.restore(ckpt_dir)
+
+    # -- preemption ------------------------------------------------------------
+    def install_signal_handlers(self):
+        """SIGTERM = the cloud's preemption notice: drain + durable state."""
+        def handler(signum, frame):
+            self._preempt_requested = True
+        signal.signal(signal.SIGTERM, handler)
+
+    def restore(self, ckpt_dir):
+        step, trees = restore(ckpt_dir, {"params": self.params,
+                                         "opt": self.opt})
+        with use_mesh(self.mesh):
+            self.params = jax.device_put(
+                trees["params"], sh.param_shardings(trees["params"],
+                                                    self.mesh))
+            self.opt = jax.device_put(
+                trees["opt"], sh.opt_shardings(trees["opt"], self.mesh))
+        self.step_num = step
+        return step
+
+    # -- loop --------------------------------------------------------------------
+    def train(self, num_steps, *, ckpt_every=25, log_every=10, log=print):
+        losses = []
+        with use_mesh(self.mesh):
+            while self.step_num < num_steps:
+                t0 = time.time()
+                batch = self.pipe.batch(self.step_num)
+                self.params, self.opt, m = self._step(self.params, self.opt,
+                                                      batch)
+                loss = float(m["loss"])
+                if not np.isfinite(loss):
+                    raise FloatingPointError(
+                        f"non-finite loss at step {self.step_num}")
+                losses.append(loss)
+                self.step_num += 1
+                self.monitor.record("pod0", time.time() - t0)
+                if log_every and self.step_num % log_every == 0:
+                    log(f"step {self.step_num:5d} loss {loss:.4f} "
+                        f"gnorm {float(m['grad_norm']):.3f} "
+                        f"({time.time() - t0:.2f}s)")
+                if self.ckpt and self.step_num % ckpt_every == 0:
+                    self.ckpt.save_async(self.step_num,
+                                         {"params": self.params,
+                                          "opt": self.opt})
+                if self._preempt_requested:
+                    if self.ckpt:
+                        self.ckpt.save_blocking(self.step_num,
+                                                {"params": self.params,
+                                                 "opt": self.opt})
+                    log(f"preemption notice honored at step {self.step_num}")
+                    break
+        if self.ckpt:
+            self.ckpt.wait()
+        return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg, shape, run = build(args.arch, reduced=args.reduced,
+                            shape_name=args.shape, batch=args.batch,
+                            seq=args.seq)
+    tr = Trainer(cfg, shape, run, ckpt_dir=args.ckpt_dir, seed=args.seed)
+    tr.install_signal_handlers()
+    losses = tr.train(args.steps, ckpt_every=args.ckpt_every)
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}, "
+          f"{len(losses)} steps)")
+
+
+if __name__ == "__main__":
+    main()

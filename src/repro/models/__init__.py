@@ -1,0 +1,2 @@
+from repro.models.model import (decode_step, forward_loss, init_cache,  # noqa: F401
+                                init_params, param_count, prefill)

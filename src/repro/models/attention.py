@@ -1,0 +1,199 @@
+"""GQA attention with a memory-bounded chunked reference path + KV cache.
+
+The reference path (used by the dry-run; XLA:CPU cannot lower Mosaic) chunks
+the query dimension with lax.scan so 32k-token prefill never materializes a
+full (S, S) score tensor — the same working-set discipline the Pallas flash
+kernel applies at the VMEM level.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rms_head_norm
+from repro.sharding_ctx import constrain
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def init_attention(key, d_model, num_heads, num_kv_heads, head_dim,
+                   qk_norm=False):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, (d_model, num_heads, head_dim)),
+        "wk": dense_init(kk, (d_model, num_kv_heads, head_dim)),
+        "wv": dense_init(kv, (d_model, num_kv_heads, head_dim)),
+        "wo": dense_init(ko, (num_heads, head_dim, d_model),
+                         in_axis_size=num_heads * head_dim),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), jnp.float32)
+        p["k_norm"] = jnp.ones((head_dim,), jnp.float32)
+    return p
+
+
+# --------------------------------------------------------------------------
+# core scaled-dot-product with GQA grouping
+# --------------------------------------------------------------------------
+
+def _sdpa(q, k, v, mask):
+    """q: (B,Sq,H,D), k/v: (B,Skv,Hkv,D), mask: (B?,Sq,Skv) bool or None.
+    Returns (B,Sq,H,D). Softmax in fp32."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    scale = D ** -0.5
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        big_neg = jnp.finfo(jnp.float32).min
+        scores = jnp.where(mask[:, None, None, :, :], scores, big_neg)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, H, v.shape[-1])   # v dim may differ (MLA)
+
+
+def chunked_attention(q, k, v, *, q_positions, kv_positions, causal,
+                      kv_valid_len=None, q_chunk=1024, _segment=True):
+    """Query-chunked attention. Shapes as _sdpa. Positions are (Sq,)/(Skv,)
+    int32 absolute positions used for causal masking; kv_valid_len (scalar)
+    masks unwritten cache slots.
+
+    Causal self-attention is KV-*segmented* (triangular blocking): query
+    segment j only sees kv[: (j+1)*Sq/nseg], statically — cutting ~37.5 % of
+    the quadratic FLOPs XLA would spend on fully-masked blocks (the Pallas
+    flash kernel gets the full 50 % via per-block skipping)."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+
+    if (_segment and causal and Sq == Skv and kv_valid_len is None
+            and Sq % q_chunk == 0 and Sq // q_chunk >= 2):
+        nseg = min(4, Sq // q_chunk)
+        if Sq % nseg == 0:
+            qs = Sq // nseg
+            outs = []
+            for j in range(nseg):
+                kv_end = (j + 1) * qs
+                outs.append(chunked_attention(
+                    q[:, j * qs:(j + 1) * qs], k[:, :kv_end], v[:, :kv_end],
+                    q_positions=q_positions[j * qs:(j + 1) * qs],
+                    kv_positions=kv_positions[:kv_end], causal=True,
+                    q_chunk=q_chunk, _segment=False))
+            return jnp.concatenate(outs, axis=1)
+
+    def mask_for(qpos):
+        m = jnp.ones((qpos.shape[0], Skv), bool)
+        if causal:
+            m &= qpos[:, None] >= kv_positions[None, :]
+        if kv_valid_len is not None:
+            m &= (kv_positions < kv_valid_len)[None, :]
+        return jnp.broadcast_to(m[None], (B,) + m.shape)
+
+    needs_mask = causal or (kv_valid_len is not None)
+    if Sq <= q_chunk or Sq % q_chunk != 0:
+        return _sdpa(q, k, v, mask_for(q_positions) if needs_mask else None)
+
+    nc = Sq // q_chunk
+    qc = q.reshape(B, nc, q_chunk, H, D).swapaxes(0, 1)     # (nc,B,c,H,D)
+    pc = q_positions.reshape(nc, q_chunk)
+
+    # Pin batch->data, everything else replicated. Without this GSPMD is
+    # free to shard the head-dim CONTRACTION over "model" and defer the
+    # partial sum into the (B,H,c,Skv) scores — measured 342 TB/device on
+    # minicpm prefill_32k (EXPERIMENTS.md §Perf cell 1, iter 2).
+    k = constrain(k, "batch", None, None, None)
+    v = constrain(v, "batch", None, None, None)
+
+    def body(_, xs):
+        qi, pi = xs
+        qi = constrain(qi, "batch", None, None, None)
+        oi = _sdpa(qi, k, v, mask_for(pi) if needs_mask else None)
+        oi = constrain(oi, "batch", None, None, None)
+        return None, oi
+
+    _, out = jax.lax.scan(body, None, (qc, pc))
+    return out.swapaxes(0, 1).reshape(B, Sq, H, v.shape[-1])
+
+
+# --------------------------------------------------------------------------
+# block-level apply
+# --------------------------------------------------------------------------
+
+def _project_qkv(p, x, x_kv, rope_theta, q_positions, kv_positions,
+                 qk_norm, use_rope):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhe->bshe", x_kv, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhe->bshe", x_kv, p["wv"].astype(dt))
+    if qk_norm:
+        q = rms_head_norm(q, p["q_norm"])
+        k = rms_head_norm(k, p["k_norm"])
+    if use_rope:
+        q = apply_rope(q, q_positions, rope_theta)
+        k = apply_rope(k, kv_positions, rope_theta)
+    return q, k, v
+
+
+def attention_forward(p, x, *, positions, causal=True, rope_theta=1e4,
+                      use_rope=True, qk_norm=False, q_chunk=1024,
+                      x_cross=None, flash_fn=None):
+    """Full-sequence attention (train / prefill / encoder).
+    x: (B,S,D); x_cross: encoder output for cross-attention (kv source).
+    Returns (out, (k, v)) — k/v returned so prefill can seed the cache."""
+    x_kv = x if x_cross is None else x_cross
+    kv_pos = positions if x_cross is None else jnp.arange(x_kv.shape[1])
+    q, k, v = _project_qkv(p, x, x_kv, rope_theta, positions, kv_pos,
+                           qk_norm, use_rope and x_cross is None)
+    if flash_fn is not None and x_cross is None:
+        out = flash_fn(q, k, v, causal=causal)
+    else:
+        out = chunked_attention(q, k, v, q_positions=positions,
+                                kv_positions=kv_pos,
+                                causal=causal and x_cross is None,
+                                q_chunk=q_chunk)
+    dt = x.dtype
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(dt)), (k, v)
+
+
+def init_kv_cache(batch, max_len, num_kv_heads, head_dim, dtype):
+    shape = (batch, max_len, num_kv_heads, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_decode(p, x, cache, *, pos, rope_theta=1e4, use_rope=True,
+                     qk_norm=False, cross=False):
+    """One-token decode. x: (B,1,D); cache {"k","v"}: (B,Smax,Hkv,D);
+    pos: scalar int32 — index of the new token. Returns (out, new_cache)."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(dt))
+    if qk_norm:
+        q = rms_head_norm(q, p["q_norm"])
+    if use_rope and not cross:
+        q = apply_rope(q, pos[None] if pos.ndim == 0 else pos, rope_theta)
+
+    if cross:
+        k, v = cache["k"], cache["v"]          # static encoder kv
+        kv_valid = None
+        new_cache = cache
+    else:
+        k_new = jnp.einsum("bsd,dhe->bshe", x, p["wk"].astype(dt))
+        v_new = jnp.einsum("bsd,dhe->bshe", x, p["wv"].astype(dt))
+        if qk_norm:
+            k_new = rms_head_norm(k_new, p["k_norm"])
+        if use_rope:
+            k_new = apply_rope(k_new, pos[None], rope_theta)
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+        new_cache = {"k": k, "v": v}
+        kv_valid = pos + 1
+
+    kv_positions = jnp.arange(k.shape[1])
+    out = chunked_attention(q, k.astype(dt), v.astype(dt),
+                            q_positions=pos[None], kv_positions=kv_positions,
+                            causal=False, kv_valid_len=kv_valid)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(dt)), new_cache

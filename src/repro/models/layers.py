@@ -1,0 +1,149 @@
+"""Core functional layers: inits, norms, FFN variants, position encodings.
+
+All modules are (init, apply) pairs over plain dict pytrees. No framework
+dependency; everything shards via GSPMD from the top-level jit shardings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size=None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (maxtext-style)."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = 1.0 / np.sqrt(max(fan_in, 1))
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def init_norm(key, d, norm_type="rmsnorm"):
+    del key
+    if norm_type == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_norm(p, x, norm_type="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(x, scale, eps=1e-6):
+    """Per-head RMS norm over the trailing dim (Qwen3 qk-norm)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# FFN variants
+# --------------------------------------------------------------------------
+
+def init_ffn(key, d_model, d_ff, ffn_type="swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if ffn_type == "swiglu":
+        return {"wi": dense_init(k1, (d_model, d_ff)),
+                "wg": dense_init(k2, (d_model, d_ff)),
+                "wo": dense_init(k3, (d_ff, d_model), in_axis_size=d_ff)}
+    return {"wi": dense_init(k1, (d_model, d_ff)),
+            "wo": dense_init(k3, (d_ff, d_model), in_axis_size=d_ff)}
+
+
+def apply_ffn(p, x, ffn_type="swiglu"):
+    dt = x.dtype
+    if ffn_type == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(dt)) * (x @ p["wi"].astype(dt))
+    elif ffn_type == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ p["wi"].astype(dt)))
+    elif ffn_type == "gelu":
+        h = jax.nn.gelu(x @ p["wi"].astype(dt))
+    else:
+        raise ValueError(ffn_type)
+    return h @ p["wo"].astype(dt)
+
+
+# --------------------------------------------------------------------------
+# position encodings
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim, theta):
+    exponent = np.arange(0, head_dim, 2, dtype=np.float32) / head_dim
+    return 1.0 / (theta ** exponent)          # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, D) rotated pairwise; positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta))                  # (d/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs   # (...,S,d/2)
+    cos = jnp.cos(angles)[..., :, None, :]                     # (...,S,1,d/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_table(n_pos, d_model):
+    pos = np.arange(n_pos, dtype=np.float32)[:, None]
+    dim = np.arange(0, d_model, 2, dtype=np.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d_model))
+    out = np.zeros((n_pos, d_model), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+# --------------------------------------------------------------------------
+# embedding / lm head
+# --------------------------------------------------------------------------
+
+def init_embed(key, vocab_padded, d_model):
+    return {"table": embed_init(key, (vocab_padded, d_model))}
+
+
+def apply_embed(p, tokens, dtype):
+    return jnp.take(p["table"].astype(dtype), tokens, axis=0)
+
+
+def init_lm_head(key, d_model, vocab_padded):
+    return {"w": dense_init(key, (d_model, vocab_padded))}
+
+
+def apply_lm_head(p, x, vocab_size):
+    logits = x @ p["w"].astype(x.dtype)
+    vp = p["w"].shape[1]
+    if vp != vocab_size:  # mask padded vocab entries
+        mask = (jnp.arange(vp) < vocab_size)
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    return logits
+
+
+def cross_entropy_loss(logits, targets, vocab_size):
+    """targets == -1 are masked (e.g. image-patch positions)."""
+    valid = targets >= 0
+    tgt = jnp.where(valid, targets, 0)
+    logz = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), tgt[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)

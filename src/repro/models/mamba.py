@@ -1,0 +1,137 @@
+"""Mamba (S6) selective-state-space mixer — chunked reference path.
+
+The (S, d_inner, d_state) discretized tensors are never materialized for the
+full sequence: the sequence is processed in chunks with lax.scan carrying the
+(B, d_inner, d_state) SSM state, and the intra-chunk recurrence uses an
+associative scan. This bounds the working set exactly like the Pallas
+``mamba_scan`` kernel bounds VMEM. Single-token decode is a pure elementwise
+state update (the long_500k path).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def mamba_dims(d_model, mcfg):
+    d_inner = mcfg.expand * d_model
+    dt_rank = mcfg.dt_rank or -(-d_model // 16)
+    return d_inner, dt_rank
+
+
+def init_mamba(key, d_model, mcfg):
+    d_inner, dt_rank = mamba_dims(d_model, mcfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    a = jnp.tile(jnp.arange(1, mcfg.d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    dt = jnp.exp(jax.random.uniform(ks[4], (d_inner,)) *
+                 (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    return {
+        "w_in": dense_init(ks[0], (d_model, 2 * d_inner)),
+        "conv_w": dense_init(ks[1], (mcfg.d_conv, d_inner), in_axis_size=mcfg.d_conv),
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "w_x": dense_init(ks[2], (d_inner, dt_rank + 2 * mcfg.d_state)),
+        "w_dt": dense_init(ks[3], (dt_rank, d_inner)),
+        "dt_bias": jnp.log(jnp.expm1(dt)),     # softplus^-1(dt)
+        "A_log": jnp.log(a),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "w_out": dense_init(ks[5], (d_inner, d_model), in_axis_size=d_inner),
+    }
+
+
+def _causal_conv(x, w, b, carry=None):
+    """x: (B,S,di); w: (k,di) depthwise causal conv.
+    carry: (B,k-1,di) previous inputs (decode) or None (zero history)."""
+    k = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_carry = xp[:, -(k - 1):, :] if k > 1 else carry
+    return y + b, new_carry
+
+
+def _ssm_params(p, x_conv, mcfg, dt_rank):
+    """Discretize: returns (A_bar, Bx, C) for a chunk. x_conv: (B,c,di)."""
+    dt_f = x_conv.dtype
+    xdb = x_conv @ p["w_x"].astype(dt_f)                     # (B,c,R+2N)
+    dt_raw, Bm, Cm = jnp.split(xdb, [dt_rank, dt_rank + mcfg.d_state], -1)
+    dt = jax.nn.softplus(
+        (dt_raw @ p["w_dt"].astype(dt_f)).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                 # (di,N)
+    A_bar = jnp.exp(dt[..., None] * A)                       # (B,c,di,N)
+    Bx = (dt[..., None] * Bm[:, :, None, :].astype(jnp.float32)
+          * x_conv[..., None].astype(jnp.float32))           # (B,c,di,N)
+    return A_bar, Bx, Cm.astype(jnp.float32)
+
+
+def _scan_chunk(h0, A_bar, Bx):
+    """Intra-chunk associative scan. h0: (B,di,N). Returns (h_all, h_last)."""
+    def combine(a, b):
+        (a1, x1), (a2, x2) = a, b
+        return a1 * a2, x1 * a2 + x2
+    A_all, h_all = jax.lax.associative_scan(combine, (A_bar, Bx), axis=1)
+    h_all = h_all + A_all * h0[:, None]
+    return h_all, h_all[:, -1]
+
+
+def mamba_forward(p, x, mcfg, *, chunk=256, h0=None, conv0=None):
+    """x: (B,S,D) -> (y, (h_last, conv_last)). Chunked over S."""
+    B, S, D = x.shape
+    dt = x.dtype
+    d_inner, dt_rank = mamba_dims(D, mcfg)
+    xz = x @ p["w_in"].astype(dt)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_conv, conv_last = _causal_conv(x_in, p["conv_w"].astype(dt),
+                                     p["conv_b"].astype(dt), conv0)
+    x_conv = jax.nn.silu(x_conv)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, d_inner, mcfg.d_state), jnp.float32)
+
+    c = min(chunk, S)
+    if S % c:
+        c = S  # fallback: single chunk
+    nc = S // c
+    xc = x_conv.reshape(B, nc, c, d_inner).swapaxes(0, 1)    # (nc,B,c,di)
+
+    def body(h, xi):
+        A_bar, Bx, Cm = _ssm_params(p, xi, mcfg, dt_rank)
+        h_all, h_last = _scan_chunk(h, A_bar, Bx)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, Cm)           # (B,c,di)
+        return h_last, y.astype(dt)
+
+    h_last, ys = jax.lax.scan(body, h0, xc)
+    y = ys.swapaxes(0, 1).reshape(B, S, d_inner)
+    y = y + x_conv * p["D"].astype(dt)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"].astype(dt), (h_last, conv_last)
+
+
+def init_mamba_state(batch, d_model, mcfg, dtype):
+    d_inner, _ = mamba_dims(d_model, mcfg)
+    return {"h": jnp.zeros((batch, d_inner, mcfg.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, mcfg.d_conv - 1, d_inner), dtype)}
+
+
+def mamba_decode(p, x, state, mcfg):
+    """One-token step. x: (B,1,D)."""
+    B, _, D = x.shape
+    dt = x.dtype
+    d_inner, dt_rank = mamba_dims(D, mcfg)
+    xz = x @ p["w_in"].astype(dt)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_conv, conv_new = _causal_conv(x_in, p["conv_w"].astype(dt),
+                                    p["conv_b"].astype(dt), state["conv"])
+    x_conv = jax.nn.silu(x_conv)
+    A_bar, Bx, Cm = _ssm_params(p, x_conv, mcfg, dt_rank)    # (B,1,di,N)
+    h = state["h"] * A_bar[:, 0] + Bx[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None, :].astype(dt)
+    y = y + x_conv * p["D"].astype(dt)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"].astype(dt), {"h": h, "conv": conv_new}

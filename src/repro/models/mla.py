@@ -1,0 +1,109 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+Train/prefill use the naive (decompressed) form; decode uses the ABSORBED
+form against the compressed latent cache (c_kv + k_rope) — the cache is
+kv_lora + rope_dim floats per token instead of 2*H*head_dim, which is the
+MLA decode-memory win the roofline table surfaces.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_norm, apply_rope, dense_init, init_norm
+from repro.models.attention import _sdpa, chunked_attention
+from repro.sharding_ctx import constrain
+
+
+def init_mla(key, d_model, num_heads, mla):
+    ks = jax.random.split(key, 8)
+    qk_head = mla.qk_nope_head_dim + mla.qk_rope_head_dim
+    return {
+        "w_dq": dense_init(ks[0], (d_model, mla.q_lora_rank)),
+        "q_norm": init_norm(None, mla.q_lora_rank),
+        "w_uq": dense_init(ks[1], (mla.q_lora_rank, num_heads, qk_head)),
+        "w_dkv": dense_init(ks[2], (d_model, mla.kv_lora_rank)),
+        "kv_norm": init_norm(None, mla.kv_lora_rank),
+        "w_kr": dense_init(ks[3], (d_model, mla.qk_rope_head_dim)),
+        "w_uk": dense_init(ks[4], (mla.kv_lora_rank, num_heads,
+                                   mla.qk_nope_head_dim)),
+        "w_uv": dense_init(ks[5], (mla.kv_lora_rank, num_heads,
+                                   mla.v_head_dim)),
+        "wo": dense_init(ks[6], (num_heads, mla.v_head_dim, d_model),
+                         in_axis_size=num_heads * mla.v_head_dim),
+    }
+
+
+def _latents(p, x, positions, mla, rope_theta):
+    """Compressed latents for the kv side: c_kv (B,S,r), k_rope (B,S,dr)."""
+    dt = x.dtype
+    c_kv = apply_norm(p["kv_norm"], x @ p["w_dkv"].astype(dt))
+    # gather the ~100 MB latent here rather than let GSPMD defer the
+    # partial sum into the ~1 GB/layer up-projected K (§Perf cell 1 iter 4)
+    c_kv = constrain(c_kv, "batch", None, None)
+    k_rope = (x @ p["w_kr"].astype(dt))[:, :, None, :]        # (B,S,1,dr)
+    k_rope = apply_rope(k_rope, positions, rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def _queries(p, x, positions, mla, rope_theta):
+    dt = x.dtype
+    c_q = apply_norm(p["q_norm"], x @ p["w_dq"].astype(dt))
+    c_q = constrain(c_q, "batch", None, None)
+    q = jnp.einsum("bsr,rhe->bshe", c_q, p["w_uq"].astype(dt))
+    q_nope = q[..., :mla.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., mla.qk_nope_head_dim:], positions, rope_theta)
+    return q_nope, q_rope
+
+
+def mla_forward(p, x, *, positions, mla, rope_theta, q_chunk=1024):
+    """Full-sequence causal MLA (decompressed form). Returns (out, latents)
+    so prefill can seed the compressed cache."""
+    dt = x.dtype
+    B, S, _ = x.shape
+    q_nope, q_rope = _queries(p, x, positions, mla, rope_theta)
+    c_kv, k_rope = _latents(p, x, positions, mla, rope_theta)
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uk"].astype(dt))
+    v = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uv"].astype(dt))
+    H = q_nope.shape[2]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, mla.qk_rope_head_dim))], axis=-1)
+    out = chunked_attention(q, k, v, q_positions=positions,
+                            kv_positions=positions, causal=True,
+                            q_chunk=q_chunk)
+    return (jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(dt)),
+            (c_kv, k_rope))
+
+
+def init_mla_cache(batch, max_len, mla, dtype):
+    return {"c_kv": jnp.zeros((batch, max_len, mla.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, mla.qk_rope_head_dim), dtype)}
+
+
+def mla_decode(p, x, cache, *, pos, mla, rope_theta):
+    """Absorbed-form one-token decode against the compressed cache."""
+    dt = x.dtype
+    B = x.shape[0]
+    q_nope, q_rope = _queries(p, x, pos[None], mla, rope_theta)  # (B,1,H,*)
+    c_new, kr_new = _latents(p, x, pos[None], mla, rope_theta)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+
+    # absorb W_uk into q: q_abs (B,1,H,r)
+    q_abs = jnp.einsum("bshe,rhe->bshr", q_nope, p["w_uk"].astype(dt))
+    scale = (mla.qk_nope_head_dim + mla.qk_rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bshr,btr->bhst", q_abs, c_kv.astype(dt)) +
+              jnp.einsum("bshe,bte->bhst", q_rope, k_rope.astype(dt)))
+    scores = scores.astype(jnp.float32) * scale
+    t_pos = jnp.arange(c_kv.shape[1])
+    scores = jnp.where((t_pos <= pos)[None, None, None, :], scores,
+                       jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+    ctx = jnp.einsum("bhst,btr->bshr", probs, c_kv.astype(dt))   # (B,1,H,r)
+    out = jnp.einsum("bshr,rhe->bshe", ctx, p["w_uv"].astype(dt))
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(dt))
+    return y, {"c_kv": c_kv, "k_rope": k_rope}

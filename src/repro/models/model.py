@@ -1,0 +1,163 @@
+"""Public model API: init / train forward (loss) / prefill / decode.
+
+Handles the family-specific input plumbing:
+  - LM        : batch = {tokens, targets}
+  - encdec    : batch = {enc_embeds, tokens, targets}   (frontend STUB)
+  - vlm       : batch = {patch_embeds, tokens, targets} (frontend STUB;
+                total positions = num_patches + len(tokens) = shape.seq_len)
+All functions are pure; distribution comes from jit shardings + the
+constrain() hints. Compute dtype is cast at the embedding boundary.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.models.layers import (apply_embed, apply_lm_head, apply_norm,
+                                 cross_entropy_loss, embed_init, init_embed,
+                                 init_lm_head, init_norm, sinusoidal_table)
+from repro.sharding_ctx import constrain
+
+
+def init_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 8)
+    vp = cfg.padded_vocab()
+    p = {
+        "embed": init_embed(ks[0], vp, cfg.d_model),
+        "stack": tf.init_stack(ks[1], cfg, cross=cfg.is_encdec),
+        "final_norm": init_norm(None, cfg.d_model, cfg.norm_type),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_lm_head(ks[2], cfg.d_model, vp)
+    if cfg.pos_embedding == "learned":
+        p["pos"] = {"table": embed_init(ks[3], (min(cfg.max_position, 65536),
+                                                cfg.d_model))}
+    if cfg.is_encdec:
+        import dataclasses
+        enc = cfg.encoder
+        enc_cfg = dataclasses.replace(
+            cfg, num_layers=enc.num_layers, block_defs=(("attn", "dense"),),
+            encoder=None, moe=None)
+        p["encoder"] = {"stack": tf.init_stack(ks[4], enc_cfg),
+                        "final_norm": init_norm(None, cfg.d_model,
+                                                cfg.norm_type)}
+    return p
+
+
+def _encoder_cfg(cfg):
+    import dataclasses
+    return dataclasses.replace(cfg, num_layers=cfg.encoder.num_layers,
+                               block_defs=(("attn", "dense"),), encoder=None,
+                               moe=None)
+
+
+def _lm_head(p, cfg, x):
+    if cfg.tie_embeddings:
+        return x @ p["embed"]["table"].astype(x.dtype).T
+    return apply_lm_head(p["lm_head"], x, cfg.vocab_size)
+
+
+def _embed_tokens(p, cfg, tokens, dtype, offset=0):
+    x = apply_embed(p["embed"], tokens, dtype)
+    if cfg.pos_embedding == "learned":
+        S = tokens.shape[1]
+        pos_tab = jax.lax.dynamic_slice_in_dim(
+            p["pos"]["table"], offset, S, axis=0).astype(dtype)
+        x = x + pos_tab
+    return x
+
+
+def run_encoder(p, cfg, enc_embeds, *, q_chunk=1024, run_cfg=None):
+    """Whisper-style encoder over stub frame embeddings (B,F,D)."""
+    ecfg = _encoder_cfg(cfg)
+    dtype = enc_embeds.dtype
+    x = enc_embeds + sinusoidal_table(enc_embeds.shape[1],
+                                      cfg.d_model).astype(dtype)
+    positions = jnp.arange(x.shape[1])
+    x, _, _ = tf.apply_stack(p["encoder"]["stack"], x, ecfg,
+                             positions=positions, causal=False,
+                             q_chunk=q_chunk, run_cfg=run_cfg)
+    return apply_norm(p["encoder"]["final_norm"], x, cfg.norm_type)
+
+
+def _assemble_inputs(p, cfg, batch, dtype):
+    """Returns (x, positions, targets, enc_out, n_prefix)."""
+    enc_out = None
+    n_prefix = 0
+    tokens = batch["tokens"]
+    x = _embed_tokens(p, cfg, tokens, dtype)
+    if cfg.is_encdec:
+        enc_out = run_encoder(p, cfg, batch["enc_embeds"].astype(dtype))
+    elif cfg.frontend is not None:
+        patches = batch["patch_embeds"].astype(dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        n_prefix = patches.shape[1]
+    positions = jnp.arange(x.shape[1])
+    return x, positions, enc_out, n_prefix
+
+
+def forward_loss(p, cfg: ModelConfig, batch, *, compute_dtype=jnp.bfloat16,
+                 run_cfg=None, flash_fn=None):
+    """Training forward: mean CE loss (+ MoE aux). targets==-1 masked."""
+    q_chunk = getattr(run_cfg, "attention_q_chunk", 1024) if run_cfg else 1024
+    x, positions, enc_out, n_prefix = _assemble_inputs(
+        p, cfg, batch, compute_dtype)
+    x = constrain(x, "batch", None, None)
+    x, _, aux = tf.apply_stack(p["stack"], x, cfg, positions=positions,
+                               causal=True, q_chunk=q_chunk, enc_out=enc_out,
+                               cross=cfg.is_encdec, run_cfg=run_cfg,
+                               flash_fn=flash_fn)
+    x = apply_norm(p["final_norm"], x, cfg.norm_type)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    logits = _lm_head(p, cfg, x)
+    loss = cross_entropy_loss(logits, batch["targets"], cfg.vocab_size)
+    return loss + aux.astype(jnp.float32), {"ce": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch, max_len, dtype=jnp.bfloat16):
+    return tf.init_stack_state(cfg, batch, max_len, dtype,
+                               cross=cfg.is_encdec)
+
+
+def prefill(p, cfg: ModelConfig, batch, *, compute_dtype=jnp.bfloat16,
+            q_chunk=1024):
+    """Full-sequence prefill; returns (last-token logits, stacked caches).
+
+    Attention caches come back seq-aligned with the prompt (length = prompt
+    length); SSM/xLSTM states are O(1). For encdec the cross cache is the
+    encoder's kv."""
+    x, positions, enc_out, n_prefix = _assemble_inputs(
+        p, cfg, batch, compute_dtype)
+    x, caches, _ = tf.apply_stack(p["stack"], x, cfg, positions=positions,
+                                  causal=True, q_chunk=q_chunk,
+                                  enc_out=enc_out, cross=cfg.is_encdec,
+                                  collect_cache=True)
+    x = apply_norm(p["final_norm"], x, cfg.norm_type)
+    logits = _lm_head(p, cfg, x[:, -1:, :])
+    return logits, caches
+
+
+def decode_step(p, cfg: ModelConfig, caches, token, pos, *,
+                compute_dtype=jnp.bfloat16):
+    """One decode step. token: (B,1) int32; pos: scalar int32 (write index).
+    Returns (logits (B,1,V), new caches)."""
+    x = apply_embed(p["embed"], token, compute_dtype)
+    if cfg.pos_embedding == "learned":
+        x = x + jax.lax.dynamic_slice_in_dim(
+            p["pos"]["table"], pos, 1, axis=0).astype(compute_dtype)
+    x = constrain(x, "batch", None, None)
+    x, new_caches = tf.decode_stack(p["stack"], x, caches, cfg, pos=pos)
+    x = apply_norm(p["final_norm"], x, cfg.norm_type)
+    logits = _lm_head(p, cfg, x)
+    return logits, new_caches
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

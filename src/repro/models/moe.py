@@ -1,0 +1,126 @@
+"""Token-choice top-k MoE with capacity-bounded scatter dispatch.
+
+Static-shape (dry-run friendly) dispatch: tokens are scattered into a
+(num_experts, capacity, d) buffer (XLA scatter, drop mode), expert FFNs run
+as a grouped matmul over the expert dim, and outputs gather back weighted by
+the renormalized router probabilities. Experts shard over the "model" mesh
+axis (EP); per-expert hidden dim shards over "data" (TP-in-expert) — see
+sharding.py. The Pallas `moe_gmm` kernel is the optimized expert-FFN path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.sharding_ctx import constrain
+
+
+def init_moe(key, d_model, moe, ffn_type="swiglu"):
+    ks = jax.random.split(key, 8)
+    E, F = moe.num_experts, moe.d_ff_expert
+    p = {"router": dense_init(ks[0], (d_model, E))}
+    p["wi"] = dense_init(ks[1], (E, d_model, F))
+    p["wo"] = dense_init(ks[2], (E, F, d_model), in_axis_size=F)
+    if ffn_type == "swiglu":
+        p["wg"] = dense_init(ks[3], (E, d_model, F))
+    if moe.num_shared_experts:
+        Fs = moe.d_ff_shared * moe.num_shared_experts
+        p["shared_wi"] = dense_init(ks[4], (d_model, Fs))
+        p["shared_wo"] = dense_init(ks[5], (Fs, d_model), in_axis_size=Fs)
+        if ffn_type == "swiglu":
+            p["shared_wg"] = dense_init(ks[6], (d_model, Fs))
+    return p
+
+
+def _expert_ffn(p, buf, ffn_type):
+    """buf: (E, C, D) -> (E, C, D), grouped matmul over experts."""
+    dt = buf.dtype
+    if ffn_type == "swiglu":
+        h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(dt)))
+             * jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(dt)))
+    elif ffn_type == "squared_relu":
+        h = jnp.square(jax.nn.relu(
+            jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(dt))))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(dt)))
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt))
+
+
+def capacity(num_tokens, moe):
+    c = int(num_tokens * moe.top_k * moe.capacity_factor / moe.num_experts)
+    return max(8, -(-c // 8) * 8)        # >=8, rounded up to multiple of 8
+
+
+def apply_moe(p, x, moe, ffn_type="swiglu"):
+    """x: (B,S,D) -> (y, aux_loss). Token-choice top-k, capacity drop.
+
+    Dispatch impl auto-selects: explicit shard_map EP all-to-all when a
+    compatible mesh is active (see moe_sharded.py), else the naive
+    GSPMD-scatter path below (single-device smoke tests, decode batches)."""
+    from repro.models.moe_sharded import (apply_moe_sharded,
+                                          sharded_moe_available)
+    from repro.sharding_ctx import current_mesh
+    mesh = current_mesh()
+    if sharded_moe_available(mesh, moe, x.shape[0] * x.shape[1]):
+        y, aux = apply_moe_sharded(p, x, moe, ffn_type, mesh)
+        return y + _shared_expert(p, x, ffn_type), aux
+    return _apply_moe_naive(p, x, moe, ffn_type)
+
+
+def _shared_expert(p, x, ffn_type):
+    if "shared_wi" not in p:
+        return jnp.zeros_like(x)
+    dt = x.dtype
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    if ffn_type == "swiglu":
+        h = (jax.nn.silu(xt @ p["shared_wg"].astype(dt))
+             * (xt @ p["shared_wi"].astype(dt)))
+    else:
+        h = jax.nn.gelu(xt @ p["shared_wi"].astype(dt))
+    return (h @ p["shared_wo"].astype(dt)).reshape(B, S, D)
+
+
+def _apply_moe_naive(p, x, moe, ffn_type="swiglu"):
+    B, S, D = x.shape
+    dt = x.dtype
+    T = B * S
+    E, K = moe.num_experts, moe.top_k
+    C = capacity(T, moe)
+
+    xt = x.reshape(T, D)
+    xt = constrain(xt, "tokens", None)
+    logits = (xt @ p["router"].astype(dt)).astype(jnp.float32)   # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                       # (T,K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert, slot-major order
+    eid = top_e.T.reshape(-1)                                    # (K*T,)
+    onehot = jax.nn.one_hot(eid, E, dtype=jnp.int32)             # (KT,E)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1,
+                              eid[:, None], axis=1)[:, 0]        # (KT,)
+    keep = pos < C
+
+    # dispatch: scatter tokens into (E, C, D)
+    x_rep = jnp.tile(xt, (K, 1))                                 # (KT,D) slot-major
+    buf = jnp.zeros((E, C, D), dt)
+    buf = buf.at[eid, jnp.where(keep, pos, 0)].add(
+        x_rep * keep[:, None].astype(dt), mode="drop")
+    buf = constrain(buf, "expert", None, None)
+
+    out_buf = _expert_ffn(p, buf, ffn_type)                      # (E,C,D)
+
+    # combine: gather back, weight by router prob
+    gath = out_buf[eid, jnp.where(keep, pos, 0)]                 # (KT,D)
+    w = (top_p.T.reshape(-1) * keep).astype(dt)                  # slot-major
+    yt = (gath * w[:, None]).reshape(K, T, D).sum(0)
+    y = yt.reshape(B, S, D) + _shared_expert(p, x, ffn_type)
+
+    # load-balancing aux loss (Switch-style)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs) * moe.aux_loss_weight
+    return y, aux

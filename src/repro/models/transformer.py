@@ -1,0 +1,256 @@
+"""Block / super-block assembly and the lax.scan'd layer stack.
+
+A model is ``cfg.n_super`` scan iterations over a "super-block" — an ordered
+tuple of (mixer, ffn) sub-blocks (cfg.block_defs). Uniform archs have a
+1-sub-block super-block; jamba/xlstm use period-8 patterns. Per-super-block
+params/caches are stacked on a leading axis and consumed by lax.scan, keeping
+the HLO one super-block big regardless of depth (compile-time and
+remat-friendly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xl
+from repro.models.layers import apply_ffn, apply_norm, init_ffn, init_norm
+
+
+# --------------------------------------------------------------------------
+# single sub-block
+# --------------------------------------------------------------------------
+
+def init_subblock(key, cfg, mixer, ffn, cross=False):
+    ks = jax.random.split(key, 6)
+    p = {"norm1": init_norm(None, cfg.d_model, cfg.norm_type)}
+    if mixer == "attn":
+        if cfg.attention_type == "mla":
+            p["mixer"] = mla_mod.init_mla(ks[0], cfg.d_model, cfg.num_heads,
+                                          cfg.mla)
+        else:
+            p["mixer"] = attn.init_attention(
+                ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.head_dim, qk_norm=cfg.qk_norm)
+        if cross:
+            p["norm_cross"] = init_norm(None, cfg.d_model, cfg.norm_type)
+            p["cross"] = attn.init_attention(
+                ks[1], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.head_dim)
+    elif mixer == "mamba":
+        p["mixer"] = mb.init_mamba(ks[0], cfg.d_model, cfg.mamba)
+    elif mixer == "mlstm":
+        p["mixer"] = xl.init_mlstm(ks[0], cfg.d_model, cfg.num_heads,
+                                   cfg.xlstm)
+    elif mixer == "slstm":
+        p["mixer"] = xl.init_slstm(ks[0], cfg.d_model, cfg.num_heads,
+                                   cfg.xlstm)
+    else:
+        raise ValueError(mixer)
+    if ffn == "dense":
+        p["norm2"] = init_norm(None, cfg.d_model, cfg.norm_type)
+        p["ffn"] = init_ffn(ks[2], cfg.d_model, cfg.d_ff, cfg.ffn_type)
+    elif ffn == "moe":
+        p["norm2"] = init_norm(None, cfg.d_model, cfg.norm_type)
+        p["ffn"] = moe_mod.init_moe(ks[2], cfg.d_model, cfg.moe, cfg.ffn_type)
+    return p
+
+
+def apply_subblock(p, x, cfg, mixer, ffn, *, positions, causal, q_chunk,
+                   enc_out=None, cross=False, flash_fn=None):
+    """Full-sequence apply. Returns (x, cache_seed, aux)."""
+    h = apply_norm(p["norm1"], x, cfg.norm_type)
+    seed = None
+    if mixer == "attn":
+        if cfg.attention_type == "mla":
+            y, seed = mla_mod.mla_forward(p["mixer"], h, positions=positions,
+                                          mla=cfg.mla,
+                                          rope_theta=cfg.rope_theta,
+                                          q_chunk=q_chunk)
+            seed = {"c_kv": seed[0], "k_rope": seed[1]}
+        else:
+            y, (k, v) = attn.attention_forward(
+                p["mixer"], h, positions=positions, causal=causal,
+                rope_theta=cfg.rope_theta,
+                use_rope=(cfg.pos_embedding == "rope"),
+                qk_norm=cfg.qk_norm, q_chunk=q_chunk, flash_fn=flash_fn)
+            seed = {"k": k, "v": v}
+        x = x + y
+        if cross:
+            hc = apply_norm(p["norm_cross"], x, cfg.norm_type)
+            yc, (kc, vc) = attn.attention_forward(
+                p["cross"], hc, positions=positions, causal=False,
+                use_rope=False, q_chunk=q_chunk, x_cross=enc_out)
+            x = x + yc
+            seed = {"self": seed, "cross": {"k": kc, "v": vc}}
+    elif mixer == "mamba":
+        y, (h_last, conv_last) = mb.mamba_forward(p["mixer"], h, cfg.mamba)
+        seed = {"h": h_last, "conv": conv_last}
+        x = x + y
+    elif mixer == "mlstm":
+        y, st = xl.mlstm_forward(p["mixer"], h, cfg.num_heads, cfg.xlstm)
+        seed = st
+        x = x + y
+    elif mixer == "slstm":
+        y, st = xl.slstm_forward(p["mixer"], h, cfg.num_heads, cfg.xlstm)
+        seed = st
+        x = x + y
+
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == "dense":
+        x = x + apply_ffn(p["ffn"], apply_norm(p["norm2"], x, cfg.norm_type),
+                          cfg.ffn_type)
+    elif ffn == "moe":
+        y, aux = moe_mod.apply_moe(p["ffn"],
+                                   apply_norm(p["norm2"], x, cfg.norm_type),
+                                   cfg.moe, cfg.ffn_type)
+        x = x + y
+    return x, seed, aux
+
+
+def apply_subblock_decode(p, x, state, cfg, mixer, ffn, *, pos):
+    """One-token apply. Returns (x, new_state)."""
+    h = apply_norm(p["norm1"], x, cfg.norm_type)
+    if mixer == "attn":
+        if cfg.attention_type == "mla":
+            y, new_self = mla_mod.mla_decode(
+                p["mixer"], h, state["self"] if "cross" in state else state,
+                pos=pos, mla=cfg.mla, rope_theta=cfg.rope_theta)
+        else:
+            y, new_self = attn.attention_decode(
+                p["mixer"], h, state["self"] if "cross" in state else state,
+                pos=pos, rope_theta=cfg.rope_theta,
+                use_rope=(cfg.pos_embedding == "rope"), qk_norm=cfg.qk_norm)
+        x = x + y
+        if "cross" in state:
+            hc = apply_norm(p["norm_cross"], x, cfg.norm_type)
+            yc, _ = attn.attention_decode(p["cross"], hc, state["cross"],
+                                          pos=pos, use_rope=False, cross=True)
+            x = x + yc
+            new_state = {"self": new_self, "cross": state["cross"]}
+        else:
+            new_state = new_self
+    elif mixer == "mamba":
+        y, new_state = mb.mamba_decode(p["mixer"], h, state, cfg.mamba)
+        x = x + y
+    elif mixer == "mlstm":
+        y, new_state = xl.mlstm_decode(p["mixer"], h, state, cfg.num_heads,
+                                       cfg.xlstm)
+        x = x + y
+    elif mixer == "slstm":
+        y, new_state = xl.slstm_decode(p["mixer"], h, state, cfg.num_heads,
+                                       cfg.xlstm)
+        x = x + y
+
+    if ffn == "dense":
+        x = x + apply_ffn(p["ffn"], apply_norm(p["norm2"], x, cfg.norm_type),
+                          cfg.ffn_type)
+    elif ffn == "moe":
+        y, _ = moe_mod.apply_moe(p["ffn"],
+                                 apply_norm(p["norm2"], x, cfg.norm_type),
+                                 cfg.moe, cfg.ffn_type)
+        x = x + y
+    return x, new_state
+
+
+def init_subblock_state(cfg, idx_def, batch, max_len, dtype, cross=False):
+    mixer, _ = cfg.block_defs[idx_def]
+    if mixer == "attn":
+        if cfg.attention_type == "mla":
+            st = mla_mod.init_mla_cache(batch, max_len, cfg.mla, dtype)
+        else:
+            st = attn.init_kv_cache(batch, max_len, cfg.num_kv_heads,
+                                    cfg.head_dim, dtype)
+        if cross:
+            enc = cfg.encoder
+            st = {"self": st,
+                  "cross": attn.init_kv_cache(batch, enc.n_frames,
+                                              cfg.num_kv_heads, cfg.head_dim,
+                                              dtype)}
+        return st
+    if mixer == "mamba":
+        return mb.init_mamba_state(batch, cfg.d_model, cfg.mamba, dtype)
+    if mixer == "mlstm":
+        return xl.init_mlstm_state(batch, cfg.d_model, cfg.num_heads,
+                                   cfg.xlstm, dtype)
+    if mixer == "slstm":
+        return xl.init_slstm_state(batch, cfg.d_model, cfg.num_heads,
+                                   cfg.xlstm, dtype)
+    raise ValueError(mixer)
+
+
+# --------------------------------------------------------------------------
+# stacked super-block stack
+# --------------------------------------------------------------------------
+
+def init_stack(key, cfg, cross=False):
+    """Stacked params: each leaf has leading dim n_super."""
+    def init_one(k):
+        ks = jax.random.split(k, len(cfg.block_defs))
+        return {f"b{i}": init_subblock(ks[i], cfg, m, f, cross=cross)
+                for i, (m, f) in enumerate(cfg.block_defs)}
+    keys = jax.random.split(key, cfg.n_super)
+    return jax.vmap(init_one)(keys)
+
+
+def _remat(fn, cfg_run):
+    if cfg_run is None or not getattr(cfg_run, "remat", False):
+        return fn
+    policy = {"dots": jax.checkpoint_policies.checkpoint_dots,
+              "none": None,
+              "full": jax.checkpoint_policies.nothing_saveable}[
+                  getattr(cfg_run, "remat_policy", "dots")]
+    return jax.checkpoint(fn, policy=policy) if policy else fn
+
+
+def apply_stack(stack_params, x, cfg, *, positions, causal=True, q_chunk=1024,
+                enc_out=None, cross=False, run_cfg=None, collect_cache=False,
+                flash_fn=None):
+    """Scan the super-block stack over x. Returns (x, caches|None, aux)."""
+
+    def body(carry, layer_p):
+        xc, aux = carry
+        seeds = {}
+        for i, (m, f) in enumerate(cfg.block_defs):
+            xc, seed, a = apply_subblock(
+                layer_p[f"b{i}"], xc, cfg, m, f, positions=positions,
+                causal=causal, q_chunk=q_chunk, enc_out=enc_out, cross=cross,
+                flash_fn=flash_fn)
+            aux = aux + a
+            if collect_cache:
+                seeds[f"b{i}"] = seed
+        return (xc, aux), (seeds if collect_cache else None)
+
+    body = _remat(body, run_cfg)
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                    stack_params)
+    return x, caches, aux
+
+
+def decode_stack(stack_params, x, caches, cfg, *, pos):
+    """Scan one-token decode; caches are stacked pytrees (leading n_super)."""
+
+    def body(xc, xs):
+        layer_p, cache = xs
+        new_cache = {}
+        for i, (m, f) in enumerate(cfg.block_defs):
+            xc, nc = apply_subblock_decode(layer_p[f"b{i}"], xc,
+                                           cache[f"b{i}"], cfg, m, f, pos=pos)
+            new_cache[f"b{i}"] = nc
+        return xc, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (stack_params, caches))
+    return x, new_caches
+
+
+def init_stack_state(cfg, batch, max_len, dtype, cross=False):
+    one = {f"b{i}": init_subblock_state(cfg, i, batch, max_len, dtype,
+                                        cross=cross)
+           for i in range(len(cfg.block_defs))}
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_super,) + a.shape).copy(), one)

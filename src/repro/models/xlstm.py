@@ -1,0 +1,295 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM (matrix memory) + sequential sLSTM.
+
+mLSTM uses the exact stabilized chunkwise-parallel form (TFLA-style): within
+a chunk an attention-like (c x c) masked matmul, across chunks a
+(B,H,dk,dv) state recurrence carried by lax.scan — numerically identical to
+the sequential recurrence (tests assert allclose vs. the step-by-step
+oracle). Decode is an O(1)-state single step (the long_500k path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+# ==========================================================================
+# mLSTM
+# ==========================================================================
+
+def mlstm_dims(d_model, xcfg, num_heads):
+    d_inner = int(d_model * xcfg.proj_factor_mlstm)
+    return d_inner, d_inner // num_heads
+
+
+def init_mlstm(key, d_model, num_heads, xcfg):
+    d_inner, dh = mlstm_dims(d_model, xcfg, num_heads)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d_model, 2 * d_inner)),
+        "conv_w": dense_init(ks[1], (xcfg.conv1d_kernel, d_inner),
+                             in_axis_size=xcfg.conv1d_kernel),
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "wq": dense_init(ks[2], (d_inner, d_inner)),
+        "wk": dense_init(ks[3], (d_inner, d_inner)),
+        "wv": dense_init(ks[4], (d_inner, d_inner)),
+        "w_if": dense_init(ks[5], (d_inner, 2 * num_heads)),
+        "b_i": jnp.full((num_heads,), -10.0),   # small initial input gate
+        "b_f": jnp.full((num_heads,), 3.0),     # forget-gate bias ~ open
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "w_down": dense_init(ks[6], (d_inner, d_model), in_axis_size=d_inner),
+    }
+
+
+def _headwise_norm(h, scale, num_heads, eps=1e-6):
+    """GroupNorm with one group per head over (B,S,H,dh)."""
+    hf = h.astype(jnp.float32)
+    mu = hf.mean(-1, keepdims=True)
+    var = hf.var(-1, keepdims=True)
+    out = (hf - mu) * jax.lax.rsqrt(var + eps)
+    B, S, H, dh = h.shape
+    return (out * scale.reshape(H, dh)).astype(h.dtype)
+
+
+def _mlstm_chunk(carry, qkv_if, dh):
+    """One chunk of the stabilized chunkwise-parallel mLSTM.
+    carry: C (B,H,dk,dv), n (B,H,dk), m (B,H).
+    qkv_if: q,k,v (B,H,c,dh); logi, logf (B,H,c)."""
+    C0, n0, m0 = carry
+    q, k, v, logi, logf = qkv_if
+    kf = k.astype(jnp.float32) * (dh ** -0.5)
+    qf = q.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    F = jnp.cumsum(logf, axis=2)                        # (B,H,c)
+    a = logi - F
+    M = jnp.maximum(m0[..., None], jax.lax.cummax(a, axis=2))
+    m_new = F + M                                       # running stabilizer
+
+    w_state = jnp.exp(m0[..., None] - M)                # (B,H,c)
+    Dmask = jnp.exp(a[:, :, None, :] - M[:, :, :, None])
+    c = q.shape[2]
+    tril = jnp.tril(jnp.ones((c, c), bool))
+    Dmask = jnp.where(tril, Dmask, 0.0)
+
+    S_intra = jnp.einsum("bhtd,bhjd->bhtj", qf, kf) * Dmask
+    num = (jnp.einsum("bhtj,bhjd->bhtd", S_intra, vf)
+           + w_state[..., None] * jnp.einsum("bhtd,bhde->bhte", qf, C0))
+    nvec = (w_state[..., None] * n0[:, :, None, :]
+            + jnp.einsum("bhtj,bhjd->bhtd", Dmask, kf))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhtd,bhtd->bht", nvec, qf)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]                            # (B,H,c,dv)
+
+    # end-of-chunk state
+    Mc = M[..., -1]
+    wc = jnp.exp(m0 - Mc)                               # (B,H)
+    w_j = jnp.exp(a - Mc[..., None])                    # (B,H,c)
+    C1 = wc[..., None, None] * C0 + jnp.einsum("bhj,bhjd,bhje->bhde",
+                                               w_j, kf, vf)
+    n1 = wc[..., None] * n0 + jnp.einsum("bhj,bhjd->bhd", w_j, kf)
+    m1 = m_new[..., -1]
+    return (C1, n1, m1), h
+
+
+def _qkv_gates(p, x, num_heads, d_inner, dh, conv0=None):
+    from repro.models.mamba import _causal_conv
+    dt = x.dtype
+    up = x @ p["w_up"].astype(dt)
+    xi, z = jnp.split(up, 2, axis=-1)
+    xc, conv_new = _causal_conv(xi, p["conv_w"].astype(dt),
+                                p["conv_b"].astype(dt), conv0)
+    xc = jax.nn.silu(xc)
+    B, S, _ = x.shape
+
+    def heads(t):
+        return t.reshape(B, S, num_heads, dh).transpose(0, 2, 1, 3)
+    q = heads(xc @ p["wq"].astype(dt))
+    k = heads(xc @ p["wk"].astype(dt))
+    v = heads(xi @ p["wv"].astype(dt))
+    gif = (xc @ p["w_if"].astype(dt)).astype(jnp.float32)
+    i_raw = gif[..., :num_heads] + p["b_i"]
+    f_raw = gif[..., num_heads:] + p["b_f"]
+    logi = i_raw.transpose(0, 2, 1)                     # (B,H,S)
+    logf = jax.nn.log_sigmoid(f_raw).transpose(0, 2, 1)
+    return q, k, v, logi, logf, z, conv_new
+
+
+def mlstm_forward(p, x, num_heads, xcfg, *, chunk=128, state=None):
+    """x: (B,S,D) -> (y, new_state). state: {"C","n","m","conv"}."""
+    B, S, D = x.shape
+    dt = x.dtype
+    d_inner, dh = mlstm_dims(D, xcfg, num_heads)
+    conv0 = state["conv"] if state is not None else None
+    q, k, v, logi, logf, z, conv_new = _qkv_gates(p, x, num_heads, d_inner,
+                                                  dh, conv0)
+    if state is None:
+        C0 = jnp.zeros((B, num_heads, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, num_heads, dh), jnp.float32)
+        m0 = jnp.zeros((B, num_heads), jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    c = min(chunk, S)
+    if S % c:
+        c = S
+    nc = S // c
+
+    def split_chunks(t, time_axis):
+        # (B,H,S,*) -> (nc,B,H,c,*)
+        shp = t.shape
+        t = t.reshape(shp[:time_axis] + (nc, c) + shp[time_axis + 1:])
+        return jnp.moveaxis(t, time_axis, 0)
+
+    qs, ks_, vs = (split_chunks(t, 2) for t in (q, k, v))
+    lis, lfs = (split_chunks(t, 2) for t in (logi, logf))
+
+    def body(carry, xs):
+        return _mlstm_chunk(carry, xs, dh)
+
+    (C1, n1, m1), hs = jax.lax.scan(body, (C0, n0, m0),
+                                    (qs, ks_, vs, lis, lfs))
+    h = jnp.moveaxis(hs, 0, 2).reshape(B, num_heads, S, dh)
+    h = h.transpose(0, 2, 1, 3)                          # (B,S,H,dh)
+    h = _headwise_norm(h, p["norm_scale"], num_heads)
+    h = h.reshape(B, S, d_inner) * jax.nn.silu(z)
+    y = h.astype(dt) @ p["w_down"].astype(dt)
+    return y, {"C": C1, "n": n1, "m": m1, "conv": conv_new}
+
+
+def init_mlstm_state(batch, d_model, num_heads, xcfg, dtype):
+    d_inner, dh = mlstm_dims(d_model, xcfg, num_heads)
+    return {"C": jnp.zeros((batch, num_heads, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, num_heads, dh), jnp.float32),
+            "m": jnp.zeros((batch, num_heads), jnp.float32),
+            "conv": jnp.zeros((batch, xcfg.conv1d_kernel - 1, d_inner), dtype)}
+
+
+def mlstm_decode(p, x, state, num_heads, xcfg):
+    """Exact sequential single-token step."""
+    B, _, D = x.shape
+    d_inner, dh = mlstm_dims(D, xcfg, num_heads)
+    q, k, v, logi, logf, z, conv_new = _qkv_gates(
+        p, x, num_heads, d_inner, dh, state["conv"])
+    qf = q[:, :, 0].astype(jnp.float32)                  # (B,H,dh)
+    kf = k[:, :, 0].astype(jnp.float32) * (dh ** -0.5)
+    vf = v[:, :, 0].astype(jnp.float32)
+    li, lf = logi[:, :, 0], logf[:, :, 0]                # (B,H)
+    m1 = jnp.maximum(lf + state["m"], li)
+    fp = jnp.exp(lf + state["m"] - m1)
+    ip = jnp.exp(li - m1)
+    C1 = fp[..., None, None] * state["C"] + ip[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", kf, vf)
+    n1 = fp[..., None] * state["n"] + ip[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C1)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n1, qf)),
+                      jnp.exp(-m1))
+    h = (num / den[..., None])[:, None]                  # (B,1,H,dh)
+    h = _headwise_norm(h, p["norm_scale"], num_heads)
+    h = h.reshape(B, 1, d_inner) * jax.nn.silu(z)
+    y = h.astype(x.dtype) @ p["w_down"].astype(x.dtype)
+    return y, {"C": C1, "n": n1, "m": m1, "conv": conv_new}
+
+
+# ==========================================================================
+# sLSTM
+# ==========================================================================
+
+def init_slstm(key, d_model, num_heads, xcfg):
+    dh = d_model // num_heads
+    ks = jax.random.split(key, 12)
+    d_ff = int(d_model * xcfg.proj_factor_slstm)
+    p = {"conv_w": dense_init(ks[0], (xcfg.conv1d_kernel, d_model),
+                              in_axis_size=xcfg.conv1d_kernel),
+         "conv_b": jnp.zeros((d_model,), jnp.float32),
+         "norm_scale": jnp.ones((d_model,), jnp.float32),
+         "w_up1": dense_init(ks[9], (d_model, d_ff)),
+         "w_up2": dense_init(ks[10], (d_model, d_ff)),
+         "w_down": dense_init(ks[11], (d_ff, d_model), in_axis_size=d_ff)}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"w_{g}"] = dense_init(ks[1 + i], (d_model, d_model))
+        p[f"r_{g}"] = dense_init(ks[5 + i], (num_heads, dh, dh),
+                                 in_axis_size=dh)
+        p[f"b_{g}"] = jnp.zeros((d_model,), jnp.float32)
+    return p
+
+
+def _slstm_gates_x(p, x, conv0):
+    """Input-side gate pre-activations (no recurrence)."""
+    from repro.models.mamba import _causal_conv
+    dt = x.dtype
+    xc, conv_new = _causal_conv(x, p["conv_w"].astype(dt),
+                                p["conv_b"].astype(dt), conv0)
+    xc = jax.nn.silu(xc)
+    gz = x @ p["w_z"].astype(dt) + p["b_z"].astype(dt)
+    go = x @ p["w_o"].astype(dt) + p["b_o"].astype(dt)
+    gi = xc @ p["w_i"].astype(dt) + p["b_i"].astype(dt)
+    gf = xc @ p["w_f"].astype(dt) + p["b_f"].astype(dt)
+    return gz, gi, gf, go, conv_new
+
+
+def _slstm_step(p, carry, gates, num_heads):
+    """One recurrent step. carry: (c,n,h,m), all (B,H,dh) — per-cell gates
+    and per-cell stabilizer m, per the xLSTM paper."""
+    c, n, h, m = carry
+    gz, gi, gf, go = (g.astype(jnp.float32) for g in gates)  # (B,D)
+    B = gz.shape[0]
+    dh = c.shape[-1]
+
+    def rec(g):
+        return jnp.einsum("bhd,hde->bhe", h, p[f"r_{g}"])
+    shape = (B, num_heads, dh)
+    z_t = jnp.tanh(gz.reshape(shape) + rec("z"))
+    i_t = gi.reshape(shape) + rec("i")
+    f_t = gf.reshape(shape) + rec("f")
+    o_t = jax.nn.sigmoid(go.reshape(shape) + rec("o"))
+    m1 = jnp.maximum(f_t + m, i_t)                           # (B,H,dh)
+    ip = jnp.exp(i_t - m1)
+    fp = jnp.exp(f_t + m - m1)
+    c1 = fp * c + ip * z_t
+    n1 = fp * n + ip
+    h1 = o_t * c1 / jnp.maximum(n1, 1.0)
+    return (c1, n1, h1, m1)
+
+
+def slstm_forward(p, x, num_heads, xcfg, *, state=None):
+    B, S, D = x.shape
+    dt = x.dtype
+    dh = D // num_heads
+    conv0 = state["conv"] if state is not None else None
+    gz, gi, gf, go, conv_new = _slstm_gates_x(p, x, conv0)
+    if state is None:
+        zeros = jnp.zeros((B, num_heads, dh), jnp.float32)
+        carry = (zeros, zeros, zeros, zeros)
+    else:
+        carry = (state["c"], state["n"], state["h"], state["m"])
+
+    def body(cr, g):
+        cr1 = _slstm_step(p, cr, g, num_heads)
+        return cr1, cr1[2]                                # emit h
+
+    gseq = tuple(jnp.moveaxis(g, 1, 0) for g in (gz, gi, gf, go))
+    carry1, hs = jax.lax.scan(body, carry, gseq)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, D)
+    # headwise norm + gated FFN (proj_factor 4/3 GLU), block-internal
+    hf = h.astype(jnp.float32)
+    mu, var = hf.mean(-1, keepdims=True), hf.var(-1, keepdims=True)
+    h = ((hf - mu) * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"]).astype(dt)
+    y = (jax.nn.gelu(h @ p["w_up1"].astype(dt)) * (h @ p["w_up2"].astype(dt))
+         ) @ p["w_down"].astype(dt)
+    new_state = {"c": carry1[0], "n": carry1[1], "h": carry1[2],
+                 "m": carry1[3], "conv": conv_new}
+    return y, new_state
+
+
+def init_slstm_state(batch, d_model, num_heads, xcfg, dtype):
+    dh = d_model // num_heads
+    z = jnp.zeros((batch, num_heads, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z,
+            "conv": jnp.zeros((batch, xcfg.conv1d_kernel - 1, d_model), dtype)}
+
+
+def slstm_decode(p, x, state, num_heads, xcfg):
+    y, new_state = slstm_forward(p, x, num_heads, xcfg, state=state)
+    return y, new_state

@@ -1,0 +1,2 @@
+from repro.optim.adamw import (adamw_init, adamw_update, cosine_schedule,  # noqa: F401
+                               global_norm)

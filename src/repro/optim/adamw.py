@@ -1,0 +1,77 @@
+"""Sharded AdamW with fp32 master weights, global-norm clipping, schedules.
+
+Optimizer state mirrors the param tree leaf-for-leaf (same shardings apply),
+so FSDP sharding of params automatically shards moments and master copy —
+ZeRO-style without any bespoke machinery.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, base_lr, warmup_steps=100, decay_steps=10000,
+                    min_ratio=0.1):
+    warm = jnp.minimum((step + 1.0) / jnp.maximum(warmup_steps, 1), 1.0)
+    t = jnp.clip((step - warmup_steps) / jnp.maximum(decay_steps, 1), 0., 1.)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return base_lr * warm * cos
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_init(params, *, keep_master=True):
+    """params may be bf16 (compute copy); master fp32 copy lives here.
+    When params are already fp32 no master is kept (it would alias the
+    param buffers and double memory for nothing)."""
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    state = {"mu": zeros,
+             "nu": jax.tree.map(jnp.zeros_like, zeros),
+             "step": jnp.zeros((), jnp.int32)}
+    low_precision = any(
+        jnp.issubdtype(x.dtype, jnp.floating) and x.dtype != jnp.float32
+        for x in jax.tree.leaves(params))
+    if keep_master and low_precision:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(grads, state, params, *, lr, beta1=0.9, beta2=0.95,
+                 eps=1e-8, weight_decay=0.1, grad_clip=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+    step = state["step"] + 1
+    c1 = 1.0 - beta1 ** step.astype(jnp.float32)
+    c2 = 1.0 - beta2 ** step.astype(jnp.float32)
+    master = state.get("master", params)
+
+    def upd(g, mu, nu, m):
+        g = g.astype(jnp.float32) * scale
+        mu1 = beta1 * mu + (1 - beta1) * g
+        nu1 = beta2 * nu + (1 - beta2) * g * g
+        upd_ = (mu1 / c1) / (jnp.sqrt(nu1 / c2) + eps)
+        m1 = m - lr * (upd_ + weight_decay * m)
+        return mu1, nu1, m1
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    flat_m = treedef.flatten_up_to(master)
+    out = [upd(*t) for t in zip(flat_g, flat_mu, flat_nu, flat_m)]
+    mu1 = jax.tree.unflatten(treedef, [o[0] for o in out])
+    nu1 = jax.tree.unflatten(treedef, [o[1] for o in out])
+    m1 = jax.tree.unflatten(treedef, [o[2] for o in out])
+
+    flat_p = treedef.flatten_up_to(params)
+    p1 = jax.tree.unflatten(
+        treedef, [nm.astype(p.dtype) for nm, p in
+                  zip([o[2] for o in out], flat_p)])
+    new_state = {"mu": mu1, "nu": nu1, "step": step}
+    if "master" in state:
+        new_state["master"] = m1
+    return p1, new_state, {"grad_norm": gnorm, "lr": lr}

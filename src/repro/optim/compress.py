@@ -1,0 +1,71 @@
+"""Cross-pod gradient compression (int8 + error feedback).
+
+The paper's elastic axis crosses pods — on real fleets that is DCN, an
+order of magnitude slower than intra-pod ICI. This module compresses the
+pure-DP gradient exchange on the "pod" axis only:
+
+  * int8 per-tensor quantization with fp32 scales (4x fewer wire bytes than
+    fp32, 2x fewer than bf16),
+  * exchange via all_gather(int8) + local dequant-mean (for small pod
+    counts the gathered payload n_pod x 1B still beats a ring all-reduce of
+    2 x 2B at n_pod <= 4; beyond that switch to quantized reduce-scatter),
+  * optional error-feedback residual so the quantization error is carried
+    into the next step instead of lost (Seide et al.; keeps convergence).
+
+Usage inside a shard_map whose manual axes include "pod":
+    g_sync, resid = compressed_psum_mean(g_local, "pod", resid)
+Pure-jnp; property-tested in tests/test_compress.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    """(q, scale): q int8, per-tensor scale. Exact for zeros."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-20
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_mean(x, axis_name, residual=None):
+    """Mean over `axis_name` with an int8 wire format + error feedback.
+    Returns (mean, new_residual). Call inside shard_map with `axis_name`
+    manual."""
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual
+    q, scale = quantize_int8(xf)
+    new_residual = xf - dequantize_int8(q, scale)
+    qs = jax.lax.all_gather(q, axis_name)            # (n_pod, ...)
+    ss = jax.lax.all_gather(scale, axis_name)        # (n_pod,)
+    deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * x.ndim)
+    return deq.mean(axis=0).astype(x.dtype), new_residual
+
+
+def compressed_tree_psum_mean(tree, axis_name, residuals=None):
+    """Tree version; residuals tree threads error feedback across steps."""
+    leaves, treedef = jax.tree.flatten(tree)
+    res_leaves = (jax.tree.leaves(residuals) if residuals is not None
+                  else [None] * len(leaves))
+    outs, new_res = [], []
+    for x, r in zip(leaves, res_leaves):
+        m, nr = compressed_psum_mean(x, axis_name, r)
+        outs.append(m)
+        new_res.append(nr)
+    return jax.tree.unflatten(treedef, outs), \
+        jax.tree.unflatten(treedef, new_res)
+
+
+def wire_bytes(tree, n_pod, compressed=True):
+    """Bytes each device sends per sync (analysis helper for §Perf)."""
+    n = sum(x.size for x in jax.tree.leaves(tree))
+    if compressed:
+        return n * 1 + 4 * len(jax.tree.leaves(tree))
+    return n * 4 * 2 * (n_pod - 1) / n_pod          # fp32 ring all-reduce

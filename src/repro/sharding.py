@@ -1,0 +1,192 @@
+"""Data-driven sharding rules: param / optimizer / cache / batch specs.
+
+Scheme (see DESIGN.md §4): mesh axes ("pod", "data", "model") or
+("data", "model").
+  * params: 2D sharded — megatron-style TP over "model" (column-parallel
+    input projections, row-parallel output projections, EP for experts,
+    vocab-parallel embeddings) + FSDP-style storage sharding over "data".
+    Any dim the mesh cannot divide falls back to unsharded (whisper's 20
+    heads, xLSTM's 4 heads, ...).
+  * optimizer state: mirrors param specs leaf-for-leaf.
+  * batch: batch dim over ("pod","data").
+  * decode caches: batch over "data" when divisible, KV-seq over "model"
+    (+"data" for batch-1 long-context).
+All leaves are matched by (path name, shape), never by model type — new
+architectures pick up rules for free.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _axes(mesh):
+    return set(mesh.axis_names)
+
+
+def _div(dim, mesh, *axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return dim % n == 0
+
+
+def _maybe(dim, mesh, axis):
+    return axis if (axis in _axes(mesh) and _div(dim, mesh, axis)) else None
+
+
+ROW_PARALLEL = ("wo", "w_out", "w_down", "shared_wo")   # contraction first
+# NOTE (§Perf cell 3, iters 2a/2b — REFUTED): three alternative xLSTM weight
+# layouts (FSDP-only, fully replicated, recurrent-R replicated) each measured
+# MORE collective bytes than GSPMD's own choice under the generic rules;
+# kept generic. The confirmed cell-3 win was grad-accum restructuring.
+
+
+def _param_spec(path, leaf, mesh):
+    names = [p.key for p in path if hasattr(p, "key")]
+    name = names[-1] if names else ""
+    shape = leaf.shape
+    # stacked layer dim (n_super) leads every stack param: never shard it
+    stacked = "stack" in names or "encoder" in names
+    core = shape[1:] if stacked else shape
+    if len(core) == 0 or min(core, default=0) == 0:
+        return P()
+
+    def build(parts):
+        full = ([None] + parts) if stacked else parts
+        while full and full[-1] is None:
+            full.pop()
+        return P(*full)
+
+    if name == "table":                       # embed/pos tables
+        if "pos" in names:
+            return P()
+        # vocab dim unsharded (token gather stays local); shard d_model over
+        # model(+data) — avoids SPMD's "involuntary full remat" on gather
+        if _div(core[1], mesh, *(a for a in ("model", "data")
+                                 if a in _axes(mesh))):
+            ax = tuple(a for a in ("model", "data") if a in _axes(mesh))
+            return build([None, ax if len(ax) > 1 else ax[0]])
+        return build([None, _maybe(core[1], mesh, "model")])
+    if name == "w" and "lm_head" in names:
+        return build([_maybe(core[0], mesh, "data"),
+                      _maybe(core[1], mesh, "model")])
+    if len(core) == 1:
+        return P()                            # norms, biases, A_log rows etc.
+
+    # MoE experts: (E, D, F) / (E, F, D) — EP over *data* (tokens all-to-all
+    # stays on the axis that shards them; see moe_sharded.py), TP-in-expert
+    # (F) over model, replicated over pod (pod-local expert replicas).
+    if name in ("wi", "wg") and len(core) == 3:
+        return build([_maybe(core[0], mesh, "data"), None,
+                      _maybe(core[2], mesh, "model")])
+    if name == "wo" and len(core) == 3 and "ffn" in names:
+        return build([_maybe(core[0], mesh, "data"),
+                      _maybe(core[1], mesh, "model"), None])
+
+    # attention projections: (D, H, Dh) in / (H, Dh, D) out
+    if name in ("wq", "wk", "wv") and len(core) == 3:
+        return build([_maybe(core[0], mesh, "data"),
+                      _maybe(core[1], mesh, "model"), None])
+    if name == "wo" and len(core) == 3:
+        return build([_maybe(core[0], mesh, "model"), None,
+                      _maybe(core[2], mesh, "data")])
+    if name in ("w_uq", "w_uk", "w_uv") and len(core) == 3:   # MLA up-proj
+        # NEVER shard the lora-rank contraction dim: GSPMD defers the
+        # partial-sum all the way into the (B,H,S,S) attention scores
+        # (measured 342 TB/dev on minicpm prefill_32k — EXPERIMENTS.md §Perf
+        # iter 1). These weights are ~1M params: shard heads when divisible,
+        # else replicate.
+        return build([None, _maybe(core[1], mesh, "model"), None])
+    if name in ("w_dq", "w_dkv", "w_kr") and len(core) == 2:  # MLA down-proj
+        # same partial-sum hazard on d_model: shard only the rank dim
+        return build([None, _maybe(core[1], mesh, "model")])
+
+    if name in ROW_PARALLEL:                  # (F, D): row-parallel
+        return build([_maybe(core[0], mesh, "model"),
+                      _maybe(core[1], mesh, "data")])
+    # default 2D: column-parallel (D_in, F): FSDP over data, TP over model
+    parts = [_maybe(core[0], mesh, "data")]
+    parts += [None] * (len(core) - 2)
+    parts += [_maybe(core[-1], mesh, "model")]
+    return build(parts)
+
+
+def param_shardings(param_tree, mesh):
+    """param_tree: pytree of arrays or ShapeDtypeStructs."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, _param_spec(path, leaf, mesh)),
+        param_tree)
+
+
+def opt_shardings(opt_tree, mesh):
+    """Moments/master mirror the param rules (drop the {mu,nu,master} key);
+    scalars replicated."""
+    def spec(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        if not names or names[0] == "step":
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, _param_spec(path[1:], leaf, mesh))
+    return jax.tree_util.tree_map_with_path(spec, opt_tree)
+
+
+# --------------------------------------------------------------------------
+# batch / cache
+# --------------------------------------------------------------------------
+
+def batch_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in _axes(mesh))
+
+
+def batch_shardings(batch_tree, mesh):
+    axes = batch_axes(mesh)
+
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if leaf.shape[0] % n == 0:
+            parts = [axes if len(axes) > 1 else axes[0]]
+        else:
+            parts = [None]
+        return NamedSharding(mesh, P(*parts))
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+_SEQ_CACHE_LEAVES = {"k", "v", "c_kv", "k_rope"}
+
+
+def cache_shardings(cache_tree, mesh):
+    """Cache leaves are stacked: (n_super, B, S, ...) for attention,
+    (n_super, B, ...) for recurrent state. Batch -> data when divisible;
+    attention KV seq -> model (+data when batch is not shardable)."""
+    def spec(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        parts = [None]                        # n_super dim
+        if len(shape) < 2:
+            return NamedSharding(mesh, P())
+        b_ok = _div(shape[1], mesh, "data")
+        parts.append("data" if b_ok else None)
+        if name in _SEQ_CACHE_LEAVES and len(shape) >= 3:
+            seq_axes = ["model"] + ([] if b_ok else ["data"])
+            seq_axes = [a for a in seq_axes if a in _axes(mesh)]
+            n = 1
+            for a in seq_axes:
+                n *= mesh.shape[a]
+            if shape[2] % n == 0 and shape[2] > 1:
+                parts.append(tuple(seq_axes) if len(seq_axes) > 1
+                             else seq_axes[0])
+            else:
+                parts.append(None)
+        while parts and parts[-1] is None:
+            parts.pop()
+        return NamedSharding(mesh, P(*parts))
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

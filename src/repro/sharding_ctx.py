@@ -1,0 +1,88 @@
+"""Mesh context + logical-axis sharding constraints.
+
+Model code calls ``constrain(x, *logical_axes)`` with logical names; outside
+a mesh context this is a no-op (single-device smoke tests), inside it maps
+logical -> physical mesh axes and applies with_sharding_constraint, skipping
+any dim the mesh cannot divide evenly (divisibility fallback — see DESIGN.md).
+
+Logical axes:
+  "batch"   -> ("pod", "data") when the mesh has a pod axis, else ("data",)
+  "tokens"  -> same as batch (flattened token dim)
+  "data"    -> ("data",)
+  "model"/"expert"/"heads"/"ff"/"vocab" -> ("model",)
+  "seq"     -> ("model",)   (context/sequence sharding for long KV)
+  None      -> unsharded dim
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+_LOGICAL = {
+    "data": ("data",),
+    "model": ("model",),
+    "expert": ("model",),
+    "heads": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "seq": ("model",),
+}
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def _physical(mesh, logical):
+    if logical is None:
+        return None
+    if logical in ("batch", "tokens"):
+        return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    axes = _LOGICAL[logical]
+    return tuple(a for a in axes if a in mesh.axis_names) or None
+
+
+def axis_size(mesh, physical):
+    if physical is None:
+        return 1
+    n = 1
+    for a in (physical if isinstance(physical, tuple) else (physical,)):
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_for(mesh, shape, logical_axes):
+    """PartitionSpec with divisibility fallback per dim."""
+    parts = []
+    for dim, logical in zip(shape, logical_axes):
+        phys = _physical(mesh, logical)
+        if phys is not None and dim % axis_size(mesh, phys) == 0:
+            parts.append(phys if len(phys) > 1 else phys[0])
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def constrain(x, *logical_axes):
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = spec_for(mesh, x.shape, logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

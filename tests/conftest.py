@@ -1,0 +1,10 @@
+# NOTE: deliberately NO XLA_FLAGS here — smoke tests and benches must see
+# the real single CPU device; only the dry-run subprocesses fake 512.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

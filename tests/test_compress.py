@@ -1,0 +1,86 @@
+"""Gradient-compression properties: bounded quantization error, error
+feedback accumulates to zero bias, wire-byte accounting."""
+import hypothesis.strategies as st_
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.optim.compress import (dequantize_int8, quantize_int8,
+                                  wire_bytes)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st_.lists(st_.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                 max_size=64))
+def test_quantization_error_bound(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    # per-tensor int8: error <= scale/2 = max|x|/254 (+eps)
+    bound = float(jnp.max(jnp.abs(x))) / 254.0 + 1e-12
+    assert err.max() <= bound * 1.001
+
+
+def test_zero_exact():
+    q, s = quantize_int8(jnp.zeros((8,)))
+    assert np.all(np.asarray(q) == 0)
+    np.testing.assert_array_equal(np.asarray(dequantize_int8(q, s)),
+                                  np.zeros(8))
+
+
+def test_error_feedback_reduces_bias():
+    """With error feedback, the time-averaged dequantized signal converges
+    to the true constant gradient (quantization bias cancels)."""
+    g = jnp.asarray([0.013, -0.47, 0.29, 0.051])     # constant "gradient"
+    resid = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    for _ in range(200):
+        x = g + resid
+        q, s = quantize_int8(x)
+        deq = dequantize_int8(q, s)
+        resid = x - deq
+        acc = acc + deq
+    np.testing.assert_allclose(np.asarray(acc / 200), np.asarray(g),
+                               rtol=1e-3, atol=1e-5)
+
+
+def test_wire_bytes_favors_compression():
+    tree = {"a": jnp.zeros((1000,)), "b": jnp.zeros((50, 50))}
+    assert wire_bytes(tree, 2, compressed=True) < \
+        wire_bytes(tree, 2, compressed=False)
+
+
+def test_compressed_psum_multidevice():
+    """End-to-end inside shard_map (subprocess keeps 1-device invariant of
+    the main test process unnecessary: runs only if >1 device)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.optim.compress import compressed_psum_mean
+        auto = jax.sharding.AxisType.Auto
+        mesh = jax.make_mesh((4,), ("pod",), axis_types=(auto,))
+        x = jnp.arange(16, dtype=jnp.float32).reshape(4, 4) / 7.0
+
+        def f(xl):
+            m, r = compressed_psum_mean(xl[0], "pod")
+            return m[None]
+
+        y = jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
+                          out_specs=P("pod"), check_vma=False)(x)
+        want = x.mean(0)
+        err = np.abs(np.asarray(y[0]) - np.asarray(want)).max()
+        assert err < np.abs(np.asarray(x)).max() / 100, err
+        print("COMPRESS OK", err)
+    """)
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "COMPRESS OK" in r.stdout

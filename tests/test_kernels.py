@@ -1,0 +1,111 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py pure-jnp oracles
+(interpret=True on CPU; assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Skv,H,Hkv,D,causal", [
+    (1, 128, 128, 2, 2, 64, True),
+    (2, 256, 256, 4, 2, 64, True),      # GQA
+    (1, 128, 384, 2, 1, 128, False),    # cross-ish, MQA
+    (2, 96, 160, 2, 2, 80, True),       #非-128-aligned (padding path)
+])
+def test_flash_attention(B, Sq, Skv, H, Hkv, D, causal, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D)).astype(dtype)
+    o = ops.flash_attention(q, k, v, causal=causal)
+    G = H // Hkv
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    orf = ref.flash_attention_ref(qr, kr, vr, causal=causal)
+    orf = orf.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(orf, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,di,N,bd,bs", [
+    (1, 64, 32, 8, 32, 32),
+    (2, 128, 64, 16, 32, 64),
+    (1, 96, 48, 8, 16, 32),             # padding path
+])
+def test_mamba_scan(B, S, di, N, bd, bs, dtype):
+    ks = jax.random.split(KEY, 5)
+    xc = jax.random.normal(ks[0], (B, S, di)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, di))).astype(dtype)
+    bm = jax.random.normal(ks[2], (B, S, N)).astype(dtype)
+    cm = jax.random.normal(ks[3], (B, S, N)).astype(dtype)
+    a = -jnp.exp(jax.random.normal(ks[4], (di, N)))
+    y = ops.mamba_scan(xc, dt, bm, cm, a, block_d=bd, block_s=bs)
+    yr = ref.mamba_scan_ref(xc, dt, bm, cm, a)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("BH,S,dqk,dv,bs", [
+    (2, 128, 32, 32, 64),
+    (4, 256, 64, 64, 128),
+    (1, 128, 16, 48, 32),               # dqk != dv
+])
+def test_mlstm_chunk(BH, S, dqk, dv, bs, dtype):
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (BH, S, dqk)).astype(dtype)
+    k = jax.random.normal(ks[1], (BH, S, dqk)).astype(dtype)
+    v = jax.random.normal(ks[2], (BH, S, dv)).astype(dtype)
+    li = (jax.random.normal(ks[3], (BH, S, 1)) - 5.0).astype(dtype)
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (BH, S, 1))
+                            + 3.0).astype(dtype)
+    h = ops.mlstm_chunk(q, k, v, li, lf, block_s=bs)
+    hr = ref.mlstm_ref(q, k, v, li, lf)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(h, np.float32),
+                               np.asarray(hr, np.float32), **tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,D,F", [
+    (2, 64, 32, 64),
+    (4, 128, 64, 96),
+    (3, 72, 40, 56),                    # all-unaligned (padding path)
+])
+def test_moe_gmm(E, C, D, F, dtype):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (E, C, D)).astype(dtype)
+    w = jax.random.normal(ks[1], (E, D, F)).astype(dtype)
+    o = ops.moe_gmm(x, w, block_c=32, block_f=32, block_k=16)
+    orf = ref.moe_gmm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(orf, np.float32), **_tol(dtype))
+
+
+def test_flash_matches_model_attention():
+    """The kernel agrees with the model's chunked reference attention."""
+    from repro.models.attention import chunked_attention
+    B, S, H, D = 2, 128, 4, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    o_kernel = ops.flash_attention(q, k, v, causal=True)
+    pos = jnp.arange(S)
+    o_model = chunked_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                                causal=True, q_chunk=64)
+    np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_model),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,70 @@
+"""Simulator/provisioner conservation properties (hypothesis).
+
+busy_hours <= accel_hours caught a real accounting bug during development
+(pilots surviving their stopped instances); these pin the whole family.
+"""
+import hypothesis.strategies as st_
+from hypothesis import given, settings
+
+from repro.core.budget import BudgetLedger
+from repro.core.provider import t4_catalog
+from repro.core.provisioner import MultiCloudProvisioner
+from repro.core.simulator import CloudSimulator, SimConfig
+
+
+@settings(max_examples=15, deadline=None)
+@given(st_.lists(st_.tuples(st_.floats(0.5, 6.0), st_.integers(0, 1500)),
+                 min_size=1, max_size=6),
+       st_.integers(0, 2 ** 16))
+def test_sim_conservation(schedule, seed):
+    """For arbitrary scale schedules: busy <= delivered accel hours; spend
+    matches instance-hours x price within the catalog's price band; fleet
+    never exceeds the target or total capacity."""
+    cfg = SimConfig(duration_h=sum(t for t, _ in schedule) + 1.0,
+                    seed=seed, overhead_per_day=0.0)
+    sim = CloudSimulator(t4_catalog(), 1e9, cfg)
+    t = 0.0
+    cap = sum(p.total_capacity for p in sim.prov.catalog.values())
+    for dur, target in schedule:
+        sim.at(t, lambda s, n=target: s.prov.scale_to(n, s.now))
+        t += dur
+    sim.run_until(t)
+    sim.settle()
+    assert sim.busy_hours <= sim.accel_hours + 1e-6
+    for tick in sim.history:
+        assert tick.running <= cap
+    prices = [p.spot_price_per_day / 24 for p in sim.prov.catalog.values()]
+    if sim.accel_hours > 1.0:
+        eff = sim.ledger.spent / sim.accel_hours
+        # accel_hours counts interval starts, billing counts elapsed ends:
+        # allow one dt of skew either side of the exact price band
+        skew = 1.0 + 2 * cfg.dt_h / max(sim.accel_hours, 1.0)
+        assert min(prices) / skew <= eff <= max(prices) * skew
+
+
+@settings(max_examples=30, deadline=None)
+@given(st_.lists(st_.integers(0, 4000), min_size=1, max_size=10))
+def test_provisioner_scale_sequence(targets):
+    """scale_to is idempotent and capacity-clamped for any sequence."""
+    prov = MultiCloudProvisioner(t4_catalog(), BudgetLedger(1e12))
+    cap = sum(p.total_capacity for p in prov.catalog.values())
+    for i, n in enumerate(targets):
+        got = prov.scale_to(n, now=float(i))
+        assert got == min(n, cap)
+        again = prov.scale_to(n, now=float(i) + 0.5)
+        assert again == got                      # idempotent
+    prov.deprovision_all(now=99.0)
+    assert prov.total_running() == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st_.integers(1, 2000), st_.floats(1.0, 100.0))
+def test_billing_proportional(n, hours):
+    led = BudgetLedger(1e12)
+    prov = MultiCloudProvisioner(t4_catalog(), led)
+    got = prov.scale_to(n, now=0.0)
+    prov.bill(now=hours)
+    # cheapest-first fill: cost bounded by [min,max] spot price
+    lo = got * hours / 24 * 2.9
+    hi = got * hours / 24 * 4.8
+    assert lo - 1e-6 <= led.spent <= hi + 1e-6
