@@ -17,10 +17,12 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
+    from benchmarks import fleet_scale as fs
     from benchmarks import framework_benches as fb
     from benchmarks import paper_tables as pt
 
     benches = [
+        ("fleet_tick_speedup", fs.bench_fleet_tick_throughput),
         ("fig1_fleet_timeline", pt.bench_fig1_fleet_timeline),
         ("fig2_gpu_hours_doubling", pt.bench_fig2_gpu_hours_doubling),
         ("claims_table_maxerr_pct", pt.bench_claims_table),

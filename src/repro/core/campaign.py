@@ -18,9 +18,9 @@ GPU wall-hours).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
-from repro.core.provider import t4_catalog
+from repro.core.provider import ProviderSpec, t4_catalog
 from repro.core.simulator import CloudSimulator, SimConfig
 
 
@@ -97,12 +97,34 @@ class CampaignController:
 
 
 def replay_paper_campaign(budget: float = 58000.0, seed: int = 2021,
-                          sim_cfg: Optional[SimConfig] = None):
-    """Run the full two-week exercise; returns (results, controller)."""
+                          sim_cfg: Optional[SimConfig] = None,
+                          engine: Optional[str] = None):
+    """Run the full two-week exercise; returns (results, controller).
+
+    ``engine`` selects the simulation engine ("array" | "object"); both
+    produce matching totals (tests/test_fleet_engine.py)."""
     cfg = sim_cfg or SimConfig(seed=seed)
-    sim = CloudSimulator(t4_catalog(), budget, cfg)
+    sim = CloudSimulator(t4_catalog(), budget, cfg, engine=engine)
     ctl = CampaignController(sim)
     ctl.inject_ce_outage()
+    sim.run_until(cfg.duration_h)
+    return sim.results(), ctl
+
+
+def run_campaign(catalog: Dict[str, ProviderSpec], budget: float,
+                 ramp: Tuple[RampStage, ...] = PAPER_RAMP,
+                 sim_cfg: Optional[SimConfig] = None,
+                 engine: Optional[str] = None,
+                 outage: bool = False):
+    """Campaign runner for catalogs beyond the T4-only replay — e.g. the
+    §III heterogeneous pool (``provider.heterogeneous_catalog()``) or a
+    capacity-scaled one for 100k-instance studies.  Returns
+    (results, controller)."""
+    cfg = sim_cfg or SimConfig()
+    sim = CloudSimulator(catalog, budget, cfg, engine=engine)
+    ctl = CampaignController(sim, ramp=ramp)
+    if outage:
+        ctl.inject_ce_outage()
     sim.run_until(cfg.duration_h)
     return sim.results(), ctl
 

@@ -1,0 +1,648 @@
+"""Vectorized struct-of-arrays fleet engine for CloudSimulator.
+
+The seed engine (provisioner.py + overlay.py) keeps every instance, pilot
+and job as a dataclass and walks Python dicts on every 15-minute tick —
+fine at the paper's 2k GPUs, hopeless at the 100k-instance campaigns that
+HEPCloud-scale bursts imply.  This module keeps the *same tick semantics*
+but stores the fleet as parallel numpy arrays (``started_at``,
+``ended_at``, ``last_charged``, ``job_row``, ...) so preemption sampling,
+billing, lease/NAT checks, matchmaking and job progress are per-tick array
+ops.
+
+Equivalence with the object engine is exact, not approximate: random draws
+are consumed per group in instance-creation order (``rng.random(k)`` reads
+the same PCG64 stream as ``k`` scalar draws), pilots are registered and
+reaped in the same order, and re-queued jobs enter the queue in the same
+positions — property-tested in tests/test_fleet_engine.py by replaying the
+paper campaign on both engines at seed 2021.
+
+Dead instances are compacted out of the arrays once fully billed (their
+billed hours are folded into per-group aggregates), so billing cost tracks
+the *live* fleet, not every instance ever created.
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.budget import BudgetLedger
+from repro.core.overlay import Job
+from repro.core.provider import ProviderSpec
+from repro.core.provisioner import Instance
+
+_ids = itertools.count()
+
+# pilot lifecycle states (per instance row)
+_NO_PILOT = 0      # instance created, pilot not yet registered (pre-sync)
+_PILOT_LIVE = 1
+_PILOT_DEAD = 2    # reaped (instance gone) or NAT-dropped (instance alive)
+
+
+class ArrayFleetEngine:
+    """The whole control plane — groups, instances, pilots, jobs — as
+    struct-of-arrays with one vectorized pass per tick."""
+
+    def __init__(self, catalog: Dict[str, ProviderSpec],
+                 ledger: Optional[BudgetLedger], rng: np.random.Generator,
+                 *, lease_interval_s: float = 120.0, spot: bool = True,
+                 job_wall_h: float = 4.0, job_checkpoint_h: float = 1.0,
+                 accept_policy: str = "icecube"):
+        self.catalog = catalog
+        self.ledger = ledger
+        self.rng = rng
+        self.lease_interval_s = lease_interval_s
+        self._spot = spot
+        self.job_wall_h = job_wall_h
+        self.job_checkpoint_h = job_checkpoint_h
+        self.accept_policy = accept_policy
+
+        # -- static per-group config, sorted exactly like the object
+        #    provisioner (cheapest first, stable) --------------------------
+        pairs = [(prov, region) for prov in catalog.values()
+                 for region in prov.regions]
+        pairs.sort(key=lambda pr: (
+            pr[0].spot_price_per_day if spot else
+            pr[0].ondemand_price_per_day, pr[0].name, pr[1].name))
+        self.g_provider = [p for p, _ in pairs]
+        self.g_region = [r for _, r in pairs]
+        G = len(pairs)
+        self.G = G
+        self.g_capacity = np.array([r.capacity for _, r in pairs],
+                                   dtype=np.int64)
+        self.g_pre_rate = np.array([r.preempt_rate_per_hour
+                                    for _, r in pairs])
+        self.g_pre_scale = np.array([r.preempt_scale_at_full
+                                     for _, r in pairs])
+        self.g_connected = np.array(
+            [lease_interval_s < p.nat_idle_timeout_s for p, _ in pairs])
+        self.g_target = np.zeros(G, dtype=np.int64)
+        self.global_target = 0
+        # billed hours folded in at compaction time (conservation view)
+        self.g_retired_hours = np.zeros(G)
+        self.retired_count = 0
+        # compacted rows, kept as cold append-only arrays so
+        # all_instances() stays complete without the hot path rescanning
+        # them (id, group, start, end, preempted, last_charged)
+        self._retired_cols: List[np.ndarray] = []
+
+        # -- instance/pilot SoA ------------------------------------------
+        self.n = 0
+        cap = 1024
+        self.i_group = np.zeros(cap, dtype=np.int32)
+        self.i_id = np.zeros(cap, dtype=np.int64)
+        self.i_start = np.zeros(cap)
+        self.i_end = np.full(cap, np.nan)          # nan == alive
+        self.i_preempted = np.zeros(cap, dtype=bool)
+        self.i_last_charged = np.zeros(cap)
+        self.i_pilot = np.zeros(cap, dtype=np.int8)
+        self.i_pilot_order = np.zeros(cap, dtype=np.int64)
+        self.i_job = np.full(cap, -1, dtype=np.int64)
+        self._pilot_seq = 0
+
+        # -- job SoA + queue ----------------------------------------------
+        self.jn = 0
+        jcap = 4096
+        self.j_id = np.zeros(jcap, dtype=np.int64)
+        self.j_wall = np.zeros(jcap)
+        self.j_ckpt = np.zeros(jcap)
+        self.j_done = np.zeros(jcap)
+        self.j_attempts = np.zeros(jcap, dtype=np.int32)
+        self.j_finished = np.full(jcap, np.nan)
+        self._job_seq = 0
+        self.queue: collections.deque = collections.deque()   # job rows
+        self.finished: List[int] = []                         # job rows
+
+        self.preemption_events = 0
+        self.nat_drop_events = 0
+        self.outage = False
+        self._busy_by_group = np.zeros(G, dtype=np.int64)
+
+        self.prov = ArrayProvisionerView(self)
+        self.ce = ArrayComputeElementView(self)
+
+    # -- spot flag (settable like MultiCloudProvisioner.spot; does NOT
+    #    re-sort groups — matches the object engine) ----------------------
+    @property
+    def spot(self) -> bool:
+        return self._spot
+
+    @spot.setter
+    def spot(self, v: bool):
+        self._spot = v
+
+    def rate_h(self, gi: int) -> float:
+        p = self.g_provider[gi]
+        return (p.spot_price_per_day if self._spot
+                else p.ondemand_price_per_day) / 24.0
+
+    # -- growth helpers ---------------------------------------------------
+    def _grow_instances(self, extra: int):
+        need = self.n + extra
+        cap = len(self.i_id)
+        if need <= cap:
+            return
+        new = max(need, cap * 2)
+
+        def g(a, fill=0):
+            out = np.full(new, fill, dtype=a.dtype) if fill == fill else \
+                np.full(new, np.nan)
+            out[:self.n] = a[:self.n]
+            return out
+
+        self.i_group = g(self.i_group)
+        self.i_id = g(self.i_id)
+        self.i_start = g(self.i_start)
+        self.i_end = g(self.i_end, np.nan)
+        self.i_preempted = g(self.i_preempted)
+        self.i_last_charged = g(self.i_last_charged)
+        self.i_pilot = g(self.i_pilot)
+        self.i_pilot_order = g(self.i_pilot_order)
+        self.i_job = g(self.i_job, -1)
+
+    def _grow_jobs(self, extra: int):
+        need = self.jn + extra
+        cap = len(self.j_id)
+        if need <= cap:
+            return
+        new = max(need, cap * 2)
+
+        def g(a, fill=0):
+            out = np.full(new, fill, dtype=a.dtype) if fill == fill else \
+                np.full(new, np.nan)
+            out[:self.jn] = a[:self.jn]
+            return out
+
+        self.j_id = g(self.j_id)
+        self.j_wall = g(self.j_wall)
+        self.j_ckpt = g(self.j_ckpt)
+        self.j_done = g(self.j_done)
+        self.j_attempts = g(self.j_attempts)
+        self.j_finished = g(self.j_finished, np.nan)
+
+    # -- masks / counts ---------------------------------------------------
+    def _alive(self) -> np.ndarray:
+        return np.isnan(self.i_end[:self.n])
+
+    def live_counts(self) -> np.ndarray:
+        alive = self._alive()
+        return np.bincount(self.i_group[:self.n][alive], minlength=self.G)
+
+    def total_running(self) -> int:
+        return int(self._alive().sum())
+
+    def busy_count(self) -> int:
+        return int(((self.i_pilot[:self.n] == _PILOT_LIVE)
+                    & (self.i_job[:self.n] >= 0)).sum())
+
+    def busy_by_provider(self) -> Dict[str, int]:
+        busy = ((self.i_pilot[:self.n] == _PILOT_LIVE)
+                & (self.i_job[:self.n] >= 0))
+        counts = np.bincount(self.i_group[:self.n][busy], minlength=self.G)
+        out: Dict[str, int] = {}
+        for gi in range(self.G):
+            if counts[gi]:
+                name = self.g_provider[gi].name
+                out[name] = out.get(name, 0) + int(counts[gi])
+        return out
+
+    # -- instance lifecycle ----------------------------------------------
+    def _create(self, gi: int, k: int, now: float):
+        if k <= 0:
+            return
+        self._grow_instances(k)
+        s = slice(self.n, self.n + k)
+        self.i_group[s] = gi
+        self.i_id[s] = np.fromiter(itertools.islice(_ids, k), dtype=np.int64,
+                                   count=k)
+        self.i_start[s] = now
+        self.i_end[s] = np.nan
+        self.i_preempted[s] = False
+        self.i_last_charged[s] = now
+        self.i_pilot[s] = _NO_PILOT
+        self.i_pilot_order[s] = 0
+        self.i_job[s] = -1
+        self.n += k
+
+    def set_group_target(self, gi: int, n: int, now: float):
+        """Provider group semantics: fill to min(target, capacity)
+        immediately; stop the newest extras when above target."""
+        self.g_target[gi] = max(0, n)
+        rows = np.nonzero(self._alive()
+                          & (self.i_group[:self.n] == gi))[0]
+        live = len(rows)
+        fillable = int(min(self.g_target[gi], self.g_capacity[gi]))
+        if live < fillable:
+            self._create(gi, fillable - live, now)
+        elif live > self.g_target[gi]:
+            stop = rows[self.g_target[gi]:]
+            self.i_end[stop] = now        # stopped (not preempted)
+
+    def scale_to(self, n: int, now: float) -> int:
+        """Greedy cheapest-first fill, mirroring the object provisioner."""
+        self.global_target = max(0, n)
+        remaining = self.global_target
+        for gi in range(self.G):
+            want = min(remaining, int(self.g_capacity[gi]))
+            self.set_group_target(gi, want, now)
+            live = int((self._alive()
+                        & (self.i_group[:self.n] == gi)).sum())
+            remaining -= live
+        return self.total_running()
+
+    def deprovision_all(self, now: float):
+        for gi in range(self.G):
+            self.set_group_target(gi, 0, now)
+
+    def preempt_instance(self, inst_id: int, now: float):
+        """External preemption by instance id (group-view API)."""
+        idx = np.searchsorted(self.i_id[:self.n], inst_id)
+        if idx < self.n and self.i_id[idx] == inst_id \
+                and np.isnan(self.i_end[idx]):
+            self.i_end[idx] = now
+            self.i_preempted[idx] = True
+
+    # -- tick phases (ordering mirrors CloudSimulator.step exactly) -------
+    def maintain_groups(self, now: float):
+        counts = self.live_counts()
+        fillable = np.minimum(self.g_target, self.g_capacity)
+        for gi in np.nonzero(counts < fillable)[0]:
+            self.set_group_target(gi, int(self.g_target[gi]), now)
+
+    def _requeue(self, rows: np.ndarray):
+        """Jobs of lost pilots return to the FRONT of the queue, work
+        floored to the last checkpoint.  ``appendleft`` per pilot in pilot
+        order — same final queue layout as the object engine."""
+        jr = self.i_job[rows]
+        has_job = jr >= 0
+        jrows = jr[has_job]
+        self.j_done[jrows] = (np.floor_divide(self.j_done[jrows],
+                                              self.j_ckpt[jrows])
+                              * self.j_ckpt[jrows])
+        for j in jrows:
+            self.queue.appendleft(int(j))
+        self.i_job[rows] = -1
+        return int(has_job.sum())
+
+    def sync_pilots(self, now: float):
+        # register: one pilot per live, pilotless instance, visited in
+        # group (price) order then creation order — the object engine's
+        # live_instances() order
+        alive = self._alive()
+        fresh = alive & (self.i_pilot[:self.n] == _NO_PILOT)
+        if fresh.any():
+            for gi in range(self.G):
+                rows = np.nonzero(fresh & (self.i_group[:self.n] == gi))[0]
+                k = len(rows)
+                if k:
+                    self.i_pilot[rows] = _PILOT_LIVE
+                    self.i_pilot_order[rows] = np.arange(
+                        self._pilot_seq, self._pilot_seq + k)
+                    self._pilot_seq += k
+        # reap: pilots whose instance is gone, in registration order
+        lost = (~alive) & (self.i_pilot[:self.n] == _PILOT_LIVE)
+        if lost.any():
+            rows = np.nonzero(lost)[0]
+            rows = rows[np.argsort(self.i_pilot_order[rows], kind="stable")]
+            self.preemption_events += self._requeue(rows)
+            self.i_pilot[rows] = _PILOT_DEAD
+
+    def sample_preemptions(self, now: float, dt: float):
+        alive = self._alive()
+        counts = np.bincount(self.i_group[:self.n][alive], minlength=self.G)
+        for gi in range(self.G):
+            rows = np.nonzero(alive & (self.i_group[:self.n] == gi))[0]
+            if not len(rows):
+                continue
+            util = counts[gi] / max(1, int(self.g_capacity[gi]))
+            rate = self.g_pre_rate[gi] * (
+                1.0 + (self.g_pre_scale[gi] - 1.0) * util)
+            hits = rows[self.rng.random(len(rows)) < rate * dt]
+            if not len(hits):
+                continue
+            self.i_end[hits] = now
+            self.i_preempted[hits] = True
+            piloted = hits[self.i_pilot[hits] == _PILOT_LIVE]
+            self.preemption_events += self._requeue(piloted)
+            self.i_pilot[piloted] = _PILOT_DEAD
+
+    def next_job_id(self) -> int:
+        self._job_seq += 1
+        return self._job_seq
+
+    def submit_jobs(self, k: int, *, wall_h=None, ckpt_h=None):
+        """Batch-append k fresh jobs to the back of the queue."""
+        if k <= 0:
+            return
+        self._grow_jobs(k)
+        s = slice(self.jn, self.jn + k)
+        self.j_id[s] = np.arange(self._job_seq + 1, self._job_seq + k + 1)
+        self._job_seq += k
+        self.j_wall[s] = self.job_wall_h if wall_h is None else wall_h
+        self.j_ckpt[s] = self.job_checkpoint_h if ckpt_h is None else ckpt_h
+        self.j_done[s] = 0.0
+        self.j_attempts[s] = 0
+        self.j_finished[s] = np.nan
+        self.queue.extend(range(self.jn, self.jn + k))
+        self.jn += k
+
+    def submit_job(self, job: Job):
+        """Append one externally-built Job, preserving its identity and
+        checkpointed progress (the object CE's submit contract)."""
+        self._grow_jobs(1)
+        i = self.jn
+        self.j_id[i] = job.id
+        self._job_seq = max(self._job_seq, job.id)
+        self.j_wall[i] = job.wall_h
+        self.j_ckpt[i] = job.checkpoint_period_h
+        self.j_done[i] = job.done_h
+        self.j_attempts[i] = job.attempts
+        self.j_finished[i] = np.nan
+        self.queue.append(i)
+        self.jn += 1
+
+    def ensure_jobs(self, min_queue: int):
+        self.submit_jobs(min_queue - len(self.queue))
+
+    def match(self, now: float) -> int:
+        if self.outage:
+            return 0
+        idle = np.nonzero((self.i_pilot[:self.n] == _PILOT_LIVE)
+                          & (self.i_job[:self.n] < 0))[0]
+        k = min(len(idle), len(self.queue))
+        if k <= 0:
+            return 0
+        idle = idle[np.argsort(self.i_pilot_order[idle],
+                               kind="stable")][:k]
+        jobs = np.fromiter((self.queue.popleft() for _ in range(k)),
+                           dtype=np.int64, count=k)
+        self.i_job[idle] = jobs
+        self.j_attempts[jobs] += 1
+        return k
+
+    def advance(self, dt: float, now: float):
+        busy = ((self.i_pilot[:self.n] == _PILOT_LIVE)
+                & (self.i_job[:self.n] >= 0))
+        # NAT drops: lease renewals lost to the provider's idle timeout
+        dropped = busy & ~self.g_connected[self.i_group[:self.n]]
+        if dropped.any():
+            rows = np.nonzero(dropped)[0]
+            rows = rows[np.argsort(self.i_pilot_order[rows], kind="stable")]
+            self.nat_drop_events += len(rows)
+            # a NAT drop is a pilot loss: the job's return to queue counts
+            # as a preemption, exactly like the object engine's pilot_lost
+            self.preemption_events += self._requeue(rows)
+            self.i_pilot[rows] = _PILOT_DEAD
+            busy &= ~dropped
+        # job progress
+        rows = np.nonzero(busy)[0]
+        if len(rows):
+            jr = self.i_job[rows]
+            self.j_done[jr] += dt
+            fin = self.j_done[jr] >= self.j_wall[jr]
+            if fin.any():
+                done_rows = rows[fin]
+                done_jobs = jr[fin]
+                order = np.argsort(self.i_pilot_order[done_rows],
+                                   kind="stable")
+                self.j_finished[done_jobs] = now
+                self.finished.extend(int(j) for j in done_jobs[order])
+                self.i_job[done_rows] = -1
+
+    # -- billing + compaction ---------------------------------------------
+    def bill(self, now: float) -> float:
+        if self.ledger is None:
+            return 0.0
+        end_eff = np.where(np.isnan(self.i_end[:self.n]), now,
+                           self.i_end[:self.n])
+        dh = end_eff - self.i_last_charged[:self.n]
+        total = 0.0
+        for gi in range(self.G):
+            sel = (self.i_group[:self.n] == gi) & (dh > 0)
+            if not sel.any():
+                continue
+            hours = float(dh[sel].sum())
+            amount = hours * self.rate_h(gi)
+            self.ledger.charge(self.g_provider[gi].name, amount, now,
+                               note=self.g_region[gi].name)
+            self.i_last_charged[:self.n][sel] = end_eff[sel]
+            total += amount
+        self.compact()
+        return total
+
+    def compact(self):
+        """Drop dead, fully-billed rows; fold their billed hours into
+        per-group aggregates so conservation stays checkable."""
+        dead = (~np.isnan(self.i_end[:self.n])
+                & (self.i_pilot[:self.n] != _PILOT_LIVE)
+                & (self.i_last_charged[:self.n] >= self.i_end[:self.n]))
+        nd = int(dead.sum())
+        if nd < 512 or nd * 4 < self.n:
+            return
+        rows = np.nonzero(dead)[0]
+        hours = self.i_last_charged[rows] - self.i_start[rows]
+        np.add.at(self.g_retired_hours, self.i_group[rows], hours)
+        self.retired_count += nd
+        self._retired_cols.append(np.stack([
+            self.i_id[rows].astype(float), self.i_group[rows].astype(float),
+            self.i_start[rows], self.i_end[rows],
+            self.i_preempted[rows].astype(float),
+            self.i_last_charged[rows]]))
+        keep = np.nonzero(~dead)[0]
+        for name in ("i_group", "i_id", "i_start", "i_end", "i_preempted",
+                     "i_last_charged", "i_pilot", "i_pilot_order", "i_job"):
+            arr = getattr(self, name)
+            arr[:len(keep)] = arr[keep]
+            setattr(self, name, arr)
+        self.n = len(keep)
+
+    def billed_hours_by_group(self) -> np.ndarray:
+        """Total instance-hours billed so far per group, including
+        compacted-away instances (spent$ == sum(hours x rate))."""
+        out = self.g_retired_hours.copy()
+        hours = self.i_last_charged[:self.n] - self.i_start[:self.n]
+        np.add.at(out, self.i_group[:self.n], hours)
+        return out
+
+    # -- the full tick, phase order identical to the object step ----------
+    def tick(self, now: float, dt: float, min_queue: int):
+        self.maintain_groups(now)
+        self.sync_pilots(now)
+        self.sample_preemptions(now, dt)
+        self.sync_pilots(now)
+        self.ensure_jobs(min_queue)
+        self.match(now)
+        self.advance(dt, now)
+        self.bill(now)
+        return self.total_running(), self.busy_count()
+
+    # -- dataclass views --------------------------------------------------
+    def instance_views(self, rows: np.ndarray) -> List[Instance]:
+        out = []
+        for r in rows:
+            gi = int(self.i_group[r])
+            end = float(self.i_end[r])
+            pre = end if (end == end and self.i_preempted[r]) else None
+            stop = end if (end == end and not self.i_preempted[r]) else None
+            out.append(Instance(int(self.i_id[r]),
+                                self.g_provider[gi].name,
+                                self.g_region[gi].name,
+                                float(self.i_start[r]),
+                                preempted_at=pre, stopped_at=stop,
+                                last_charged=float(
+                                    self.i_last_charged[r])))
+        return out
+
+
+class ArrayGroupView:
+    """InstanceGroup-shaped window onto one group's slice of the arrays."""
+
+    def __init__(self, engine: ArrayFleetEngine, gi: int):
+        self._e = engine
+        self._gi = gi
+        self.provider = engine.g_provider[gi]
+        self.region = engine.g_region[gi]
+
+    @property
+    def target(self) -> int:
+        return int(self._e.g_target[self._gi])
+
+    @property
+    def running(self) -> List[Instance]:
+        e = self._e
+        rows = np.nonzero(e._alive() & (e.i_group[:e.n] == self._gi))[0]
+        return e.instance_views(rows)
+
+    def set_target(self, n: int, now: float):
+        self._e.set_group_target(self._gi, n, now)
+
+    def preempt(self, inst_id: int, now: float):
+        self._e.preempt_instance(inst_id, now)
+
+    def utilization(self) -> float:
+        e = self._e
+        live = int((e._alive() & (e.i_group[:e.n] == self._gi)).sum())
+        return live / max(1, int(e.g_capacity[self._gi]))
+
+
+class ArrayProvisionerView:
+    """MultiCloudProvisioner-compatible facade over the array engine."""
+
+    def __init__(self, engine: ArrayFleetEngine):
+        self._e = engine
+        self.catalog = engine.catalog
+        self.groups = [ArrayGroupView(engine, gi)
+                       for gi in range(engine.G)]
+
+    @property
+    def spot(self) -> bool:
+        return self._e.spot
+
+    @spot.setter
+    def spot(self, v: bool):
+        self._e.spot = v
+
+    @property
+    def global_target(self) -> int:
+        return self._e.global_target
+
+    def scale_to(self, n: int, now: float) -> int:
+        return self._e.scale_to(n, now)
+
+    def deprovision_all(self, now: float):
+        self._e.deprovision_all(now)
+
+    def bill(self, now: float) -> float:
+        return self._e.bill(now)
+
+    def total_running(self) -> int:
+        return self._e.total_running()
+
+    def running_by_provider(self) -> Dict[str, int]:
+        e = self._e
+        counts = e.live_counts()
+        out: Dict[str, int] = {}
+        for gi in range(e.G):
+            name = e.g_provider[gi].name
+            out[name] = out.get(name, 0) + int(counts[gi])
+        return out
+
+    def live_instances(self):
+        e = self._e
+        yield from e.instance_views(np.nonzero(e._alive())[0])
+
+    def all_instances(self):
+        """Every instance ever created: compacted (retired) first, then
+        the live arrays — mirrors the object provisioner's view."""
+        e = self._e
+        for cols in e._retired_cols:
+            ids, groups, starts, ends, pres, charged = cols
+            for j in range(cols.shape[1]):
+                gi = int(groups[j])
+                pre = float(ends[j]) if pres[j] else None
+                stop = None if pres[j] else float(ends[j])
+                yield Instance(int(ids[j]), e.g_provider[gi].name,
+                               e.g_region[gi].name, float(starts[j]),
+                               preempted_at=pre, stopped_at=stop,
+                               last_charged=float(charged[j]))
+        yield from e.instance_views(np.arange(e.n))
+
+
+class ArrayComputeElementView:
+    """ComputeElement-compatible facade (queue/finished hold job ROWS)."""
+
+    def __init__(self, engine: ArrayFleetEngine):
+        self._e = engine
+        self.accept_policy = engine.accept_policy
+        self.lease_interval_s = engine.lease_interval_s
+
+    @property
+    def queue(self):
+        return self._e.queue
+
+    @property
+    def finished(self):
+        return self._e.finished
+
+    @property
+    def outage(self) -> bool:
+        return self._e.outage
+
+    @outage.setter
+    def outage(self, v: bool):
+        self._e.outage = v
+
+    @property
+    def preemption_events(self) -> int:
+        return self._e.preemption_events
+
+    @property
+    def nat_drop_events(self) -> int:
+        return self._e.nat_drop_events
+
+    def next_job_id(self) -> int:
+        return self._e.next_job_id()
+
+    def submit(self, job: Job):
+        if job.policy != self.accept_policy:
+            raise PermissionError(
+                f"CE policy {self.accept_policy!r} rejects {job.policy!r}")
+        self._e.submit_job(job)
+
+    def match(self, now_h: float) -> int:
+        return self._e.match(now_h)
+
+    def busy_by_provider(self) -> Dict[str, int]:
+        return self._e.busy_by_provider()
+
+    def stats(self) -> dict:
+        e = self._e
+        live = int((e.i_pilot[:e.n] == _PILOT_LIVE).sum())
+        return {"pilots_live": live,
+                "pilots_busy": e.busy_count(),
+                "queued": len(e.queue),
+                "finished": len(e.finished),
+                "preemptions": e.preemption_events,
+                "nat_drops": e.nat_drop_events}

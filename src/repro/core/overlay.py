@@ -79,13 +79,23 @@ class ComputeElement:
         self.preemption_events = 0
         self.nat_drop_events = 0
         self._pilot_ids = 0
+        self._job_ids = 0
         self.outage = False
 
     # -- job / pilot lifecycle -------------------------------------------
+    def next_job_id(self) -> int:
+        """Monotonic job-ID source. The CE owns the counter so IDs stay
+        unique across re-queues: deriving IDs from queue+finished lengths
+        (the seed formula) ignored jobs currently attached to pilots and
+        could collide."""
+        self._job_ids += 1
+        return self._job_ids
+
     def submit(self, job: Job):
         if job.policy != self.accept_policy:
             raise PermissionError(
                 f"CE policy {self.accept_policy!r} rejects {job.policy!r}")
+        self._job_ids = max(self._job_ids, job.id)
         self.queue.append(job)
 
     def register_pilot(self, instance_id: int, provider: str,
@@ -147,6 +157,15 @@ class ComputeElement:
                     p.job = None
 
     # -- views ---------------------------------------------------------------
+    def busy_by_provider(self) -> Dict[str, int]:
+        """#pilots currently running a job, per provider (feeds the
+        heterogeneous-catalog EFLOP accounting)."""
+        out: Dict[str, int] = {}
+        for p in self.pilots.values():
+            if not p.dead and p.job is not None:
+                out[p.provider] = out.get(p.provider, 0) + 1
+        return out
+
     def stats(self) -> dict:
         live = [p for p in self.pilots.values() if not p.dead]
         return {"pilots_live": len(live),

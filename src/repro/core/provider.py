@@ -12,8 +12,8 @@ Catalog defaults reproduce the paper's observations:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, Tuple
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -28,12 +28,16 @@ class RegionSpec:
 @dataclass(frozen=True)
 class ProviderSpec:
     name: str
-    accel: str                    # "t4" | "v5e-slice"
+    accel: str                    # "t4" | "v100" | ... | "v5e-slice"
     spot_price_per_day: float     # $ per accelerator-day (spot)
     ondemand_price_per_day: float
     regions: Tuple[RegionSpec, ...]
     nat_idle_timeout_s: float = float("inf")
     group_mechanism: str = ""     # VMSS / InstanceGroups / SpotFleet
+    # fp32 peak of this provider's accelerator; None -> use the simulator's
+    # homogeneous SimConfig.accel_tflops (keeps the T4-only replay's EFLOP
+    # accounting bit-identical to the seed engine)
+    fp32_tflops: Optional[float] = None
 
     @property
     def total_capacity(self) -> int:
@@ -94,5 +98,70 @@ def tpu_catalog() -> Dict[str, ProviderSpec]:
     }
 
 
-# T4 fp32 peak (paper's EFLOP accounting): 8.141 TFLOP/s
+# fp32 peaks (paper's EFLOP accounting; §III GPU generations): TFLOP/s
 T4_FP32_TFLOPS = 8.141
+V100_FP32_TFLOPS = 14.13
+P100_FP32_TFLOPS = 9.3
+M60_FP32_TFLOPS = 4.825          # per GPU (half a Tesla M60 board)
+
+
+def heterogeneous_catalog(capacity_scale: float = 1.0
+                          ) -> Dict[str, ProviderSpec]:
+    """The paper's §III heterogeneous pool: alongside the T4 workhorses,
+    the providers offered V100 / P100 / M60 spot (and on-demand) SKUs —
+    the mix the earlier pre-exascale burst actually ran on. One
+    ProviderSpec per (cloud, GPU) pair so the price-priority provisioner
+    can trade $/day against delivered fp32 TFLOPS.
+
+    ``capacity_scale`` multiplies every region's capacity, letting the
+    fleet-scale benchmark express 100k-instance campaigns."""
+    def _cap(n: int) -> int:
+        return max(1, int(n * capacity_scale))
+
+    def _regions(*specs) -> Tuple[RegionSpec, ...]:
+        return tuple(replace(r, capacity=_cap(r.capacity)) for r in specs)
+
+    cat: Dict[str, ProviderSpec] = {}
+    for name, spec in t4_catalog().items():
+        cat[f"{name}-t4"] = replace(
+            spec, name=f"{name}-t4", regions=_regions(*spec.regions),
+            fp32_tflops=T4_FP32_TFLOPS)
+    cat.update({
+        "azure-v100": ProviderSpec(
+            "azure-v100", "v100", spot_price_per_day=13.2,
+            ondemand_price_per_day=73.4, fp32_tflops=V100_FP32_TFLOPS,
+            regions=_regions(RegionSpec("eastus", 150, 0.0020),
+                             RegionSpec("westeurope", 100, 0.0025)),
+            nat_idle_timeout_s=240.0, group_mechanism="VMSS"),
+        "azure-m60": ProviderSpec(
+            "azure-m60", "m60", spot_price_per_day=2.7,
+            ondemand_price_per_day=27.4, fp32_tflops=M60_FP32_TFLOPS,
+            regions=_regions(RegionSpec("eastus", 200, 0.0012),
+                             RegionSpec("southcentralus", 120, 0.0018)),
+            nat_idle_timeout_s=240.0, group_mechanism="VMSS"),
+        "gcp-v100": ProviderSpec(
+            "gcp-v100", "v100", spot_price_per_day=17.8,
+            ondemand_price_per_day=59.5, fp32_tflops=V100_FP32_TFLOPS,
+            regions=_regions(RegionSpec("us-central1", 200, 0.015),
+                             RegionSpec("europe-west4", 100, 0.018)),
+            group_mechanism="InstanceGroups"),
+        "gcp-p100": ProviderSpec(
+            "gcp-p100", "p100", spot_price_per_day=10.3,
+            ondemand_price_per_day=35.0, fp32_tflops=P100_FP32_TFLOPS,
+            regions=_regions(RegionSpec("us-east1", 250, 0.012),
+                             RegionSpec("europe-west1", 150, 0.014)),
+            group_mechanism="InstanceGroups"),
+        "aws-v100": ProviderSpec(
+            "aws-v100", "v100", spot_price_per_day=22.0,
+            ondemand_price_per_day=73.4, fp32_tflops=V100_FP32_TFLOPS,
+            regions=_regions(RegionSpec("us-east-1", 200, 0.018),
+                             RegionSpec("us-west-2", 150, 0.020)),
+            group_mechanism="SpotFleet"),
+        "aws-m60": ProviderSpec(
+            "aws-m60", "m60", spot_price_per_day=3.4,
+            ondemand_price_per_day=15.6, fp32_tflops=M60_FP32_TFLOPS,
+            regions=_regions(RegionSpec("us-east-1", 250, 0.014),
+                             RegionSpec("eu-west-1", 150, 0.016)),
+            group_mechanism="SpotFleet"),
+    })
+    return cat

@@ -54,10 +54,24 @@ class InstanceGroup:
     region: RegionSpec
     target: int = 0
     instances: Dict[int, Instance] = field(default_factory=dict)
+    retired: List[Instance] = field(default_factory=list)
 
     @property
     def running(self) -> List[Instance]:
         return [i for i in self.instances.values() if i.alive]
+
+    def compact(self):
+        """Move dead, fully-billed instances out of the live dict so
+        ``bill()``/``running`` stop rescanning every instance ever
+        created (a two-week replay creates ~100k of them)."""
+        dead = [i for i in self.instances.values()
+                if not i.alive and i.last_charged >= (
+                    i.preempted_at if i.preempted_at is not None
+                    else i.stopped_at)]
+        if len(dead) * 4 > len(self.instances):
+            for i in dead:
+                del self.instances[i.id]
+            self.retired.extend(dead)
 
     def set_target(self, n: int, now: float):
         """Provider semantics: fill to min(target, capacity available),
@@ -143,6 +157,7 @@ class MultiCloudProvisioner:
                                        note=f"{g.region.name}")
                     inst.last_charged = end
                     total += amount
+            g.compact()
         return total
 
     # -- views ---------------------------------------------------------------
@@ -158,6 +173,7 @@ class MultiCloudProvisioner:
 
     def all_instances(self):
         for g in self.groups:
+            yield from g.retired
             yield from g.instances.values()
 
     def live_instances(self):

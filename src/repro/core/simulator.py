@@ -5,6 +5,21 @@ Drives provisioner + overlay + budget together so campaign.py can replay
 the paper's two-week exercise and the benchmarks can compare simulated
 totals (GPU-days, $, EFLOP-hours, preemption counts) against the paper's
 published numbers (§IV/§V).
+
+Two interchangeable engines drive the tick:
+
+  * ``engine="array"`` (default): the vectorized struct-of-arrays engine
+    (core/fleet.py) — instances/pilots/jobs live in parallel numpy arrays
+    and every phase of the tick is an array op.  This is what makes
+    100k-instance campaigns tractable (benchmarks/fleet_scale.py).
+  * ``engine="object"``: the seed dataclass engine (one Python object per
+    instance/pilot/job).  Kept as the executable specification; the two
+    engines consume the RNG identically and produce matching results
+    (tests/test_fleet_engine.py).
+
+``sim.prov`` and ``sim.ce`` expose the same API either way (the array
+engine provides thin dataclass view layers), so campaign.py, the examples
+and the tests are engine-agnostic.
 """
 from __future__ import annotations
 
@@ -30,6 +45,8 @@ class SimConfig:
     accel_tflops: float = T4_FP32_TFLOPS
     overhead_per_day: float = 390.0     # CE VM, storage, egress ("all
     #                                     included" in the paper's $58k)
+    min_queue: int = 4000               # CE queue top-up level per tick
+    engine: str = "array"               # "array" (vectorized) | "object"
 
 
 @dataclass
@@ -44,34 +61,53 @@ class TickStats:
 
 class CloudSimulator:
     def __init__(self, catalog: Dict[str, ProviderSpec], budget: float,
-                 cfg: SimConfig = SimConfig()):
+                 cfg: SimConfig = SimConfig(),
+                 engine: Optional[str] = None):
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
         self.ledger = BudgetLedger(budget)
-        self.prov = MultiCloudProvisioner(catalog, self.ledger)
-        self.ce = ComputeElement(lease_interval_s=cfg.lease_interval_s)
+        self.engine_kind = engine or cfg.engine
+        if self.engine_kind == "array":
+            from repro.core.fleet import ArrayFleetEngine
+            self.fleet = ArrayFleetEngine(
+                catalog, self.ledger, self.rng,
+                lease_interval_s=cfg.lease_interval_s,
+                job_wall_h=cfg.job_wall_h,
+                job_checkpoint_h=cfg.job_checkpoint_h)
+            self.prov = self.fleet.prov
+            self.ce = self.fleet.ce
+        elif self.engine_kind == "object":
+            self.fleet = None
+            self.prov = MultiCloudProvisioner(catalog, self.ledger)
+            self.ce = ComputeElement(lease_interval_s=cfg.lease_interval_s)
+        else:
+            raise ValueError(f"unknown engine {self.engine_kind!r}")
         self.now = 0.0
         self.history: List[TickStats] = []
         self._pilot_by_instance: Dict[int, int] = {}
         self._events: List[tuple] = []   # (t_h, callable) one-shots
         self.accel_hours = 0.0           # delivered accelerator wall hours
         self.busy_hours = 0.0            # hours with a job attached
+        self.busy_hours_by_provider: Dict[str, float] = {}
 
     # -- scheduling ---------------------------------------------------------
     def at(self, t_h: float, fn: Callable[["CloudSimulator"], None]):
         self._events.append((t_h, fn))
         self._events.sort(key=lambda e: e[0])
 
-    def ensure_jobs(self, min_queue: int = 4000):
+    def ensure_jobs(self, min_queue: Optional[int] = None):
         """IceCube's queue was effectively infinite; keep it topped up."""
-        need = min_queue - len(self.ce.queue)
-        for i in range(max(0, need)):
-            self.ce.submit(Job(id=len(self.ce.finished) + len(self.ce.queue)
-                               + i + 1,
+        mq = self.cfg.min_queue if min_queue is None else min_queue
+        if self.fleet is not None:
+            self.fleet.ensure_jobs(mq)
+            return
+        need = mq - len(self.ce.queue)
+        for _ in range(max(0, need)):
+            self.ce.submit(Job(id=self.ce.next_job_id(),
                                wall_h=self.cfg.job_wall_h,
                                checkpoint_period_h=self.cfg.job_checkpoint_h))
 
-    # -- core tick ------------------------------------------------------------
+    # -- object-engine tick phases -----------------------------------------
     def _sync_pilots(self):
         """Every live instance runs exactly one registered pilot; pilots on
         stopped/preempted instances are reaped (their jobs re-queue)."""
@@ -114,21 +150,30 @@ class CloudSimulator:
         while self._events and self._events[0][0] <= self.now:
             _, fn = self._events.pop(0)
             fn(self)
-        self._maintain_groups()
-        self._sync_pilots()
-        self._sample_preemptions(dt)
-        self._sync_pilots()
-        self.ensure_jobs()
-        self.ce.match(self.now)
-        self.ce.advance(dt, self.now)
-        self.prov.bill(self.now)
+        if self.fleet is not None:
+            running, busy = self.fleet.tick(self.now, dt,
+                                            self.cfg.min_queue)
+            busy_by_prov = self.fleet.busy_by_provider()
+        else:
+            self._maintain_groups()
+            self._sync_pilots()
+            self._sample_preemptions(dt)
+            self._sync_pilots()
+            self.ensure_jobs()
+            self.ce.match(self.now)
+            self.ce.advance(dt, self.now)
+            self.prov.bill(self.now)
+            running = self.prov.total_running()
+            busy = self.ce.stats()["pilots_busy"]
+            busy_by_prov = self.ce.busy_by_provider()
         if self.cfg.overhead_per_day > 0:
             self.ledger.charge("infra", self.cfg.overhead_per_day * dt / 24.0,
                                self.now, note="CE VM, storage, egress")
-        running = self.prov.total_running()
-        busy = self.ce.stats()["pilots_busy"]
         self.accel_hours += running * dt
         self.busy_hours += busy * dt
+        for prov_name, n in busy_by_prov.items():
+            self.busy_hours_by_provider[prov_name] = \
+                self.busy_hours_by_provider.get(prov_name, 0.0) + n * dt
         self.history.append(TickStats(self.now, running, busy,
                                       len(self.ce.queue),
                                       self.ledger.spent,
@@ -146,15 +191,29 @@ class CloudSimulator:
         tick's interval was never charged)."""
         self.prov.bill(self.now)
 
+    def _eflop_hours(self) -> float:
+        """fp32 EFLOP-hours delivered.  Homogeneous catalogs (no
+        per-provider fp32_tflops) use the seed formula; heterogeneous
+        catalogs weight each provider's busy hours by its GPU's peak."""
+        specs = self.prov.catalog.values()
+        if not any(p.fp32_tflops is not None for p in specs):
+            return self.busy_hours * self.cfg.accel_tflops * 1e12 / 1e18
+        tflops = {p.name: (p.fp32_tflops if p.fp32_tflops is not None
+                           else self.cfg.accel_tflops) for p in specs}
+        return sum(h * tflops.get(name, self.cfg.accel_tflops)
+                   for name, h in self.busy_hours_by_provider.items()
+                   ) * 1e12 / 1e18
+
     def results(self) -> dict:
         self.settle()
-        eflop_hours = (self.busy_hours * self.cfg.accel_tflops * 1e12
-                       / 1e18)
         return {
             "accel_hours": round(self.accel_hours, 1),
             "accel_days": round(self.accel_hours / 24.0, 1),
             "busy_hours": round(self.busy_hours, 1),
-            "eflop_hours_fp32": round(eflop_hours, 3),
+            "busy_hours_by_provider": {
+                k: round(v, 1)
+                for k, v in sorted(self.busy_hours_by_provider.items())},
+            "eflop_hours_fp32": round(self._eflop_hours(), 3),
             "cost": round(self.ledger.spent, 2),
             "cost_per_accel_day": round(
                 self.ledger.spent / max(self.accel_hours / 24.0, 1e-9), 2),

@@ -7,6 +7,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.sharding_ctx import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """Single v5e pod: (16,16)=(data,model), 256 chips.
@@ -14,19 +16,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     pure-DP axis the cloud provisioner grows/shrinks."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_elastic_mesh(n_pods: int, *, pod_shape=(16, 16)):
     """Mesh for an elastic pool of ``n_pods`` pods (n_pods >= 1). The pod
     axis is what core/elastic.py re-sizes when spot capacity changes."""
-    auto = jax.sharding.AxisType.Auto
     if n_pods == 1:
-        return jax.make_mesh(pod_shape, ("data", "model"),
-                             axis_types=(auto, auto))
-    return jax.make_mesh((n_pods,) + pod_shape, ("pod", "data", "model"),
-                         axis_types=(auto, auto, auto))
+        return make_mesh(pod_shape, ("data", "model"))
+    return make_mesh((n_pods,) + pod_shape, ("pod", "data", "model"))
 
 
 def make_host_mesh(shape=None, axes=("data", "model")):

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.sharding_ctx import current_mesh
+from repro.sharding_ctx import current_mesh, shard_map
 
 
 def _round8(n):
@@ -184,11 +184,11 @@ def apply_moe_sharded(p, x, moe, ffn_type, mesh):
         aux = E * jnp.sum(frac_tok * frac_prob) * moe.aux_loss_weight
         return yt.reshape(B_loc, S, D), aux
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn, mesh=mesh,
         in_specs=(x_spec, P(None, None), wi_spec, wi_spec, wo_spec),
         out_specs=(x_spec, P()),
-        check_vma=False)
+        check_replication=False)
     wg = p.get("wg", p["wi"])
     y, aux = fn(x, p["router"], p["wi"], wg, p["wo"])
     return y, aux

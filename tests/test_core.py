@@ -2,8 +2,11 @@
 preemption storm, provisioner semantics, campaign reproduction of the
 paper's published numbers, straggler policies. Property-based where the
 invariant is over arbitrary event sequences (hypothesis)."""
-import hypothesis.strategies as st_
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests degrade gracefully
+import hypothesis.strategies as st_
+
 from hypothesis import given, settings
 
 from repro.core.budget import BudgetLedger

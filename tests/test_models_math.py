@@ -6,6 +6,9 @@
   * sLSTM full-sequence == step-by-step decode
   * MoE capacity monotonicity (hypothesis)
 """
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests degrade gracefully
 import hypothesis.strategies as st_
 import jax
 import jax.numpy as jnp

@@ -2,14 +2,15 @@
 fallback, megatron pairing, EP layout, cache rules."""
 import jax
 import jax.numpy as jnp
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import sharding as sh
 from repro.configs import get_config, get_reduced
 from repro.launch import steps as st
+from repro.sharding_ctx import abstract_mesh
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = abstract_mesh((16, 16), ("data", "model"))
+MESH3 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _specs(tree, mesh=MESH):

@@ -3,6 +3,9 @@
 busy_hours <= accel_hours caught a real accounting bug during development
 (pilots surviving their stopped instances); these pin the whole family.
 """
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests degrade gracefully
 import hypothesis.strategies as st_
 from hypothesis import given, settings
 

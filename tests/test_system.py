@@ -111,9 +111,8 @@ def test_sharded_moe_equivalence_multidevice():
         from repro.configs.base import MoEConfig
         from repro.models import moe as moe_mod
         from repro.models.moe_sharded import apply_moe_sharded
-        auto = jax.sharding.AxisType.Auto
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(auto, auto))
+        from repro.sharding_ctx import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         moe = MoEConfig(num_experts=8, top_k=2, d_ff_expert=32,
                         capacity_factor=8.0)
         p = moe_mod.init_moe(jax.random.PRNGKey(1), 16, moe)
