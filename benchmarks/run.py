@@ -4,10 +4,17 @@ on indented lines below each row).
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run --only campaign
+    PYTHONPATH=src python -m benchmarks.run --only sweep --json BENCH.json
+
+``--json PATH`` additionally writes ``{name: {us_per_call, derived}}`` so
+the perf trajectory is machine-readable across PRs (the committed
+``BENCH_sweep.json`` is the sweep-engine baseline; CI uploads a fresh one
+per run as an artifact).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -15,14 +22,18 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None,
+                    help="also write {name: {us_per_call, derived}} here")
     args = ap.parse_args()
 
     from benchmarks import fleet_scale as fs
     from benchmarks import framework_benches as fb
     from benchmarks import paper_tables as pt
+    from benchmarks import sweep_scale as ss
 
     benches = [
         ("fleet_tick_speedup", fs.bench_fleet_tick_throughput),
+        ("sweep_campaign_speedup", ss.bench_sweep_throughput),
         ("fig1_fleet_timeline", pt.bench_fig1_fleet_timeline),
         ("fig2_gpu_hours_doubling", pt.bench_fig2_gpu_hours_doubling),
         ("claims_table_maxerr_pct", pt.bench_claims_table),
@@ -38,6 +49,7 @@ def main() -> None:
         benches = [(n, f) for n, f in benches if args.only in n]
 
     print("name,us_per_call,derived")
+    report = {}
     failures = 0
     for name, fn in benches:
         try:
@@ -45,11 +57,18 @@ def main() -> None:
             print(f"{name},{us:.1f},{derived}")
             for r in rows:
                 print(r)
+            report[name] = {"us_per_call": round(us, 1), "derived": derived}
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{name},NaN,ERROR")
             traceback.print_exc(limit=5)
+            report[name] = {"us_per_call": None, "derived": "ERROR"}
         sys.stdout.flush()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True, default=str)
+            f.write("\n")
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -1,0 +1,91 @@
+"""Sweep-scale benchmark: batched multi-campaign engine vs a sequential
+solo-campaign loop at paper scale.
+
+    PYTHONPATH=src python -m benchmarks.sweep_scale
+    PYTHONPATH=src python -m benchmarks.sweep_scale --lanes 16 \
+        --seq-lanes 2 --duration 84
+
+Prints ``name,us_per_call,derived`` CSV rows (run.py idiom) where
+``us_per_call`` is microseconds per simulated campaign on the batched
+engine and ``derived`` is the batched/sequential campaigns-per-second
+speedup.  The acceptance bar is >= 10x at B=64 paper-scale (336 h, 2k-GPU
+ramp) campaigns; the sequential baseline is timed on ``--seq-lanes``
+campaigns and extrapolated per-campaign (it is a plain
+``run_scenario()`` loop, so its per-campaign cost is constant).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import replace
+
+from repro.core.campaign import sweep_campaigns
+from repro.core.scenarios import Scenario
+
+
+def _scenario(duration_h: float) -> Scenario:
+    sc = Scenario()
+    if duration_h and duration_h != sc.duration_h:
+        sc = replace(sc, duration_h=duration_h)
+    return sc
+
+
+def time_sweep(lanes: int, seq_lanes: int, duration_h: float = 336.0):
+    """(batched s/campaign, sequential s/campaign, batched results)."""
+    sc = _scenario(duration_h)
+    seeds = list(range(lanes))
+    t0 = time.perf_counter()
+    sw = sweep_campaigns([sc], seeds, engine="batched")
+    batched_per = (time.perf_counter() - t0) / lanes
+    t0 = time.perf_counter()
+    sweep_campaigns([sc], seeds[:seq_lanes], engine="sequential")
+    seq_per = (time.perf_counter() - t0) / seq_lanes
+    return batched_per, seq_per, sw
+
+
+def bench_sweep_throughput():
+    """run.py-registered entry: B=16 quarter-length campaigns with a
+    2-lane sequential baseline, so the full bench suite (and the CI
+    smoke) stays fast; the standalone CLI runs the full B=64 bar."""
+    batched_per, seq_per, sw = time_sweep(16, 2, duration_h=84.0)
+    speedup = seq_per / batched_per
+    lane0 = sw.rows[0]
+    rows = [f"    batched {batched_per * 1e3:.0f} ms/campaign vs "
+            f"sequential {seq_per * 1e3:.0f} ms/campaign at B=16 "
+            f"(84h campaigns)",
+            f"    lane0: cost=${lane0['cost']:,.0f} "
+            f"accel_days={lane0['accel_days']:,.1f} "
+            f"preemptions={lane0['preemptions']}"]
+    return batched_per * 1e6, round(speedup, 1), rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--lanes", type=int, default=64,
+                    help="batched sweep width B")
+    ap.add_argument("--seq-lanes", type=int, default=4,
+                    help="campaigns timed for the sequential baseline")
+    ap.add_argument("--duration", type=float, default=336.0,
+                    help="campaign length in hours (336 = paper)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    batched_per, seq_per, sw = time_sweep(args.lanes, args.seq_lanes,
+                                          args.duration)
+    speedup = seq_per / batched_per
+    print(f"sweep_campaign_speedup_{args.lanes},{batched_per * 1e6:.1f},"
+          f"{speedup:.1f}")
+    print(f"    sequential {seq_per:.2f} s/campaign -> batched "
+          f"{batched_per:.2f} s/campaign at B={args.lanes} "
+          f"({1.0 / batched_per:.2f} campaigns/s)"
+          f" -> {speedup:.1f}x (bar: >=10x at B=64)")
+    summ = sw.summary(("cost", "accel_days", "preemptions"))["paper"]
+    print(f"    paper bands over {summ['seeds']} seeds: "
+          f"cost ${summ['cost']['mean']:,.0f} "
+          f"[{summ['cost']['p5']:,.0f}, {summ['cost']['p95']:,.0f}]  "
+          f"accel_days {summ['accel_days']['mean']:,.0f} "
+          f"[{summ['accel_days']['p5']:,.0f}, "
+          f"{summ['accel_days']['p95']:,.0f}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,12 +6,16 @@ budget       — CloudBank analogue: ledger, spend-rate, threshold alerts
 overlay      — OSG CE + glideinWMS analogue: pilots, leases, matchmaking
 simulator    — discrete-event cloud simulator binding the above
 campaign     — the paper's staged-ramp / outage / budget-cap controller
+scenarios    — what-if scenario library (spot mixes, outages, budgets)
+sweep        — batched multi-campaign engine: B campaigns, one array program
 elastic      — pod-pool -> mesh manager for synchronous SPMD training (TPU)
 straggler    — speculative re-execution + slow-pod eviction
 """
 from repro.core.budget import BudgetLedger  # noqa: F401
 from repro.core.campaign import (CampaignController, PAPER_RAMP,  # noqa: F401
-                                 replay_paper_campaign)
+                                 replay_paper_campaign, run_campaign,
+                                 sweep_campaigns)
+from repro.core.scenarios import Scenario, default_suite  # noqa: F401
 from repro.core.elastic import ElasticRunner, PodPool  # noqa: F401
 from repro.core.overlay import ComputeElement, Job, Pilot  # noqa: F401
 from repro.core.provider import t4_catalog, tpu_catalog  # noqa: F401

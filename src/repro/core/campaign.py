@@ -115,18 +115,54 @@ def run_campaign(catalog: Dict[str, ProviderSpec], budget: float,
                  ramp: Tuple[RampStage, ...] = PAPER_RAMP,
                  sim_cfg: Optional[SimConfig] = None,
                  engine: Optional[str] = None,
-                 outage: bool = False):
+                 outage: bool = False, *,
+                 outage_at_h: float = OUTAGE_AT_H,
+                 outage_duration_h: float = OUTAGE_DURATION_H,
+                 resume_target: int = POST_OUTAGE_TARGET,
+                 budget_floor_fraction: float = 0.2,
+                 downscale_target: int = POST_OUTAGE_TARGET):
     """Campaign runner for catalogs beyond the T4-only replay — e.g. the
     §III heterogeneous pool (``provider.heterogeneous_catalog()``) or a
-    capacity-scaled one for 100k-instance studies.  Returns
+    capacity-scaled one for 100k-instance studies.  The keyword-only
+    knobs expose the controller's outage timing and budget tripwire for
+    what-if scenarios (core/scenarios.py).  Returns
     (results, controller)."""
     cfg = sim_cfg or SimConfig()
     sim = CloudSimulator(catalog, budget, cfg, engine=engine)
-    ctl = CampaignController(sim, ramp=ramp)
+    ctl = CampaignController(sim, ramp=ramp,
+                             budget_floor_fraction=budget_floor_fraction,
+                             downscale_target=downscale_target)
     if outage:
-        ctl.inject_ce_outage()
+        ctl.inject_ce_outage(outage_at_h, outage_duration_h, resume_target)
     sim.run_until(cfg.duration_h)
     return sim.results(), ctl
+
+
+def sweep_campaigns(scenarios, seeds, *, engine: str = "batched"):
+    """Run every (scenario x seed) campaign and return a
+    ``sweep.SweepResult`` (per-lane results rows plus mean/p5/p95 summary
+    bands on the paper totals).
+
+    ``engine="batched"`` (default) ticks all lanes in lock-step on the
+    batched struct-of-arrays engine (core/sweep.py) — a 256-point sweep
+    pays the per-tick dispatch overhead once, not 256 times.
+    ``engine="sequential"`` loops solo ``CloudSimulator`` campaigns (the
+    reference semantics; every batched lane is bit-reproducible against
+    it at the same (seed, scenario))."""
+    from repro.core import sweep as sweep_mod
+    from repro.core.scenarios import run_scenario
+    scenarios = list(scenarios)          # tolerate one-shot iterators
+    seeds = [int(s) for s in seeds]
+    lanes = [(sc, seed) for sc in scenarios for seed in seeds]
+    if engine == "batched":
+        results = sweep_mod.run_batched(lanes)
+    elif engine == "sequential":
+        results = [run_scenario(sc, seed)[0] for sc, seed in lanes]
+    else:
+        raise ValueError(f"unknown sweep engine {engine!r}")
+    rows = [{"scenario": sc.name, "seed": seed, **res}
+            for (sc, seed), res in zip(lanes, results)]
+    return sweep_mod.SweepResult(rows)
 
 
 # IceCube baseline for the "approximate doubling" claim (abstract/Fig 2):

@@ -33,12 +33,41 @@ from repro.core.overlay import Job
 from repro.core.provider import ProviderSpec
 from repro.core.provisioner import Instance
 
-_ids = itertools.count()
-
 # pilot lifecycle states (per instance row)
 _NO_PILOT = 0      # instance created, pilot not yet registered (pre-sync)
 _PILOT_LIVE = 1
 _PILOT_DEAD = 2    # reaped (instance gone) or NAT-dropped (instance alive)
+
+
+# -- tick-phase primitives, shared with the batched sweep engine ----------
+# (core/sweep.py ticks B campaigns in lock-step; these are written to be
+# shape-polymorphic so one formula serves the scalar object path, the
+# per-group solo path and the [lanes x groups] batched path bit-identically)
+
+def preemption_rate(pre_rate, pre_scale, live, capacity):
+    """Per-instance preemption hazard at the group's current utilization
+    (spot pools get tighter as they fill — ``preempt_scale_at_full``)."""
+    util = live / np.maximum(1, capacity)
+    return pre_rate * (1.0 + (pre_scale - 1.0) * util)
+
+
+def checkpoint_floor(done, ckpt):
+    """Work surviving a preemption: floored to the last durable
+    checkpoint increment."""
+    return np.floor_divide(done, ckpt) * ckpt
+
+
+def segment_starts(counts: np.ndarray) -> np.ndarray:
+    """Start offset of each segment in a segment-major packed array."""
+    return np.cumsum(counts) - counts
+
+
+def segment_ranks(seg_of: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """Rank of each element within its segment, for segment-sorted
+    ``seg_of`` (the workhorse behind per-lane ID assignment, queue
+    placement and first-k selection in the batched engine)."""
+    return np.arange(len(seg_of)) - np.repeat(segment_starts(counts),
+                                              counts)
 
 
 class ArrayFleetEngine:
@@ -58,6 +87,10 @@ class ArrayFleetEngine:
         self.job_wall_h = job_wall_h
         self.job_checkpoint_h = job_checkpoint_h
         self.accept_policy = accept_policy
+        # per-engine: every simulator (and every sweep lane) numbers its
+        # instances from 0, independent of how many sims ran earlier in
+        # the process
+        self._ids = itertools.count()
 
         # -- static per-group config, sorted exactly like the object
         #    provisioner (cheapest first, stable) --------------------------
@@ -215,8 +248,8 @@ class ArrayFleetEngine:
         self._grow_instances(k)
         s = slice(self.n, self.n + k)
         self.i_group[s] = gi
-        self.i_id[s] = np.fromiter(itertools.islice(_ids, k), dtype=np.int64,
-                                   count=k)
+        self.i_id[s] = np.fromiter(itertools.islice(self._ids, k),
+                                   dtype=np.int64, count=k)
         self.i_start[s] = now
         self.i_end[s] = np.nan
         self.i_preempted[s] = False
@@ -278,9 +311,8 @@ class ArrayFleetEngine:
         jr = self.i_job[rows]
         has_job = jr >= 0
         jrows = jr[has_job]
-        self.j_done[jrows] = (np.floor_divide(self.j_done[jrows],
+        self.j_done[jrows] = checkpoint_floor(self.j_done[jrows],
                                               self.j_ckpt[jrows])
-                              * self.j_ckpt[jrows])
         for j in jrows:
             self.queue.appendleft(int(j))
         self.i_job[rows] = -1
@@ -316,9 +348,8 @@ class ArrayFleetEngine:
             rows = np.nonzero(alive & (self.i_group[:self.n] == gi))[0]
             if not len(rows):
                 continue
-            util = counts[gi] / max(1, int(self.g_capacity[gi]))
-            rate = self.g_pre_rate[gi] * (
-                1.0 + (self.g_pre_scale[gi] - 1.0) * util)
+            rate = preemption_rate(self.g_pre_rate[gi], self.g_pre_scale[gi],
+                                   counts[gi], int(self.g_capacity[gi]))
             hits = rows[self.rng.random(len(rows)) < rate * dt]
             if not len(hits):
                 continue

@@ -19,12 +19,10 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, Iterator, List, Optional
 
 from repro.core.budget import BudgetLedger
 from repro.core.provider import ProviderSpec, RegionSpec
-
-_ids = itertools.count()
 
 
 @dataclass
@@ -55,6 +53,10 @@ class InstanceGroup:
     target: int = 0
     instances: Dict[int, Instance] = field(default_factory=dict)
     retired: List[Instance] = field(default_factory=list)
+    # ID source; a standalone group numbers from 0, a provisioner hands
+    # every group one shared counter so IDs are engine-unique and each
+    # sim starts from 0 regardless of process history
+    ids: Iterator[int] = field(default_factory=itertools.count)
 
     @property
     def running(self) -> List[Instance]:
@@ -81,7 +83,7 @@ class InstanceGroup:
         fillable = min(self.target, self.region.capacity)
         if len(live) < fillable:
             for _ in range(fillable - len(live)):
-                inst = Instance(next(_ids), self.provider.name,
+                inst = Instance(next(self.ids), self.provider.name,
                                 self.region.name, now, last_charged=now)
                 self.instances[inst.id] = inst
         elif len(live) > self.target:
@@ -107,8 +109,9 @@ class MultiCloudProvisioner:
         self.catalog = catalog
         self.ledger = ledger
         self.spot = spot
+        ids = itertools.count()
         self.groups: List[InstanceGroup] = [
-            InstanceGroup(prov, region)
+            InstanceGroup(prov, region, ids=ids)
             for prov in catalog.values() for region in prov.regions]
         # cheapest first; stable for determinism
         self.groups.sort(key=lambda g: (self._price(g.provider),

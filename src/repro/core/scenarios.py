@@ -1,0 +1,198 @@
+"""What-if scenario library for pre-burst planning sweeps.
+
+The paper's headline numbers come from a *single* two-week run; HEPCloud-
+style pre-burst planning (Holzman et al. 2017) and per-scenario cost
+studies (Sfiligoi et al. 2022) want Monte-Carlo sweeps over seeds and
+operational what-ifs.  A :class:`Scenario` is a frozen, declarative
+description of one such campaign variant — catalog, spot/on-demand mix,
+ramp schedule, outage timing, budget floor, price perturbation — that both
+execution paths understand:
+
+  * solo: :func:`run_scenario` drives one ``CloudSimulator`` campaign
+    (the reference semantics), and
+  * batched: ``core/sweep.py`` ticks many (scenario, seed) lanes in
+    lock-step as one array program, bit-reproducible against the solo run
+    at the same (seed, scenario).
+
+``Scenario()`` with no arguments is exactly the paper replay
+(``campaign.replay_paper_campaign``): T4 catalog, $58k budget, staged
+ramp to 2k GPUs, the d10.5 CE outage, the 20 %-budget-floor downscale.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core.campaign import (OUTAGE_AT_H, OUTAGE_DURATION_H, PAPER_RAMP,
+                                 POST_OUTAGE_TARGET, RampStage, run_campaign)
+from repro.core.provider import (T4_FP32_TFLOPS, ProviderSpec, RegionSpec,
+                                 heterogeneous_catalog, t4_catalog)
+from repro.core.simulator import SimConfig
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One campaign variant; defaults reproduce the paper replay."""
+    name: str = "paper"
+    catalog: str = "t4"                  # "t4" | "heterogeneous" (§III pool)
+    capacity_scale: float = 1.0          # multiply every region's capacity
+    spot: bool = True                    # spot (paper) vs on-demand pricing
+    ondemand_fraction: float = 0.0       # carve this capacity share into
+    #                                      preemption-free on-demand pools
+    price_scale: float = 1.0             # uniform price-curve perturbation
+    ramp: Tuple[RampStage, ...] = PAPER_RAMP
+    outage: bool = True
+    outage_at_h: float = OUTAGE_AT_H
+    outage_duration_h: float = OUTAGE_DURATION_H
+    resume_target: int = POST_OUTAGE_TARGET
+    budget: float = 58000.0
+    budget_floor_fraction: float = 0.2
+    downscale_target: int = POST_OUTAGE_TARGET
+    duration_h: float = 14 * 24.0
+    dt_h: float = 0.25
+    lease_interval_s: float = 120.0
+    job_wall_h: float = 4.0
+    job_checkpoint_h: float = 1.0
+    min_queue: int = 4000
+    overhead_per_day: float = 390.0
+    accel_tflops: float = T4_FP32_TFLOPS
+
+
+# -- catalog surgery ------------------------------------------------------
+
+def _scale_capacity(cat: Dict[str, ProviderSpec],
+                    f: float) -> Dict[str, ProviderSpec]:
+    if f == 1.0:
+        return cat
+    return {name: replace(p, regions=tuple(
+        replace(r, capacity=max(1, int(r.capacity * f)))
+        for r in p.regions)) for name, p in cat.items()}
+
+
+def _scale_prices(cat: Dict[str, ProviderSpec],
+                  f: float) -> Dict[str, ProviderSpec]:
+    if f == 1.0:
+        return cat
+    return {name: replace(p, spot_price_per_day=p.spot_price_per_day * f,
+                          ondemand_price_per_day=p.ondemand_price_per_day * f)
+            for name, p in cat.items()}
+
+
+def _split_ondemand(cat: Dict[str, ProviderSpec],
+                    frac: float) -> Dict[str, ProviderSpec]:
+    """Carve ``frac`` of every region's capacity into a preemption-free
+    on-demand pool (priced at the on-demand rate) alongside the remaining
+    spot capacity — the spot/on-demand *mix* what-if: how much preemption
+    churn does a reliability floor buy off, and at what $."""
+    if frac <= 0.0:
+        return cat
+    out: Dict[str, ProviderSpec] = {}
+    for name, p in cat.items():
+        spot_regions = []
+        od_regions = []
+        for r in p.regions:
+            od_cap = max(1, int(r.capacity * frac))
+            spot_cap = max(1, r.capacity - od_cap)
+            spot_regions.append(replace(r, capacity=spot_cap))
+            od_regions.append(RegionSpec(r.name, od_cap, 0.0, 1.0))
+        out[name] = replace(p, regions=tuple(spot_regions))
+        out[f"{name}-od"] = replace(
+            p, name=f"{p.name}-od",
+            spot_price_per_day=p.ondemand_price_per_day,
+            regions=tuple(od_regions))
+    return out
+
+
+def build_catalog(sc: Scenario) -> Dict[str, ProviderSpec]:
+    if sc.catalog == "t4":
+        cat = t4_catalog()
+    elif sc.catalog == "heterogeneous":
+        cat = heterogeneous_catalog()
+    else:
+        raise ValueError(f"unknown catalog {sc.catalog!r}")
+    cat = _scale_capacity(cat, sc.capacity_scale)
+    cat = _scale_prices(cat, sc.price_scale)
+    cat = _split_ondemand(cat, sc.ondemand_fraction)
+    return cat
+
+
+def sim_config(sc: Scenario, seed: int) -> SimConfig:
+    return SimConfig(duration_h=sc.duration_h, dt_h=sc.dt_h, seed=seed,
+                     lease_interval_s=sc.lease_interval_s,
+                     job_wall_h=sc.job_wall_h,
+                     job_checkpoint_h=sc.job_checkpoint_h,
+                     accel_tflops=sc.accel_tflops,
+                     overhead_per_day=sc.overhead_per_day,
+                     min_queue=sc.min_queue, spot=sc.spot)
+
+
+def run_scenario(sc: Scenario, seed: int, engine=None):
+    """Solo reference execution of one (scenario, seed) campaign; the
+    batched sweep engine is pinned lane-by-lane against this
+    (tests/test_sweep.py)."""
+    return run_campaign(
+        build_catalog(sc), budget=sc.budget, ramp=sc.ramp,
+        sim_cfg=sim_config(sc, seed), engine=engine, outage=sc.outage,
+        outage_at_h=sc.outage_at_h, outage_duration_h=sc.outage_duration_h,
+        resume_target=sc.resume_target,
+        budget_floor_fraction=sc.budget_floor_fraction,
+        downscale_target=sc.downscale_target)
+
+
+# -- the library ----------------------------------------------------------
+
+def paper_baseline() -> Scenario:
+    return Scenario()
+
+
+def ondemand_fallback(budget: float = 58000.0) -> Scenario:
+    """All on-demand: zero preemptions, ~4.4x the $/GPU-day — how far does
+    the same budget get without spot risk?"""
+    return Scenario(name="ondemand", spot=False, budget=budget)
+
+
+def spot_ondemand_mixes(fracs: Sequence[float] = (0.1, 0.25, 0.5)
+                        ) -> List[Scenario]:
+    return [Scenario(name=f"mix-od{int(f * 100):02d}", ondemand_fraction=f)
+            for f in fracs]
+
+
+def heterogeneous_burst(capacity_scale: float = 1.0) -> Scenario:
+    """The §III mixed T4/V100/P100/M60 pool under the paper's controller."""
+    return Scenario(name="hetero", catalog="heterogeneous",
+                    capacity_scale=capacity_scale)
+
+
+def outage_grid(times_h: Sequence[float] = (60.0, 252.0, 300.0),
+                durations_h: Sequence[float] = (2.0, 12.0)) -> List[Scenario]:
+    """What if the CE had died earlier / stayed down longer?"""
+    return [Scenario(name=f"outage-t{int(t)}-d{int(d)}",
+                     outage_at_h=t, outage_duration_h=d)
+            for t in times_h for d in durations_h]
+
+
+def budget_floor_variants(floors: Sequence[float] = (0.1, 0.2, 0.3)
+                          ) -> List[Scenario]:
+    """How early the 'downscale to 1k' tripwire fires vs GPU-days kept."""
+    return [Scenario(name=f"floor{int(f * 100):02d}",
+                     budget_floor_fraction=f) for f in floors]
+
+
+def price_perturbations(factors: Sequence[float] = (0.8, 1.0, 1.25)
+                        ) -> List[Scenario]:
+    """Uniform spot-price-curve shifts (market drift between planning and
+    burst day)."""
+    return [Scenario(name=f"price{int(f * 100):03d}", price_scale=f)
+            for f in factors]
+
+
+def default_suite() -> List[Scenario]:
+    """A representative pre-burst planning suite: the paper baseline plus
+    one of each what-if family."""
+    return [paper_baseline(),
+            ondemand_fallback(),
+            *spot_ondemand_mixes((0.25,)),
+            heterogeneous_burst(),
+            *outage_grid((60.0, 300.0), (6.0,)),
+            *budget_floor_variants((0.3,)),
+            *price_perturbations((0.8, 1.25))]

@@ -47,6 +47,7 @@ class SimConfig:
     #                                     included" in the paper's $58k)
     min_queue: int = 4000               # CE queue top-up level per tick
     engine: str = "array"               # "array" (vectorized) | "object"
+    spot: bool = True                   # spot (default) vs on-demand pricing
 
 
 @dataclass
@@ -71,14 +72,15 @@ class CloudSimulator:
             from repro.core.fleet import ArrayFleetEngine
             self.fleet = ArrayFleetEngine(
                 catalog, self.ledger, self.rng,
-                lease_interval_s=cfg.lease_interval_s,
+                lease_interval_s=cfg.lease_interval_s, spot=cfg.spot,
                 job_wall_h=cfg.job_wall_h,
                 job_checkpoint_h=cfg.job_checkpoint_h)
             self.prov = self.fleet.prov
             self.ce = self.fleet.ce
         elif self.engine_kind == "object":
             self.fleet = None
-            self.prov = MultiCloudProvisioner(catalog, self.ledger)
+            self.prov = MultiCloudProvisioner(catalog, self.ledger,
+                                              spot=cfg.spot)
             self.ce = ComputeElement(lease_interval_s=cfg.lease_interval_s)
         else:
             raise ValueError(f"unknown engine {self.engine_kind!r}")
@@ -133,10 +135,11 @@ class CloudSimulator:
                 g.set_target(g.target, self.now)
 
     def _sample_preemptions(self, dt_h: float):
+        from repro.core.fleet import preemption_rate
         for g in self.prov.groups:
-            util = g.utilization()
-            rate = g.region.preempt_rate_per_hour * (
-                1.0 + (g.region.preempt_scale_at_full - 1.0) * util)
+            rate = preemption_rate(g.region.preempt_rate_per_hour,
+                                   g.region.preempt_scale_at_full,
+                                   len(g.running), g.region.capacity)
             for inst in g.running:
                 if self.rng.random() < rate * dt_h:
                     g.preempt(inst.id, self.now)
