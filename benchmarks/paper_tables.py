@@ -1,20 +1,23 @@
 """One benchmark per paper figure/claim (eScience'21 §IV/§V + Figs 1-2).
 
+The campaign benches run the golden paper-replay CampaignSpec through
+the ``repro.core.api.run`` front door once (typed CampaignResult,
+cached) and read its paper-comparison helpers.
+
 Each returns (us_per_call, derived, detail_rows)."""
 from __future__ import annotations
 
 import time
 
-from repro.core.budget import BudgetLedger
-from repro.core.campaign import (ICECUBE_BASELINE_GPUH_PER_2W,
-                                 replay_paper_campaign)
+from repro.core.api import paper_spec, run
 from repro.core.overlay import ComputeElement, Job
 from repro.core.provider import t4_catalog
-from repro.core.provisioner import MultiCloudProvisioner
 from repro.core.simulator import CloudSimulator, SimConfig
+from repro.core.spec import ICECUBE_BASELINE_GPUH_PER_2W, PAPER_CLAIMS
 
-PAPER = {"cost": 58000.0, "gpu_days": 16000.0, "eflop_hours": 3.1,
-         "doubling": 2.0, "max_fleet": 2000}
+PAPER = {"cost": PAPER_CLAIMS["cost"], "gpu_days": PAPER_CLAIMS["accel_days"],
+         "eflop_hours": PAPER_CLAIMS["eflop_hours_fp32"],
+         "doubling": PAPER_CLAIMS["doubling"], "max_fleet": 2000}
 
 _campaign_cache = {}
 
@@ -22,55 +25,41 @@ _campaign_cache = {}
 def _campaign():
     if "res" not in _campaign_cache:
         t0 = time.time()
-        res, ctl = replay_paper_campaign()
-        _campaign_cache.update(res=res, ctl=ctl,
-                               wall=(time.time() - t0) * 1e6)
-    return (_campaign_cache["res"], _campaign_cache["ctl"],
-            _campaign_cache["wall"])
+        res = run(paper_spec(), seeds=2021)
+        _campaign_cache.update(res=res, wall=(time.time() - t0) * 1e6)
+    return _campaign_cache["res"], _campaign_cache["wall"]
 
 
 def bench_fig1_fleet_timeline():
     """Fig 1 (monitoring snapshot): ramp to 2k, outage dip, 1k resume."""
-    res, ctl, wall = _campaign()
-    hist = ctl.sim.history if hasattr(ctl, "sim") else None
-    sim_hist = ctl.sim.history if hasattr(ctl, "sim") else []
-    peaks = max(t.running for t in sim_hist) if sim_hist else 0
+    res, wall = _campaign()
+    hist = res.history
+    peaks = max(t.running for t in hist) if hist else 0
     rows = []
-    if sim_hist:
-        for t in sim_hist[:: max(1, len(sim_hist) // 14)]:
-            rows.append(f"  t={t.t_h:6.1f}h fleet={t.running:5d} "
-                        f"busy={t.busy:5d} spent=${t.spent:9.0f}")
+    for t in hist[:: max(1, len(hist) // 14)]:
+        rows.append(f"  t={t.t_h:6.1f}h fleet={t.running:5d} "
+                    f"busy={t.busy:5d} spent=${t.spent:9.0f}")
     return wall, peaks, rows
 
 
 def bench_fig2_gpu_hours_doubling():
     """Fig 2: cloud GPU-hours vs IceCube's baseline ('approx doubling')."""
-    res, ctl, wall = _campaign()
-    factor = 1 + res["busy_hours"] / ICECUBE_BASELINE_GPUH_PER_2W
+    res, wall = _campaign()
+    factor = res.doubling_factor()
     rows = [f"  baseline 2w GPU-h: {ICECUBE_BASELINE_GPUH_PER_2W:,.0f}",
-            f"  cloud busy GPU-h:  {res['busy_hours']:,.0f}",
+            f"  cloud busy GPU-h:  {res.busy_hours:,.0f}",
             f"  total/baseline:    {factor:.2f}x  (paper: ~2x)"]
     return wall, round(factor, 3), rows
 
 
 def bench_claims_table():
     """§V summary claims: ~$58k, ~16k GPU-days, ~3.1 fp32 EFLOP-h."""
-    res, ctl, wall = _campaign()
-    rows = []
-    for name, sim_v, paper_v in (
-            ("cost_$", res["cost"], PAPER["cost"]),
-            ("gpu_days", res["accel_days"], PAPER["gpu_days"]),
-            ("eflop_hours_fp32", res["eflop_hours_fp32"],
-             PAPER["eflop_hours"])):
-        err = 100 * (sim_v - paper_v) / paper_v
-        rows.append(f"  {name:18s} sim={sim_v:12,.2f} paper={paper_v:12,.1f}"
-                    f" err={err:+6.1f}%")
-    max_err = max(abs(res["cost"] - PAPER["cost"]) / PAPER["cost"],
-                  abs(res["accel_days"] - PAPER["gpu_days"])
-                  / PAPER["gpu_days"],
-                  abs(res["eflop_hours_fp32"] - PAPER["eflop_hours"])
-                  / PAPER["eflop_hours"])
-    return wall, round(100 * max_err, 2), rows
+    res, wall = _campaign()
+    cmp = res.compare_paper()
+    rows = [f"  {name:18s} sim={row['sim']:12,.2f} "
+            f"paper={row['paper']:12,.1f} err={row['err_pct']:+6.1f}%"
+            for name, row in cmp.items() if name != "doubling"]
+    return wall, round(res.max_paper_err_pct(), 2), rows
 
 
 def bench_preemption_economics():
@@ -100,12 +89,12 @@ def bench_preemption_economics():
 def bench_budget_control():
     """§III: threshold alerts drive scale decisions. Derived: ticks between
     the 20% alert and the fleet cap taking effect (0 = same tick)."""
-    res, ctl, wall = _campaign()
-    log = ctl.log
+    res, wall = _campaign()
+    log = res.log
     alert_i = next(i for i, l in enumerate(log) if "20% remaining" in l)
     cap_i = next(i for i, l in enumerate(log) if "budget floor" in l)
     rows = [f"  {l}" for l in log if "BUDGET" in l or "floor" in l]
-    rows.append(f"  overdraft: ${res['budget']['overdraft']}")
+    rows.append(f"  overdraft: ${res.budget.overdraft}")
     return wall, cap_i - alert_i, rows
 
 

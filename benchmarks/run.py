@@ -6,10 +6,12 @@ on indented lines below each row).
     PYTHONPATH=src python -m benchmarks.run --only campaign
     PYTHONPATH=src python -m benchmarks.run --only sweep --json BENCH.json
 
-``--json PATH`` additionally writes ``{name: {us_per_call, derived}}`` so
-the perf trajectory is machine-readable across PRs (the committed
-``BENCH_sweep.json`` is the sweep-engine baseline; CI uploads a fresh one
-per run as an artifact).
+``--json PATH`` additionally writes
+``{schema_version, benches: {name: {us_per_call, derived}}}`` so the
+perf trajectory stays machine-comparable across PRs (the committed
+``BENCH_sweep.json`` is the sweep-engine baseline; CI uploads a fresh
+one per run as an artifact).  Consumers should check ``schema_version``
+(currently 2; version 1 was the bare ``{name: ...}`` mapping).
 """
 from __future__ import annotations
 
@@ -17,6 +19,8 @@ import argparse
 import json
 import sys
 import traceback
+
+BENCH_SCHEMA_VERSION = 2
 
 
 def main() -> None:
@@ -66,7 +70,9 @@ def main() -> None:
         sys.stdout.flush()
     if args.json:
         with open(args.json, "w") as f:
-            json.dump(report, f, indent=2, sort_keys=True, default=str)
+            json.dump({"schema_version": BENCH_SCHEMA_VERSION,
+                       "benches": report},
+                      f, indent=2, sort_keys=True, default=str)
             f.write("\n")
         print(f"# wrote {args.json}", file=sys.stderr)
     if failures:

@@ -11,7 +11,7 @@ engine and ``derived`` is the batched/sequential campaigns-per-second
 speedup.  The acceptance bar is >= 10x at B=64 paper-scale (336 h, 2k-GPU
 ramp) campaigns; the sequential baseline is timed on ``--seq-lanes``
 campaigns and extrapolated per-campaign (it is a plain
-``run_scenario()`` loop, so its per-campaign cost is constant).
+solo loop, so its per-campaign cost is constant).
 """
 from __future__ import annotations
 
@@ -19,12 +19,11 @@ import argparse
 import time
 from dataclasses import replace
 
-from repro.core.campaign import sweep_campaigns
-from repro.core.scenarios import Scenario
+from repro.core.api import paper_spec, sweep
 
 
-def _scenario(duration_h: float) -> Scenario:
-    sc = Scenario()
+def _spec(duration_h: float):
+    sc = paper_spec()
     if duration_h and duration_h != sc.duration_h:
         sc = replace(sc, duration_h=duration_h)
     return sc
@@ -32,13 +31,13 @@ def _scenario(duration_h: float) -> Scenario:
 
 def time_sweep(lanes: int, seq_lanes: int, duration_h: float = 336.0):
     """(batched s/campaign, sequential s/campaign, batched results)."""
-    sc = _scenario(duration_h)
+    sc = _spec(duration_h)
     seeds = list(range(lanes))
     t0 = time.perf_counter()
-    sw = sweep_campaigns([sc], seeds, engine="batched")
+    sw = sweep([sc], seeds, engine="batched")
     batched_per = (time.perf_counter() - t0) / lanes
     t0 = time.perf_counter()
-    sweep_campaigns([sc], seeds[:seq_lanes], engine="sequential")
+    sweep([sc], seeds[:seq_lanes], engine="sequential")
     seq_per = (time.perf_counter() - t0) / seq_lanes
     return batched_per, seq_per, sw
 

@@ -1,41 +1,40 @@
 """Replay the paper's two-week multi-cloud campaign end-to-end and compare
-every published number (eScience'21 §IV/§V, Figs 1-2).
+every published number (eScience'21 §IV/§V, Figs 1-2) — through the
+declarative front door: the whole campaign is one ``CampaignSpec`` (the
+same JSON as tests/data/paper_replay.spec.json) and one ``run()`` call
+returning a typed ``CampaignResult``.
 
     PYTHONPATH=src python examples/icecube_replay.py
 """
-from repro.core.campaign import (ICECUBE_BASELINE_GPUH_PER_2W,
-                                 replay_paper_campaign)
+from repro.core.api import paper_spec, run
 
 
 def main():
-    res, ctl = replay_paper_campaign(budget=58000.0)
+    spec = paper_spec(budget=58000.0)
+    res = run(spec, seeds=2021)
 
-    print("=== operational log (controller) ===")
-    for line in ctl.log:
+    print("=== the campaign as data (CampaignSpec timeline) ===")
+    for ev in spec.timeline:
+        print(f"  {ev}")
+
+    print("\n=== operational log (timeline controller) ===")
+    for line in res.log:
         print(" ", line)
 
     print("\n=== fleet timeline (Fig 1 analogue) ===")
-    hist = ctl.sim.history
-    for t in hist[::  max(1, len(hist) // 14)]:
+    hist = res.history
+    for t in hist[:: max(1, len(hist) // 14)]:
         bar = "#" * (t.running // 50)
         print(f"  d{t.t_h / 24:5.1f} {t.running:5d} {bar}")
 
     print("\n=== published-claim comparison (§V) ===")
-    rows = [
-        ("total cost            ", f"${res['cost']:>9,.0f}", "~$58,000"),
-        ("GPU-days delivered    ", f"{res['accel_days']:>10,.0f}", "~16,000"),
-        ("fp32 EFLOP-hours      ", f"{res['eflop_hours_fp32']:>10.2f}",
-         "~3.1"),
-        ("$ / GPU-day           ", f"{res['cost_per_accel_day']:>10.2f}",
-         "~3.6 blended"),
-        ("preemptions handled   ", f"{res['preemptions']:>10,}", "(spot)"),
-        ("jobs completed        ", f"{res['jobs_finished']:>10,}", ""),
-    ]
-    for name, sim, paper in rows:
-        print(f"  {name} sim {sim}   paper {paper}")
-    doubling = 1 + res["busy_hours"] / ICECUBE_BASELINE_GPUH_PER_2W
-    print(f"  GPU-hours vs baseline  {doubling:10.2f}x  paper ~2x "
-          "(\"approximate doubling\")")
+    units = {"cost": "$", "accel_days": " GPU-days",
+             "eflop_hours_fp32": " fp32 EFLOP-h", "doubling": "x"}
+    for claim, row in res.compare_paper().items():
+        print(f"  {claim:18s} sim {row['sim']:>12,.2f}{units[claim]:<14s}"
+              f" paper ~{row['paper']:,.1f}  err {row['err_pct']:+6.1f}%")
+    print(f"  preemptions handled {res.preemptions:>10,} (spot)")
+    print(f"  jobs completed      {res.jobs_finished:>10,}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
-"""Quickstart: train a small LM for a few hundred steps on CPU, checkpoint,
-restore, and sample a few tokens — the whole public API in 60 lines.
+"""Quickstart: declare and run a cloud campaign as data, then train a
+small LM for a few hundred steps on CPU, checkpoint, restore, and serve
+a few batched requests — the whole public API in ~80 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,14 +8,47 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import restore
+from repro.core.api import run
+from repro.core.spec import CampaignSpec, CEOutage, PriceShift, SetTarget
 from repro.launch.serve import BatchServer, Request
 from repro.launch.train import Trainer, build
 
 CKPT = "/tmp/repro_quickstart_ckpt"
 
 
+def campaign_quickstart():
+    # -- a two-day burst campaign, declared as data --------------------------
+    spec = CampaignSpec(
+        name="quickstart", budget=4000.0, duration_h=48.0,
+        downscale_target=150,                # budget tripwire cap
+        timeline=(SetTarget(0.0, 100),       # small-scale validation ...
+                  SetTarget(6.0, 500),       # ... then burst
+                  PriceShift(24.0, 1.3),     # spot market drifts up
+                  CEOutage(36.0, 2.0, 250)))  # backend dies; resume lower
+    print(f"spec round-trips to JSON: "
+          f"{len(spec.to_json().splitlines())} lines")
+    res = run(spec, seeds=2021)              # typed CampaignResult
+    print(f"campaign {spec.name!r}: ${res.cost:,.0f} for "
+          f"{res.accel_days:,.1f} GPU-days "
+          f"({res.preemptions} preemptions, "
+          f"{res.jobs_finished:,} jobs)")
+    for ev in res.events_fired:
+        print(f"  fired: {ev}")
+
+    # the same spec across seeds = one batched Monte-Carlo sweep
+    sw = run(spec, seeds=range(2021, 2025))
+    band = sw.summary()[spec.name]["cost"]
+    print(f"cost across 4 seeds: mean ${band['mean']:,.0f} "
+          f"[p5 ${band['p5']:,.0f}, p95 ${band['p95']:,.0f}]")
+
+
 def main():
+    campaign_quickstart()
     # -- train a ~300k-param yi-family model for 200 steps -------------------
+    # start from scratch: a leftover checkpoint at step >= 200 would make
+    # train(200) a silent no-op (the Trainer auto-resumes from ckpt_dir)
+    import shutil
+    shutil.rmtree(CKPT, ignore_errors=True)
     cfg, shape, run = build("yi-9b", reduced=True, batch=8, seq=64)
     trainer = Trainer(cfg, shape, run, ckpt_dir=CKPT, seed=0)
     trainer.install_signal_handlers()        # SIGTERM = preemption notice

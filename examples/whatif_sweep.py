@@ -1,32 +1,37 @@
-"""What-if planning sweep: hundreds of (seed x scenario) campaigns as
-one array program.
+"""What-if planning sweep: hundreds of (seed x spec) campaigns as one
+array program, through the ``run()`` front door.
 
     PYTHONPATH=src python -m examples.whatif_sweep
     PYTHONPATH=src python -m examples.whatif_sweep --seeds 32
     PYTHONPATH=src python -m examples.whatif_sweep --scenarios paper,hetero
+    PYTHONPATH=src python -m examples.whatif_sweep --csv sweep.csv
 
-Runs the default pre-burst scenario suite (paper baseline, on-demand
+Runs the default pre-burst spec suite (paper baseline, on-demand
 fallback, spot/on-demand mix, heterogeneous §III pool, outage grid,
-budget-floor and price-curve variants) over N seeds on the batched sweep
-engine (core/sweep.py) and prints the planning table: mean [p5, p95]
-bands on cost, GPU-days and preemptions per scenario.  Every lane is
-bit-reproducible against a solo ``run_scenario()`` at the same
-(seed, scenario)."""
+budget-floor and price-curve variants — all declarative CampaignSpecs,
+core/scenarios.py) over N seeds on the batched sweep engine
+(core/sweep.py) and prints the planning table: mean [p5, p95] bands on
+cost, GPU-days and preemptions per spec.  Every lane is bit-reproducible
+against a solo ``run(spec, seeds=seed)`` at the same (seed, spec);
+``--csv`` writes the deterministic per-lane row artifact (including each
+lane's ``events_fired`` provenance)."""
 from __future__ import annotations
 
 import argparse
 import time
 
-from repro.core.campaign import sweep_campaigns
+from repro.core.api import run
 from repro.core.scenarios import default_suite
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--seeds", type=int, default=8,
-                    help="seeds per scenario")
+                    help="seeds per scenario spec")
     ap.add_argument("--scenarios", default=None,
-                    help="comma-separated scenario-name filter")
+                    help="comma-separated spec-name filter")
+    ap.add_argument("--csv", default=None,
+                    help="write the per-lane row CSV here")
     args = ap.parse_args()
 
     suite = default_suite()
@@ -34,17 +39,20 @@ def main():
         want = {s.strip() for s in args.scenarios.split(",")}
         suite = [s for s in suite if s.name in want]
         if not suite:
-            raise SystemExit(f"no scenario matches {sorted(want)}; "
+            raise SystemExit(f"no spec matches {sorted(want)}; "
                              f"have {[s.name for s in default_suite()]}")
     seeds = list(range(2021, 2021 + args.seeds))
     n = len(suite) * len(seeds)
-    print(f"sweeping {len(suite)} scenarios x {len(seeds)} seeds "
+    print(f"sweeping {len(suite)} specs x {len(seeds)} seeds "
           f"= {n} two-week campaigns (batched engine) ...")
     t0 = time.perf_counter()
-    sw = sweep_campaigns(suite, seeds)
+    sw = run(suite, seeds=seeds)
     dt = time.perf_counter() - t0
     print(f"done in {dt:.1f}s ({n / dt:.1f} campaigns/s)\n")
     print(sw.table())
+    if args.csv:
+        sw.to_csv(args.csv)
+        print(f"\nwrote {args.csv}")
     print("\n(paper single-run reference: ~$58k, ~16k GPU-days)")
 
 

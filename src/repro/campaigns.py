@@ -1,0 +1,136 @@
+"""Campaign CLI: run serialized CampaignSpecs from the command line.
+
+Because specs are data (JSON), campaigns become shell-scriptable and
+CI-pinnable:
+
+    PYTHONPATH=src python -m repro.campaigns run spec.json
+    PYTHONPATH=src python -m repro.campaigns run spec.json \\
+        --seeds 2021,2022,2023 --engine batched --csv sweep.csv
+    PYTHONPATH=src python -m repro.campaigns show spec.json
+    PYTHONPATH=src python -m repro.campaigns paper --out paper.spec.json
+
+``run`` executes the spec(s) through the ``repro.core.api.run`` front
+door (solo for one spec x one seed, the batched lock-step sweep engine
+otherwise), prints a summary, and optionally writes machine-readable
+JSON/CSV artifacts.  ``paper`` emits the golden paper-replay spec
+(committed at tests/data/paper_replay.spec.json and smoke-run in CI).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.core.api import run as api_run
+from repro.core.spec import CampaignResult, CampaignSpec, paper_spec
+
+
+def _load_spec(path: str) -> CampaignSpec:
+    with open(path) as f:
+        return CampaignSpec.from_json(f.read())
+
+
+def _print_solo(res: CampaignResult):
+    print(f"campaign {res.spec.name!r} seed={res.seed} "
+          f"engine={res.engine}")
+    for line in res.log:
+        print(f"  {line}")
+    print(f"  cost            ${res.cost:>12,.2f}")
+    print(f"  GPU-days        {res.accel_days:>13,.1f}")
+    print(f"  fp32 EFLOP-h    {res.eflop_hours_fp32:>13.3f}")
+    print(f"  preemptions     {res.preemptions:>13,}")
+    print(f"  jobs finished   {res.jobs_finished:>13,}")
+    if res.spec is not None and res.spec.name == "paper":
+        print("  paper-claim comparison:")
+        for claim, row in res.compare_paper().items():
+            print(f"    {claim:18s} sim={row['sim']:>12,.2f} "
+                  f"paper={row['paper']:>10,.1f} "
+                  f"err={row['err_pct']:+6.1f}%")
+
+
+def cmd_run(args) -> int:
+    specs = [_load_spec(p) for p in args.spec]
+    seeds = [int(s) for s in args.seeds.split(",")]
+    target = specs[0] if len(specs) == 1 else specs
+    result = api_run(target, seeds=seeds if len(seeds) > 1 else seeds[0],
+                     engine=args.engine)
+    if isinstance(result, CampaignResult):
+        _print_solo(result)
+        payload = {"schema_version": 1, "kind": "campaign",
+                   "spec": result.spec.to_dict(), "seed": result.seed,
+                   "engine": result.engine,
+                   "results": result.to_dict(),
+                   "events_fired": list(result.events_fired)}
+    else:
+        print(f"swept {len(result.rows)} lanes "
+              f"({len(specs)} specs x {len(seeds)} seeds, "
+              f"engine={args.engine})\n")
+        print(result.table())
+        payload = {"schema_version": 1, "kind": "sweep",
+                   "specs": [s.to_dict() for s in specs], "seeds": seeds,
+                   "summary": result.summary(), "rows": result.rows}
+        if args.csv:
+            result.to_csv(args.csv)
+            print(f"# wrote {args.csv}", file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True, default=str)
+            f.write("\n")
+        print(f"# wrote {args.json}", file=sys.stderr)
+    return 0
+
+
+def cmd_show(args) -> int:
+    for path in args.spec:
+        spec = _load_spec(path)
+        print(f"# {path}")
+        print(spec.to_json(), end="")
+    return 0
+
+
+def cmd_paper(args) -> int:
+    text = paper_spec().to_json()
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(f"# wrote {args.out}", file=sys.stderr)
+    else:
+        print(text, end="")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.campaigns",
+        description="Run/inspect serialized CampaignSpecs.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p_run = sub.add_parser("run", help="execute spec file(s)")
+    p_run.add_argument("spec", nargs="+", help="CampaignSpec JSON file(s)")
+    p_run.add_argument("--seeds", default="2021",
+                       help="comma-separated seeds (default: 2021)")
+    p_run.add_argument("--engine", default="auto",
+                       choices=["auto", "array", "object", "batched",
+                                "sequential"])
+    p_run.add_argument("--json", default=None,
+                       help="write results JSON here")
+    p_run.add_argument("--csv", default=None,
+                       help="write the sweep row CSV here (sweeps only)")
+    p_run.set_defaults(fn=cmd_run)
+
+    p_show = sub.add_parser("show", help="pretty-print spec file(s)")
+    p_show.add_argument("spec", nargs="+")
+    p_show.set_defaults(fn=cmd_show)
+
+    p_paper = sub.add_parser("paper",
+                             help="emit the paper-replay golden spec")
+    p_paper.add_argument("--out", default=None)
+    p_paper.set_defaults(fn=cmd_paper)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

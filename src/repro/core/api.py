@@ -1,0 +1,105 @@
+"""The campaign front door: ``run(spec_or_specs, seeds=..., engine=...)``.
+
+One entry point executes any declarative :class:`~repro.core.spec.
+CampaignSpec` — solo or sweep — and returns typed results:
+
+  * one spec, one seed  -> a solo simulation, returned as a
+    :class:`~repro.core.spec.CampaignResult`,
+  * one spec x many seeds, or many specs -> a (seed x spec) sweep on the
+    batched lock-step engine, returned as a
+    :class:`~repro.core.sweep.SweepResult`.
+
+``engine`` selects the execution path:
+
+  * ``"auto"`` (default): solo array engine for a single (spec, seed),
+    the batched sweep engine otherwise,
+  * ``"array"`` / ``"object"``: force solo engines (sweeps loop them
+    sequentially — the reference semantics),
+  * ``"batched"``: force the lock-step sweep engine,
+  * ``"sequential"``: alias for a sequential solo-array loop.
+
+Every batched lane is bit-reproducible against its solo run at the same
+(spec, seed) — pinned by tests/test_sweep.py and tests/test_spec.py.
+The deprecated ``Scenario`` shim is accepted anywhere a spec is.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Sequence, Tuple, Union
+
+from repro.core.spec import (CampaignResult, CampaignSpec, paper_spec,
+                             run_solo)
+from repro.core.sweep import SweepResult, run_batched_detailed
+
+__all__ = ["run", "sweep", "paper_spec", "CampaignResult", "SweepResult"]
+
+_SOLO_ENGINES = {"array", "object"}
+
+
+def sweep(specs: Sequence[CampaignSpec], seeds: Sequence[int],
+          engine: str = "batched") -> SweepResult:
+    """Run every (spec x seed) lane and always return a SweepResult
+    (``run()`` delegates here for multi-lane inputs).  ``engine``:
+    "batched" (lock-step array program) or "sequential" / "array" /
+    "object" (solo reference loop)."""
+    lanes = [(spec.to_spec(), int(seed)) for spec in specs
+             for seed in seeds]
+    if engine == "batched":
+        detailed = run_batched_detailed(lanes)
+    elif engine in _SOLO_ENGINES | {"sequential"}:
+        eng = engine if engine in _SOLO_ENGINES else None
+        detailed = []
+        for spec, seed in lanes:
+            res, ctl = run_solo(spec, seed, engine=eng)
+            detailed.append((res.to_dict(), list(ctl.events_fired)))
+    else:
+        raise ValueError(f"unknown sweep engine {engine!r}")
+    rows = [{"scenario": spec.name, "seed": seed, **res,
+             "events_fired": events}
+            for (spec, seed), (res, events) in zip(lanes, detailed)]
+    return SweepResult(rows)
+
+
+def _coerce_specs(spec_or_specs) -> Tuple[List[CampaignSpec], bool]:
+    if hasattr(spec_or_specs, "to_spec"):
+        return [spec_or_specs.to_spec()], True
+    specs = [s.to_spec() for s in spec_or_specs]
+    if not specs:
+        raise ValueError("run() needs at least one spec")
+    return specs, False
+
+
+def _coerce_seeds(seeds) -> Tuple[List[int], bool]:
+    if isinstance(seeds, str):
+        # a string is iterable per-character: "2021" would silently
+        # become the 4-seed sweep [2, 0, 2, 1] — treat it as one seed
+        return [int(seeds)], True
+    if not isinstance(seeds, Iterable):
+        return [int(seeds)], True
+    seeds = [int(s) for s in seeds]
+    if not seeds:
+        raise ValueError("run() needs at least one seed")
+    return seeds, False
+
+
+def run(spec_or_specs: Union[CampaignSpec, Sequence[CampaignSpec]],
+        seeds: Union[int, Sequence[int]] = 2021,
+        engine: str = "auto") -> Union[CampaignResult, SweepResult]:
+    """Execute campaign spec(s); see module docstring for dispatch."""
+    specs, single_spec = _coerce_specs(spec_or_specs)
+    seed_list, single_seed = _coerce_seeds(seeds)
+    solo = single_spec and len(specs) == 1 and len(seed_list) == 1
+    if engine not in {"auto", "batched", "sequential"} | _SOLO_ENGINES:
+        raise ValueError(f"unknown engine {engine!r}")
+
+    if solo and engine == "batched":     # forced single-lane batched run
+        (res, events), = run_batched_detailed([(specs[0], seed_list[0])])
+        return CampaignResult.from_results(
+            res, spec=specs[0], seed=seed_list[0], engine="batched",
+            events_fired=tuple(events))
+    if solo:
+        eng = None if engine in ("auto", "sequential") else engine
+        result, _ctl = run_solo(specs[0], seed_list[0], engine=eng)
+        return result
+
+    return sweep(specs, seed_list,
+                 engine="batched" if engine == "auto" else engine)

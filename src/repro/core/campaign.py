@@ -1,27 +1,35 @@
-"""The paper's two-week campaign as a reusable controller (§IV/§V):
+"""Back-compat shims for the legacy campaign API (pre-CampaignSpec).
 
-  * initial small-scale validation in every region,
-  * staged ramp 400 -> 900 -> 1.2k -> 1.6k -> 2k GPUs, sustaining each step
-    "for extended periods of time to validate the stability of the system",
-  * the CE-outage incident at 2k GPUs: total backend collapse -> instant
-    fleet-wide deprovision ("minimal financial loss") -> ~2 h outage ->
-    resume at 1k GPUs,
-  * budget-driven downscale: resume at only 1k because "at that point in
-    time we had only about 20% of the budget left" — wired to the
-    CloudBank 20 %-remaining threshold alert.
+The paper's two-week exercise (§IV/§V) — staged ramp 400 -> 900 -> 1.2k
+-> 1.6k -> 2k GPUs, the CE-outage incident at 2k, the budget-driven
+2k -> 1k downscale — is now declared once as data:
+``repro.core.spec.CampaignSpec`` (whose defaults ARE the paper replay)
+executed through the ``repro.core.api.run`` front door.
 
-``replay_paper_campaign()`` reproduces the exercise end-to-end and returns
-simulated totals for the benchmark to compare with the published ones
-(~$58k, ~16k GPU-days, ~3.1 fp32 EFLOP-hours, a >=2x boost of IceCube's
-GPU wall-hours).
+This module keeps the historical entry points importable and
+bit-identical, as deprecation-warned shims over specs:
+
+  * ``replay_paper_campaign()``  -> ``run(paper_spec(), seeds=...)``
+  * ``run_campaign(catalog, ...)`` -> an inline-``providers`` spec
+  * ``sweep_campaigns(...)``       -> the sweep path of ``api.run``
+  * ``CampaignController``         -> ``spec.TimelineController``
+
+``spec.PAPER_TIMELINE`` holds the canonical ramp/outage numbers;
+``RampStage``/``PAPER_RAMP`` and the ``OUTAGE_*`` constants here are
+derived from it for legacy importers.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.provider import ProviderSpec, t4_catalog
 from repro.core.simulator import CloudSimulator, SimConfig
+from repro.core.spec import (CEOutage, CampaignSpec, PAPER_RAMP_EVENTS,
+                             PAPER_TIMELINE, SetTarget,
+                             ICECUBE_BASELINE_GPUH_PER_2W,  # noqa: F401
+                             paper_spec, run_solo)
 
 
 @dataclass
@@ -30,22 +38,38 @@ class RampStage:
     target: int
 
 
-PAPER_RAMP: Tuple[RampStage, ...] = (
-    RampStage(0.0, 40),        # small-scale validation in each region
-    RampStage(12.0, 400),
-    RampStage(48.0, 900),
-    RampStage(96.0, 1200),
-    RampStage(144.0, 1600),
-    RampStage(192.0, 2000),    # sustained at 2k ...
-)
-OUTAGE_AT_H = 252.0            # ... until the CE host's network outage (d10.5)
-OUTAGE_DURATION_H = 2.0
-POST_OUTAGE_TARGET = 1000      # resume lower: ~20% budget left
+# the legacy constants, derived from the single source of truth
+# (spec.PAPER_TIMELINE) so the numbers can never desynchronize
+PAPER_RAMP: Tuple[RampStage, ...] = tuple(
+    RampStage(ev.at_h, ev.target) for ev in PAPER_RAMP_EVENTS)
+_PAPER_OUTAGE: CEOutage = PAPER_TIMELINE[-1]
+OUTAGE_AT_H = _PAPER_OUTAGE.at_h           # the CE host outage (d10.5)
+OUTAGE_DURATION_H = _PAPER_OUTAGE.duration_h
+POST_OUTAGE_TARGET = _PAPER_OUTAGE.resume_target   # ~20% budget left
+
+
+def _timeline(ramp: Tuple[RampStage, ...], outage: bool, *,
+              outage_at_h: float = OUTAGE_AT_H,
+              outage_duration_h: float = OUTAGE_DURATION_H,
+              resume_target: int = POST_OUTAGE_TARGET):
+    events = tuple(SetTarget(st.start_h, st.target) for st in ramp)
+    if outage:
+        events += (CEOutage(outage_at_h, outage_duration_h, resume_target),)
+    return events
+
+
+def _deprecated(old: str, new: str):
+    warnings.warn(f"{old} is deprecated; use {new} "
+                  "(see repro.core.spec / repro.core.api)",
+                  DeprecationWarning, stacklevel=3)
 
 
 @dataclass
 class CampaignController:
-    """Budget-aware staged-ramp controller driving a CloudSimulator."""
+    """Deprecated: the staged-ramp/outage/budget-cap controller as
+    Python callbacks.  Superseded by the declarative CampaignSpec
+    timeline interpreted by ``spec.TimelineController`` (which every
+    engine — solo object, solo array, batched sweep — understands)."""
     sim: CloudSimulator
     ramp: Tuple[RampStage, ...] = PAPER_RAMP
     budget_floor_fraction: float = 0.2
@@ -54,6 +78,7 @@ class CampaignController:
     _budget_capped: bool = False
 
     def __post_init__(self):
+        _deprecated("CampaignController", "CampaignSpec timelines")
         self.sim.ledger.on_threshold(self._on_budget_alert)
         for stage in self.ramp:
             self.sim.at(stage.start_h, self._make_setter(stage.target))
@@ -99,16 +124,21 @@ class CampaignController:
 def replay_paper_campaign(budget: float = 58000.0, seed: int = 2021,
                           sim_cfg: Optional[SimConfig] = None,
                           engine: Optional[str] = None):
-    """Run the full two-week exercise; returns (results, controller).
-
-    ``engine`` selects the simulation engine ("array" | "object"); both
-    produce matching totals (tests/test_fleet_engine.py)."""
+    """Deprecated shim: run the full two-week exercise; returns
+    (results dict, controller).  Equivalent to
+    ``api.run(paper_spec(budget=...), seeds=seed)`` — which returns the
+    typed ``CampaignResult`` instead."""
+    _deprecated("replay_paper_campaign()", "api.run(paper_spec())")
     cfg = sim_cfg or SimConfig(seed=seed)
-    sim = CloudSimulator(t4_catalog(), budget, cfg, engine=engine)
-    ctl = CampaignController(sim)
-    ctl.inject_ce_outage()
-    sim.run_until(cfg.duration_h)
-    return sim.results(), ctl
+    spec = paper_spec(
+        budget=budget, duration_h=cfg.duration_h, dt_h=cfg.dt_h,
+        lease_interval_s=cfg.lease_interval_s, job_wall_h=cfg.job_wall_h,
+        job_checkpoint_h=cfg.job_checkpoint_h,
+        accel_tflops=cfg.accel_tflops,
+        overhead_per_day=cfg.overhead_per_day, min_queue=cfg.min_queue,
+        spot=cfg.spot)
+    res, ctl = run_solo(spec, cfg.seed, engine=engine or cfg.engine)
+    return res.to_dict(), ctl
 
 
 def run_campaign(catalog: Dict[str, ProviderSpec], budget: float,
@@ -121,52 +151,41 @@ def run_campaign(catalog: Dict[str, ProviderSpec], budget: float,
                  resume_target: int = POST_OUTAGE_TARGET,
                  budget_floor_fraction: float = 0.2,
                  downscale_target: int = POST_OUTAGE_TARGET):
-    """Campaign runner for catalogs beyond the T4-only replay — e.g. the
-    §III heterogeneous pool (``provider.heterogeneous_catalog()``) or a
-    capacity-scaled one for 100k-instance studies.  The keyword-only
-    knobs expose the controller's outage timing and budget tripwire for
-    what-if scenarios (core/scenarios.py).  Returns
-    (results, controller)."""
+    """Deprecated shim: the ten-knob campaign runner.  The knobs are now
+    CampaignSpec fields (catalog -> ``providers``, ramp/outage ->
+    ``timeline`` events); returns (results dict, controller)."""
+    _deprecated("run_campaign()", "api.run(CampaignSpec(...))")
     cfg = sim_cfg or SimConfig()
-    sim = CloudSimulator(catalog, budget, cfg, engine=engine)
-    ctl = CampaignController(sim, ramp=ramp,
-                             budget_floor_fraction=budget_floor_fraction,
-                             downscale_target=downscale_target)
-    if outage:
-        ctl.inject_ce_outage(outage_at_h, outage_duration_h, resume_target)
-    sim.run_until(cfg.duration_h)
-    return sim.results(), ctl
+    spec = CampaignSpec(
+        name="campaign", providers=tuple(catalog.values()),
+        budget=budget, budget_floor_fraction=budget_floor_fraction,
+        downscale_target=downscale_target, duration_h=cfg.duration_h,
+        dt_h=cfg.dt_h, lease_interval_s=cfg.lease_interval_s,
+        job_wall_h=cfg.job_wall_h, job_checkpoint_h=cfg.job_checkpoint_h,
+        accel_tflops=cfg.accel_tflops,
+        overhead_per_day=cfg.overhead_per_day, min_queue=cfg.min_queue,
+        spot=cfg.spot,
+        timeline=_timeline(ramp, outage, outage_at_h=outage_at_h,
+                           outage_duration_h=outage_duration_h,
+                           resume_target=resume_target))
+    res, ctl = run_solo(spec, cfg.seed, engine=engine or cfg.engine)
+    return res.to_dict(), ctl
 
 
 def sweep_campaigns(scenarios, seeds, *, engine: str = "batched"):
     """Run every (scenario x seed) campaign and return a
     ``sweep.SweepResult`` (per-lane results rows plus mean/p5/p95 summary
-    bands on the paper totals).
+    bands on the paper totals; each row carries its ``events_fired``
+    provenance).  Accepts CampaignSpecs or deprecated Scenario shims.
 
     ``engine="batched"`` (default) ticks all lanes in lock-step on the
     batched struct-of-arrays engine (core/sweep.py) — a 256-point sweep
     pays the per-tick dispatch overhead once, not 256 times.
-    ``engine="sequential"`` loops solo ``CloudSimulator`` campaigns (the
-    reference semantics; every batched lane is bit-reproducible against
-    it at the same (seed, scenario))."""
-    from repro.core import sweep as sweep_mod
-    from repro.core.scenarios import run_scenario
-    scenarios = list(scenarios)          # tolerate one-shot iterators
-    seeds = [int(s) for s in seeds]
-    lanes = [(sc, seed) for sc in scenarios for seed in seeds]
-    if engine == "batched":
-        results = sweep_mod.run_batched(lanes)
-    elif engine == "sequential":
-        results = [run_scenario(sc, seed)[0] for sc, seed in lanes]
-    else:
+    ``engine="sequential"`` loops solo campaigns (the reference
+    semantics; every batched lane is bit-reproducible against it at the
+    same (seed, scenario))."""
+    from repro.core.api import sweep as api_sweep
+    if engine not in ("batched", "sequential"):
         raise ValueError(f"unknown sweep engine {engine!r}")
-    rows = [{"scenario": sc.name, "seed": seed, **res}
-            for (sc, seed), res in zip(lanes, results)]
-    return sweep_mod.SweepResult(rows)
-
-
-# IceCube baseline for the "approximate doubling" claim (abstract/Fig 2):
-# cloud GPU-hours ~ IceCube's contemporaneous non-cloud GPU-hours. Paper §I
-# gives 8M GPU-h/yr on OSG (IceCube >80%); with dedicated non-OSG resources
-# IceCube's effective baseline is ~9M GPU-h/yr -> ~350k per 2 weeks.
-ICECUBE_BASELINE_GPUH_PER_2W = 9e6 * (14 / 365.0)
+    return api_sweep([s.to_spec() for s in scenarios],
+                     [int(s) for s in seeds], engine=engine)

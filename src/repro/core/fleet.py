@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import collections
 import itertools
+from dataclasses import replace
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -151,6 +152,7 @@ class ArrayFleetEngine:
         self.preemption_events = 0
         self.nat_drop_events = 0
         self.outage = False
+        self._price_scale = 1.0
         self._busy_by_group = np.zeros(G, dtype=np.int64)
 
         self.prov = ArrayProvisionerView(self)
@@ -169,7 +171,19 @@ class ArrayFleetEngine:
     def rate_h(self, gi: int) -> float:
         p = self.g_provider[gi]
         return (p.spot_price_per_day if self._spot
-                else p.ondemand_price_per_day) / 24.0
+                else p.ondemand_price_per_day) / 24.0 * self._price_scale
+
+    # -- timeline ops (spec.PriceShift / spec.CapacityShift) --------------
+    def scale_prices(self, factor: float):
+        """Uniform price shift from now on; one cumulative scalar so the
+        price-priority group order is unaffected."""
+        self._price_scale *= factor
+
+    def scale_capacity(self, factor: float):
+        """Multiply every group's capacity (floored at 1); shrinking
+        below the live count does not evict running instances."""
+        self.g_capacity = np.maximum(
+            1, (self.g_capacity * factor).astype(np.int64))
 
     # -- growth helpers ---------------------------------------------------
     def _grow_instances(self, extra: int):
@@ -534,7 +548,15 @@ class ArrayGroupView:
         self._e = engine
         self._gi = gi
         self.provider = engine.g_provider[gi]
-        self.region = engine.g_region[gi]
+
+    @property
+    def region(self):
+        """The group's RegionSpec at the engine's *current* capacity
+        (CapacityShift events mutate it mid-run)."""
+        e = self._e
+        r = e.g_region[self._gi]
+        cap = int(e.g_capacity[self._gi])
+        return r if r.capacity == cap else replace(r, capacity=cap)
 
     @property
     def target(self) -> int:
@@ -584,6 +606,12 @@ class ArrayProvisionerView:
 
     def deprovision_all(self, now: float):
         self._e.deprovision_all(now)
+
+    def scale_prices(self, factor: float):
+        self._e.scale_prices(factor)
+
+    def scale_capacity(self, factor: float):
+        self._e.scale_capacity(factor)
 
     def bill(self, now: float) -> float:
         return self._e.bill(now)

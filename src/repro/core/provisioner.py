@@ -18,7 +18,7 @@ the paper's CE-outage response).
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, Iterator, List, Optional
 
 from repro.core.budget import BudgetLedger
@@ -117,10 +117,27 @@ class MultiCloudProvisioner:
         self.groups.sort(key=lambda g: (self._price(g.provider),
                                         g.provider.name, g.region.name))
         self.global_target = 0
+        # cumulative uniform market drift (spec.PriceShift events); kept
+        # as one scalar so the price-priority group order is unaffected
+        self.price_scale = 1.0
 
     def _price(self, prov: ProviderSpec) -> float:
         return (prov.spot_price_per_day if self.spot
                 else prov.ondemand_price_per_day)
+
+    def scale_prices(self, factor: float):
+        """Uniform price shift from now on (already-billed hours keep
+        their old price) — the spec timeline's ``PriceShift`` op."""
+        self.price_scale *= factor
+
+    def scale_capacity(self, factor: float):
+        """Multiply every region's capacity (floored at 1 instance);
+        shrinking below the live count does not evict running instances —
+        the spec timeline's ``CapacityShift`` op."""
+        for g in self.groups:
+            g.region = replace(
+                g.region,
+                capacity=max(1, int(g.region.capacity * factor)))
 
     # -- control ------------------------------------------------------------
     def scale_to(self, n: int, now: float):
@@ -146,7 +163,7 @@ class MultiCloudProvisioner:
             return 0.0
         total = 0.0
         for g in self.groups:
-            rate_h = self._price(g.provider) / 24.0
+            rate_h = self._price(g.provider) / 24.0 * self.price_scale
             for inst in g.instances.values():
                 end = now
                 if inst.preempted_at is not None:

@@ -3,36 +3,41 @@
 The paper's headline numbers come from a *single* two-week run; HEPCloud-
 style pre-burst planning (Holzman et al. 2017) and per-scenario cost
 studies (Sfiligoi et al. 2022) want Monte-Carlo sweeps over seeds and
-operational what-ifs.  A :class:`Scenario` is a frozen, declarative
-description of one such campaign variant — catalog, spot/on-demand mix,
-ramp schedule, outage timing, budget floor, price perturbation — that both
-execution paths understand:
+operational what-ifs.  Each library function below returns ready-made
+:class:`~repro.core.spec.CampaignSpec` variants — catalog, spot mix,
+budget floor, and declarative timeline events (ramp steps, CE outages,
+price/capacity shifts) — that every execution path understands:
 
-  * solo: :func:`run_scenario` drives one ``CloudSimulator`` campaign
-    (the reference semantics), and
-  * batched: ``core/sweep.py`` ticks many (scenario, seed) lanes in
-    lock-step as one array program, bit-reproducible against the solo run
-    at the same (seed, scenario).
+  * solo: ``api.run(spec, seeds=seed)`` drives one ``CloudSimulator``
+    campaign (the reference semantics), and
+  * batched: ``api.run(specs, seeds=seeds)`` ticks all (spec, seed)
+    lanes in lock-step as one array program, bit-reproducible against
+    the solo run at the same (seed, spec).
 
-``Scenario()`` with no arguments is exactly the paper replay
-(``campaign.replay_paper_campaign``): T4 catalog, $58k budget, staged
-ramp to 2k GPUs, the d10.5 CE outage, the 20 %-budget-floor downscale.
+The frozen :class:`Scenario` dataclass is the legacy declaration (ramp/
+outage as dedicated fields rather than a timeline); it remains importable
+as a deprecation-warned shim with a ``to_spec()`` bridge.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+import warnings
+from dataclasses import dataclass
 from typing import Dict, List, Sequence, Tuple
 
 from repro.core.campaign import (OUTAGE_AT_H, OUTAGE_DURATION_H, PAPER_RAMP,
-                                 POST_OUTAGE_TARGET, RampStage, run_campaign)
-from repro.core.provider import (T4_FP32_TFLOPS, ProviderSpec, RegionSpec,
-                                 heterogeneous_catalog, t4_catalog)
+                                 POST_OUTAGE_TARGET, RampStage, _timeline)
+from repro.core.provider import T4_FP32_TFLOPS, ProviderSpec
 from repro.core.simulator import SimConfig
+from repro.core.spec import (CampaignSpec, CEOutage, PAPER_RAMP_EVENTS,
+                             build_catalog as _spec_build_catalog,
+                             paper_spec, run_solo)
 
 
 @dataclass(frozen=True)
 class Scenario:
-    """One campaign variant; defaults reproduce the paper replay."""
+    """Deprecated: one campaign variant as dedicated ramp/outage fields;
+    defaults reproduce the paper replay.  Use ``CampaignSpec`` (same
+    defaults) with a declarative ``timeline`` instead."""
     name: str = "paper"
     catalog: str = "t4"                  # "t4" | "heterogeneous" (§III pool)
     capacity_scale: float = 1.0          # multiply every region's capacity
@@ -57,136 +62,107 @@ class Scenario:
     overhead_per_day: float = 390.0
     accel_tflops: float = T4_FP32_TFLOPS
 
+    def __post_init__(self):
+        warnings.warn(
+            "Scenario is deprecated; declare campaigns as "
+            "repro.core.spec.CampaignSpec (Scenario(...).to_spec() "
+            "bridges existing code)", DeprecationWarning, stacklevel=3)
 
-# -- catalog surgery ------------------------------------------------------
-
-def _scale_capacity(cat: Dict[str, ProviderSpec],
-                    f: float) -> Dict[str, ProviderSpec]:
-    if f == 1.0:
-        return cat
-    return {name: replace(p, regions=tuple(
-        replace(r, capacity=max(1, int(r.capacity * f)))
-        for r in p.regions)) for name, p in cat.items()}
-
-
-def _scale_prices(cat: Dict[str, ProviderSpec],
-                  f: float) -> Dict[str, ProviderSpec]:
-    if f == 1.0:
-        return cat
-    return {name: replace(p, spot_price_per_day=p.spot_price_per_day * f,
-                          ondemand_price_per_day=p.ondemand_price_per_day * f)
-            for name, p in cat.items()}
-
-
-def _split_ondemand(cat: Dict[str, ProviderSpec],
-                    frac: float) -> Dict[str, ProviderSpec]:
-    """Carve ``frac`` of every region's capacity into a preemption-free
-    on-demand pool (priced at the on-demand rate) alongside the remaining
-    spot capacity — the spot/on-demand *mix* what-if: how much preemption
-    churn does a reliability floor buy off, and at what $."""
-    if frac <= 0.0:
-        return cat
-    out: Dict[str, ProviderSpec] = {}
-    for name, p in cat.items():
-        spot_regions = []
-        od_regions = []
-        for r in p.regions:
-            od_cap = max(1, int(r.capacity * frac))
-            spot_cap = max(1, r.capacity - od_cap)
-            spot_regions.append(replace(r, capacity=spot_cap))
-            od_regions.append(RegionSpec(r.name, od_cap, 0.0, 1.0))
-        out[name] = replace(p, regions=tuple(spot_regions))
-        out[f"{name}-od"] = replace(
-            p, name=f"{p.name}-od",
-            spot_price_per_day=p.ondemand_price_per_day,
-            regions=tuple(od_regions))
-    return out
+    def to_spec(self) -> CampaignSpec:
+        """The equivalent declarative spec (ramp/outage fields become
+        timeline events); runs bit-identically on every engine."""
+        return CampaignSpec(
+            name=self.name, catalog=self.catalog,
+            capacity_scale=self.capacity_scale, spot=self.spot,
+            ondemand_fraction=self.ondemand_fraction,
+            price_scale=self.price_scale, budget=self.budget,
+            budget_floor_fraction=self.budget_floor_fraction,
+            downscale_target=self.downscale_target,
+            duration_h=self.duration_h, dt_h=self.dt_h,
+            lease_interval_s=self.lease_interval_s,
+            job_wall_h=self.job_wall_h,
+            job_checkpoint_h=self.job_checkpoint_h,
+            min_queue=self.min_queue,
+            overhead_per_day=self.overhead_per_day,
+            accel_tflops=self.accel_tflops,
+            timeline=_timeline(self.ramp, self.outage,
+                               outage_at_h=self.outage_at_h,
+                               outage_duration_h=self.outage_duration_h,
+                               resume_target=self.resume_target))
 
 
-def build_catalog(sc: Scenario) -> Dict[str, ProviderSpec]:
-    if sc.catalog == "t4":
-        cat = t4_catalog()
-    elif sc.catalog == "heterogeneous":
-        cat = heterogeneous_catalog()
-    else:
-        raise ValueError(f"unknown catalog {sc.catalog!r}")
-    cat = _scale_capacity(cat, sc.capacity_scale)
-    cat = _scale_prices(cat, sc.price_scale)
-    cat = _split_ondemand(cat, sc.ondemand_fraction)
-    return cat
+def build_catalog(sc) -> Dict[str, ProviderSpec]:
+    """Shim: the spec's provider catalog (accepts CampaignSpec or the
+    deprecated Scenario)."""
+    return _spec_build_catalog(sc.to_spec())
 
 
-def sim_config(sc: Scenario, seed: int) -> SimConfig:
-    return SimConfig(duration_h=sc.duration_h, dt_h=sc.dt_h, seed=seed,
-                     lease_interval_s=sc.lease_interval_s,
-                     job_wall_h=sc.job_wall_h,
-                     job_checkpoint_h=sc.job_checkpoint_h,
-                     accel_tflops=sc.accel_tflops,
-                     overhead_per_day=sc.overhead_per_day,
-                     min_queue=sc.min_queue, spot=sc.spot)
+def sim_config(sc, seed: int) -> SimConfig:
+    """Shim: the spec's engine knobs as a SimConfig."""
+    return SimConfig.from_spec(sc.to_spec(), seed)
 
 
-def run_scenario(sc: Scenario, seed: int, engine=None):
-    """Solo reference execution of one (scenario, seed) campaign; the
-    batched sweep engine is pinned lane-by-lane against this
-    (tests/test_sweep.py)."""
-    return run_campaign(
-        build_catalog(sc), budget=sc.budget, ramp=sc.ramp,
-        sim_cfg=sim_config(sc, seed), engine=engine, outage=sc.outage,
-        outage_at_h=sc.outage_at_h, outage_duration_h=sc.outage_duration_h,
-        resume_target=sc.resume_target,
-        budget_floor_fraction=sc.budget_floor_fraction,
-        downscale_target=sc.downscale_target)
+def run_scenario(sc, seed: int, engine=None):
+    """Deprecated shim: solo reference execution of one (scenario, seed)
+    campaign; returns (results dict, controller).  Use
+    ``api.run(spec, seeds=seed)`` — typed results — instead."""
+    warnings.warn("run_scenario() is deprecated; use "
+                  "repro.core.api.run(spec, seeds=seed)",
+                  DeprecationWarning, stacklevel=2)
+    res, ctl = run_solo(sc.to_spec(), seed, engine=engine)
+    return res.to_dict(), ctl
 
 
-# -- the library ----------------------------------------------------------
+# -- the library (all entries are CampaignSpecs) ---------------------------
 
-def paper_baseline() -> Scenario:
-    return Scenario()
+def paper_baseline() -> CampaignSpec:
+    return paper_spec()
 
 
-def ondemand_fallback(budget: float = 58000.0) -> Scenario:
+def ondemand_fallback(budget: float = 58000.0) -> CampaignSpec:
     """All on-demand: zero preemptions, ~4.4x the $/GPU-day — how far does
     the same budget get without spot risk?"""
-    return Scenario(name="ondemand", spot=False, budget=budget)
+    return paper_spec(name="ondemand", spot=False, budget=budget)
 
 
 def spot_ondemand_mixes(fracs: Sequence[float] = (0.1, 0.25, 0.5)
-                        ) -> List[Scenario]:
-    return [Scenario(name=f"mix-od{int(f * 100):02d}", ondemand_fraction=f)
-            for f in fracs]
+                        ) -> List[CampaignSpec]:
+    return [paper_spec(name=f"mix-od{int(f * 100):02d}",
+                       ondemand_fraction=f) for f in fracs]
 
 
-def heterogeneous_burst(capacity_scale: float = 1.0) -> Scenario:
+def heterogeneous_burst(capacity_scale: float = 1.0) -> CampaignSpec:
     """The §III mixed T4/V100/P100/M60 pool under the paper's controller."""
-    return Scenario(name="hetero", catalog="heterogeneous",
-                    capacity_scale=capacity_scale)
+    return paper_spec(name="hetero", catalog="heterogeneous",
+                      capacity_scale=capacity_scale)
 
 
 def outage_grid(times_h: Sequence[float] = (60.0, 252.0, 300.0),
-                durations_h: Sequence[float] = (2.0, 12.0)) -> List[Scenario]:
+                durations_h: Sequence[float] = (2.0, 12.0)
+                ) -> List[CampaignSpec]:
     """What if the CE had died earlier / stayed down longer?"""
-    return [Scenario(name=f"outage-t{int(t)}-d{int(d)}",
-                     outage_at_h=t, outage_duration_h=d)
+    return [paper_spec(name=f"outage-t{int(t)}-d{int(d)}",
+                       timeline=PAPER_RAMP_EVENTS + (
+                           CEOutage(t, d, POST_OUTAGE_TARGET),))
             for t in times_h for d in durations_h]
 
 
 def budget_floor_variants(floors: Sequence[float] = (0.1, 0.2, 0.3)
-                          ) -> List[Scenario]:
+                          ) -> List[CampaignSpec]:
     """How early the 'downscale to 1k' tripwire fires vs GPU-days kept."""
-    return [Scenario(name=f"floor{int(f * 100):02d}",
-                     budget_floor_fraction=f) for f in floors]
+    return [paper_spec(name=f"floor{int(f * 100):02d}",
+                       budget_floor_fraction=f) for f in floors]
 
 
 def price_perturbations(factors: Sequence[float] = (0.8, 1.0, 1.25)
-                        ) -> List[Scenario]:
+                        ) -> List[CampaignSpec]:
     """Uniform spot-price-curve shifts (market drift between planning and
     burst day)."""
-    return [Scenario(name=f"price{int(f * 100):03d}", price_scale=f)
+    return [paper_spec(name=f"price{int(f * 100):03d}", price_scale=f)
             for f in factors]
 
 
-def default_suite() -> List[Scenario]:
+def default_suite() -> List[CampaignSpec]:
     """A representative pre-burst planning suite: the paper baseline plus
     one of each what-if family."""
     return [paper_baseline(),

@@ -49,6 +49,20 @@ class SimConfig:
     engine: str = "array"               # "array" (vectorized) | "object"
     spot: bool = True                   # spot (default) vs on-demand pricing
 
+    @classmethod
+    def from_spec(cls, spec, seed: int,
+                  engine: Optional[str] = None) -> "SimConfig":
+        """Engine knobs of a ``repro.core.spec.CampaignSpec`` (duck-typed
+        so the deprecated Scenario shim also works)."""
+        return cls(duration_h=spec.duration_h, dt_h=spec.dt_h,
+                   seed=seed, lease_interval_s=spec.lease_interval_s,
+                   job_wall_h=spec.job_wall_h,
+                   job_checkpoint_h=spec.job_checkpoint_h,
+                   accel_tflops=spec.accel_tflops,
+                   overhead_per_day=spec.overhead_per_day,
+                   min_queue=spec.min_queue, spot=spec.spot,
+                   engine=engine or cls.engine)
+
 
 @dataclass
 class TickStats:
@@ -91,6 +105,16 @@ class CloudSimulator:
         self.accel_hours = 0.0           # delivered accelerator wall hours
         self.busy_hours = 0.0            # hours with a job attached
         self.busy_hours_by_provider: Dict[str, float] = {}
+
+    @classmethod
+    def from_spec(cls, spec, seed: int,
+                  engine: Optional[str] = None) -> "CloudSimulator":
+        """Build a simulator straight from a declarative
+        ``repro.core.spec.CampaignSpec`` (catalog + engine knobs); the
+        spec's *timeline* is installed by ``spec.TimelineController``."""
+        from repro.core.spec import build_catalog
+        cfg = SimConfig.from_spec(spec, seed)
+        return cls(build_catalog(spec), spec.budget, cfg, engine=engine)
 
     # -- scheduling ---------------------------------------------------------
     def at(self, t_h: float, fn: Callable[["CloudSimulator"], None]):

@@ -28,8 +28,16 @@ accrues the same scalar interval, so a tick's charges are one bincount.
 
 Lanes are grouped into lock-step batches by structural compatibility
 (tick size, duration, and the price-ordered (provider, region) group
-list); prices, budgets, ramps, outage timing, lease intervals and queue
-depths vary freely per lane within a batch.
+list); prices, budgets, timelines, lease intervals and queue depths
+vary freely per lane within a batch.
+
+Campaign control is the declarative ``CampaignSpec`` timeline
+(core/spec.py): ``SetTarget`` / ``CEOutage`` / ``PriceShift`` /
+``BudgetFloor`` / ``CapacityShift`` events compile to per-lane
+``(t, kind, arg)`` tuples interpreted by ``_run_events`` — no Python
+callbacks to special-case.  Every executed event is recorded in a
+per-lane ``events_fired`` provenance log, bit-identical to the solo
+``TimelineController``'s.
 
 Tick-phase primitives (hazard model, checkpoint flooring, segmented
 ranks) are shared with the solo array engine — see core/fleet.py.
@@ -45,7 +53,8 @@ from repro.core.budget import BudgetLedger
 from repro.core.fleet import (_NO_PILOT, _PILOT_DEAD, _PILOT_LIVE,
                               checkpoint_floor, preemption_rate,
                               segment_ranks)
-from repro.core.scenarios import Scenario, build_catalog
+from repro.core.spec import (BudgetFloor, CampaignSpec, CapacityShift,
+                             CEOutage, PriceShift, SetTarget, build_catalog)
 
 # ledger alert levels, descending — the solo controller reacts to these
 # ledger callbacks, so both engines must cross the same set
@@ -78,13 +87,40 @@ def _sorted_remove(a: np.ndarray, vs: np.ndarray) -> np.ndarray:
 
 @dataclass
 class _Lane:
-    """One (scenario, seed) campaign prepared for batching."""
-    scenario: Scenario
+    """One (spec, seed) campaign prepared for batching."""
+    spec: CampaignSpec
     seed: int
     pairs: list          # (ProviderSpec, RegionSpec), price-ordered
 
 
-def _prepare(sc: Scenario, seed: int) -> Tuple[tuple, _Lane]:
+def _compile_timeline(spec: CampaignSpec) -> List[tuple]:
+    """Flatten a spec's event timeline into stably time-sorted
+    ``(t, kind, arg)`` tuples — the same expansion order (CEOutage
+    becomes on/off at its declaration point) and tie-breaking (stable by
+    timeline position) as the solo ``TimelineController`` installs."""
+    evs: List[tuple] = []
+    for ev in spec.timeline:
+        if isinstance(ev, SetTarget):
+            evs.append((ev.at_h, "scale", ev.target))
+        elif isinstance(ev, CEOutage):
+            evs.append((ev.at_h, "outage_on", 0))
+            evs.append((ev.at_h + ev.duration_h, "outage_off",
+                        ev.resume_target))
+        elif isinstance(ev, PriceShift):
+            evs.append((ev.at_h, "price", ev.factor))
+        elif isinstance(ev, CapacityShift):
+            evs.append((ev.at_h, "capacity", ev.factor))
+        elif isinstance(ev, BudgetFloor):
+            evs.append((ev.at_h, "floor",
+                        (ev.fraction, ev.downscale_target)))
+        else:
+            raise ValueError(f"unknown timeline event {ev!r}")
+    evs.sort(key=lambda e: e[0])
+    return evs
+
+
+def _prepare(sc, seed: int) -> Tuple[tuple, _Lane]:
+    sc = sc.to_spec().validate()      # CampaignSpec or Scenario shim
     cat = build_catalog(sc)
     pairs = [(p, r) for p in cat.values() for r in p.regions]
     pairs.sort(key=lambda pr: (
@@ -110,8 +146,8 @@ class BatchedFleetEngine:
         G = len(pairs)
         self.G = G
         self.LG = B * G
-        self.dt = ref.scenario.dt_h
-        self.duration = ref.scenario.duration_h
+        self.dt = ref.spec.dt_h
+        self.duration = ref.spec.duration_h
 
         # -- static per-group config (identical across lanes by batch key)
         self.g_provider = [p.name for p, _ in pairs]
@@ -137,14 +173,15 @@ class BatchedFleetEngine:
         self.homogeneous = all(t is None
                                for t in self.provider_tflops.values())
 
-        # flattened [LG] views used on the hot path
+        # flattened [LG] views used on the hot path; capacity is per-lane
+        # state (CapacityShift events mutate a lane's slice mid-run)
         self.g_cap_lg = np.tile(self.g_capacity, B)
         self.g_pre_rate_lg = np.tile(self.g_pre_rate, B)
         self.g_pre_scale_lg = np.tile(self.g_pre_scale, B)
 
         # -- per-lane config columns -------------------------------------
         def col(f, dtype=np.float64):
-            return np.array([f(ln.scenario) for ln in self.lanes],
+            return np.array([f(ln.spec) for ln in self.lanes],
                             dtype=dtype)
 
         self.lane_budget = col(lambda s: s.budget)
@@ -159,11 +196,15 @@ class BatchedFleetEngine:
         self.connected_lg = (lease[:, None] < g_nat[None, :]).ravel()
         self.nat_possible = not bool(self.connected_lg.all())
         # $/accel-hour per (lane, group): lane's spot/on-demand choice and
-        # price perturbation are baked into its built catalog
-        self.rate_h_lg = np.array(
-            [((p.spot_price_per_day if ln.scenario.spot
+        # static price perturbation are baked into its built catalog;
+        # PriceShift events multiply a per-lane cumulative scale on top
+        # (effective = base * scale, the solo engines' exact expression)
+        self._rate_base_lg = np.array(
+            [((p.spot_price_per_day if ln.spec.spot
                else p.ondemand_price_per_day) / 24.0)
              for ln in self.lanes for p, _ in ln.pairs])
+        self.rate_h_lg = self._rate_base_lg.copy()
+        self.lane_price_scale = np.ones(B)
 
         # -- per-lane RNG/counters/state ---------------------------------
         self.rngs = [np.random.default_rng(ln.seed) for ln in self.lanes]
@@ -175,18 +216,15 @@ class BatchedFleetEngine:
         self.capped = np.zeros(B, dtype=bool)
         self.cap_pending = np.zeros(B, dtype=bool)
 
-        # controller events: (t, kind, arg), stably time-sorted per lane
+        # controller events: the spec timeline compiled to (t, kind, arg)
+        # tuples, stably time-sorted per lane; every execution is logged
+        # to the lane's events_fired provenance
         self.events: List[List[tuple]] = []
+        self.events_fired: List[List[dict]] = [[] for _ in range(B)]
         self.ev_ptr = [0] * B
         self.next_event_t = np.full(B, np.inf)
         for b, ln in enumerate(self.lanes):
-            sc = ln.scenario
-            evs = [(st.start_h, "scale", st.target) for st in sc.ramp]
-            if sc.outage:
-                evs.append((sc.outage_at_h, "outage_on", 0))
-                evs.append((sc.outage_at_h + sc.outage_duration_h,
-                            "outage_off", sc.resume_target))
-            evs.sort(key=lambda e: e[0])
+            evs = _compile_timeline(ln.spec)
             self.events.append(evs)
             if evs:
                 self.next_event_t[b] = evs[0][0]
@@ -392,7 +430,7 @@ class BatchedFleetEngine:
         self.g_target[b, g] = max(0, n)
         lg = b * self.G + g
         live = int(self.live_lg[lg])
-        fillable = int(min(self.g_target[b, g], self.g_capacity[g]))
+        fillable = int(min(self.g_target[b, g], self.g_cap_lg[lg]))
         if live < fillable:
             self._append_single(b, g, fillable - live, now)
         elif live > self.g_target[b, g]:
@@ -410,7 +448,7 @@ class BatchedFleetEngine:
     def _lane_scale_to(self, b: int, n: int, now: float):
         remaining = max(0, int(n))
         for g in range(self.G):
-            want = min(remaining, int(self.g_capacity[g]))
+            want = min(remaining, int(self.g_cap_lg[b * self.G + g]))
             self._lane_set_group_target(b, g, want, now)
             remaining -= int(self.live_lg[b * self.G + g])
 
@@ -424,12 +462,15 @@ class BatchedFleetEngine:
                 or (self.next_event_t <= now).any()):
             return
         for b in range(self.B):
+            fired = self.events_fired[b]
             # the budget-floor cap was scheduled "at now" during the
             # previous tick's billing — it sorts before any event due
             # this tick, exactly like the solo sim.at(now, ...) insertion
             if self.cap_pending[b]:
                 self._lane_scale_to(b, int(self.lane_downscale[b]), now)
                 self.cap_pending[b] = False
+                fired.append({"t": float(now), "event": "budget_floor",
+                              "target": int(self.lane_downscale[b])})
             evs = self.events[b]
             while self.ev_ptr[b] < len(evs) \
                     and evs[self.ev_ptr[b]][0] <= now:
@@ -439,12 +480,40 @@ class BatchedFleetEngine:
                     tgt = min(arg, int(self.lane_downscale[b])) \
                         if self.capped[b] else arg
                     self._lane_scale_to(b, tgt, now)
+                    fired.append({"t": float(now), "event": "scale",
+                                  "target": int(tgt)})
                 elif kind == "outage_on":
                     self.outage[b] = True
                     self._lane_deprovision(b, now)
+                    fired.append({"t": float(now), "event": "outage_on"})
                 elif kind == "outage_off":
                     self.outage[b] = False
                     self._lane_scale_to(b, int(arg), now)
+                    fired.append({"t": float(now), "event": "outage_off",
+                                  "target": int(arg)})
+                elif kind == "price":
+                    # cumulative per-lane scale; effective rate is always
+                    # base * scale so it stays bit-identical to the solo
+                    # engines' (price/24) * price_scale
+                    s = slice(b * self.G, (b + 1) * self.G)
+                    self.lane_price_scale[b] *= arg
+                    self.rate_h_lg[s] = self._rate_base_lg[s] \
+                        * self.lane_price_scale[b]
+                    fired.append({"t": float(now), "event": "price",
+                                  "factor": float(arg)})
+                elif kind == "capacity":
+                    s = slice(b * self.G, (b + 1) * self.G)
+                    self.g_cap_lg[s] = np.maximum(
+                        1, (self.g_cap_lg[s] * arg).astype(np.int64))
+                    fired.append({"t": float(now), "event": "capacity",
+                                  "factor": float(arg)})
+                elif kind == "floor":
+                    frac, tgt = arg
+                    self.lane_floor[b] = frac
+                    self.lane_downscale[b] = tgt
+                    fired.append({"t": float(now), "event": "floor",
+                                  "fraction": float(frac),
+                                  "target": int(tgt)})
             self.next_event_t[b] = evs[self.ev_ptr[b]][0] \
                 if self.ev_ptr[b] < len(evs) else np.inf
 
@@ -922,8 +991,14 @@ class BatchedFleetEngine:
         return out
 
     # -- per-lane results, schema-identical to CloudSimulator.results() --
+    def lane_events(self, b: int) -> List[dict]:
+        """The lane's executed-event provenance (timeline events plus
+        budget-floor caps), bit-identical to the solo controller's
+        ``events_fired``."""
+        return list(self.events_fired[b])
+
     def lane_results(self, b: int) -> dict:
-        sc = self.lanes[b].scenario
+        sc = self.lanes[b].spec
         busy_by_prov = {}
         for pidx, name in enumerate(self.providers):
             h = float(self.busy_hours_by_provider[b, pidx])
@@ -979,24 +1054,32 @@ class BatchedFleetEngine:
 _MAX_LANES_PER_ENGINE = 64
 
 
-def run_batched(lane_specs: Sequence[Tuple[Scenario, int]],
-                max_lanes: int = _MAX_LANES_PER_ENGINE) -> List[dict]:
-    """Run every (scenario, seed) lane, batching lock-step-compatible
-    lanes into shared engines (chunked to keep the working set in
-    cache); returns per-lane results in input order."""
+def run_batched_detailed(lane_specs: Sequence[Tuple[CampaignSpec, int]],
+                         max_lanes: int = _MAX_LANES_PER_ENGINE
+                         ) -> List[Tuple[dict, List[dict]]]:
+    """Run every (spec, seed) lane, batching lock-step-compatible lanes
+    into shared engines (chunked to keep the working set in cache);
+    returns per-lane ``(results, events_fired)`` in input order."""
     prepared = [_prepare(sc, seed) for sc, seed in lane_specs]
     batches: Dict[tuple, List[int]] = {}
     for i, (key, _lane) in enumerate(prepared):
         batches.setdefault(key, []).append(i)
-    out: List[Optional[dict]] = [None] * len(prepared)
+    out: List[Optional[Tuple[dict, List[dict]]]] = [None] * len(prepared)
     for idxs in batches.values():
         for c in range(0, len(idxs), max_lanes):
             chunk = idxs[c:c + max_lanes]
             eng = BatchedFleetEngine([prepared[i][1]
                                       for i in chunk]).run()
             for j, i in enumerate(chunk):
-                out[i] = eng.lane_results(j)
+                out[i] = (eng.lane_results(j), eng.lane_events(j))
     return out
+
+
+def run_batched(lane_specs: Sequence[Tuple[CampaignSpec, int]],
+                max_lanes: int = _MAX_LANES_PER_ENGINE) -> List[dict]:
+    """Like :func:`run_batched_detailed`, results only."""
+    return [res for res, _events in
+            run_batched_detailed(lane_specs, max_lanes)]
 
 
 # -- sweep result table ---------------------------------------------------
@@ -1005,10 +1088,58 @@ _BAND_METRICS = ("cost", "accel_days", "eflop_hours_fp32", "preemptions",
                  "jobs_finished")
 
 
+def _flatten_row(row: dict) -> dict:
+    """Dotted-key flattening for CSV export; events_fired is serialized
+    as one compact deterministic cell."""
+    out: dict = {}
+
+    def walk(prefix, v):
+        if isinstance(v, dict):
+            for k in sorted(v):
+                walk(f"{prefix}.{k}" if prefix else str(k), v[k])
+        else:
+            out[prefix] = v
+
+    for k, v in row.items():
+        if k == "events_fired":
+            out[k] = "|".join(
+                ";".join(f"{kk}={ev[kk]}" for kk in sorted(ev))
+                for ev in v)
+        else:
+            walk(k, v)
+    return out
+
+
 @dataclass
 class SweepResult:
-    """Per-lane campaign totals plus per-scenario summary bands."""
+    """Per-lane campaign totals plus per-scenario summary bands.
+
+    Rows are legacy ``results()`` dicts extended with ``scenario`` /
+    ``seed`` / ``events_fired`` (the executed-event provenance both the
+    batched and sequential engines record identically)."""
     rows: List[dict]
+
+    def to_csv(self, path: Optional[str] = None) -> str:
+        """Deterministic CSV of the per-lane rows: rows sorted by
+        (scenario, seed), columns sorted by dotted key — byte-identical
+        across runs of the same sweep, so CI artifacts diff cleanly."""
+        import csv
+        import io
+        flat = sorted((_flatten_row(r) for r in self.rows),
+                      key=lambda r: (str(r.get("scenario", "")),
+                                     r.get("seed", 0)))
+        cols = ["scenario", "seed"] + sorted(
+            {k for r in flat for k in r} - {"scenario", "seed"})
+        buf = io.StringIO()
+        w = csv.DictWriter(buf, fieldnames=cols, restval="",
+                           lineterminator="\n")
+        w.writeheader()
+        w.writerows(flat)
+        text = buf.getvalue()
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
 
     def scenario_names(self) -> List[str]:
         seen: List[str] = []

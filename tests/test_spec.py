@@ -1,0 +1,334 @@
+"""CampaignSpec / api.run contract tests (deterministic; a hypothesis
+round-trip + equivalence property rides along in
+tests/test_spec_properties.py where hypothesis is installed):
+
+  * JSON round-trip is lossless, including inline provider catalogs and
+    every timeline event kind,
+  * the committed golden spec (tests/data/paper_replay.spec.json) equals
+    paper_spec() and reproduces the seed-2021 replay totals bit-for-bit
+    through the run() front door,
+  * randomized specs — including the new timed PriceShift / BudgetFloor /
+    CapacityShift events — run bit-identically solo vs batched, with
+    matching events_fired provenance,
+  * SweepResult.to_csv is deterministic and row-ordered,
+  * the legacy Scenario / run_campaign / replay_paper_campaign shims
+    keep working (deprecation-warned) with unchanged semantics.
+"""
+import json
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.api import run, sweep as api_sweep
+from repro.core.campaign import replay_paper_campaign, sweep_campaigns
+from repro.core.provider import t4_catalog
+from repro.core.spec import (BudgetFloor, CampaignResult, CampaignSpec,
+                             CapacityShift, CEOutage, PAPER_RAMP_EVENTS,
+                             PriceShift, SetTarget, paper_spec, run_solo)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "paper_replay.spec.json")
+
+# seed-2021 paper-replay totals (pinned; must never drift)
+PAPER_2021 = {"cost": 56936.43, "accel_days": 16407.9,
+              "eflop_hours_fp32": 3.007, "preemptions": 3716,
+              "jobs_finished": 97852}
+
+
+def _assert_results_match(lane, solo):
+    """Counts exact; rounded $ values get one rounding ulp of slack
+    (identical policy to tests/test_fleet_engine.py)."""
+    assert set(lane) >= set(solo)
+    for k in solo:
+        vs, vl = solo[k], lane[k]
+        if isinstance(vs, dict):
+            assert set(vs) == set(vl), k
+            for kk in vs:
+                assert vl[kk] == pytest.approx(vs[kk], rel=1e-9,
+                                               abs=0.02), (k, kk)
+        elif isinstance(vs, (int, np.integer)) and not isinstance(vs, bool):
+            assert vl == vs, k
+        else:
+            assert vl == pytest.approx(vs, rel=1e-9, abs=0.02), k
+
+
+# -- serialization ---------------------------------------------------------
+
+def test_json_roundtrip_every_event_kind_and_inline_catalog():
+    spec = CampaignSpec(
+        name="kitchen-sink", catalog="heterogeneous",
+        providers=tuple(t4_catalog().values()),   # inline catalog wins
+        capacity_scale=0.5, spot=False, ondemand_fraction=0.25,
+        price_scale=1.25, budget=12345.67, budget_floor_fraction=0.25,
+        downscale_target=321, duration_h=48.0, dt_h=0.25,
+        lease_interval_s=90.0, job_wall_h=3.0, job_checkpoint_h=0.5,
+        min_queue=1234, overhead_per_day=10.0, accel_tflops=7.5,
+        timeline=(SetTarget(0.0, 100), PriceShift(6.0, 1.3),
+                  CapacityShift(12.0, 0.5), BudgetFloor(18.0, 0.1, 50),
+                  CEOutage(24.0, 3.0, 77), SetTarget(30.0, 200)))
+    again = CampaignSpec.from_json(spec.to_json())
+    assert again == spec
+    # and the dict form is pure JSON (no dataclasses smuggled through)
+    assert json.loads(spec.to_json())["timeline"][1] \
+        == {"kind": "price_shift", "at_h": 6.0, "factor": 1.3}
+
+
+def test_inline_catalog_json_is_strict_json():
+    """nat_idle_timeout_s defaults to inf; the serialized spec must still
+    be standard JSON (no Python-only Infinity tokens) and round-trip."""
+    spec = CampaignSpec(name="inline",
+                        providers=tuple(t4_catalog().values()))
+    text = spec.to_json()
+    assert "Infinity" not in text
+    # strict parse: reject non-standard constants outright
+    strict = json.loads(text, parse_constant=lambda c: (_ for _ in ()
+                                                        ).throw(
+                            ValueError(c)))
+    assert strict["providers"][1]["nat_idle_timeout_s"] is None
+    again = CampaignSpec.from_json(text)
+    assert again == spec
+    assert again.providers[1].nat_idle_timeout_s == float("inf")
+
+
+def test_run_treats_string_seed_as_one_seed():
+    """seeds="2021" must not become the per-character sweep [2,0,2,1]."""
+    spec = CampaignSpec(name="strseed", duration_h=12.0, budget=2000.0,
+                        timeline=(SetTarget(0.0, 50),))
+    res = run(spec, seeds="7")
+    assert isinstance(res, CampaignResult)
+    assert res.seed == 7
+
+
+def test_from_json_rejects_unknowns():
+    with pytest.raises(ValueError):
+        CampaignSpec.from_dict({"schema_version": 99})
+    with pytest.raises(ValueError):
+        CampaignSpec.from_dict({"no_such_field": 1})
+    with pytest.raises(ValueError):
+        CampaignSpec.from_dict(
+            {"timeline": [{"kind": "warp_drive", "at_h": 0.0}]})
+
+
+def test_golden_paper_spec_file_is_current():
+    with open(GOLDEN) as f:
+        assert CampaignSpec.from_json(f.read()) == paper_spec()
+
+
+# -- the flagship invariant: golden spec -> paper totals -------------------
+
+@pytest.fixture(scope="module")
+def paper_result():
+    with open(GOLDEN) as f:
+        spec = CampaignSpec.from_json(f.read())
+    return run(spec, seeds=[2021])
+
+
+def test_run_paper_spec_reproduces_pinned_totals(paper_result):
+    res = paper_result
+    assert isinstance(res, CampaignResult)
+    for k, v in PAPER_2021.items():
+        assert res[k] == v, k
+    # typed accessors agree with the legacy mapping facade
+    assert res.cost == res["cost"]
+    assert res.to_dict()["budget"]["overdraft"] == 0
+    cmp = res.compare_paper()
+    assert abs(cmp["cost"]["err_pct"]) < 15
+    assert 1.8 <= res.doubling_factor() <= 2.4
+    # provenance: the full operational sequence was recorded
+    events = [e["event"] for e in res.events_fired]
+    assert events == ["scale"] * 6 + ["outage_on", "outage_off",
+                                      "budget_floor"]
+    assert any("budget floor hit" in line for line in res.log)
+    assert len(res.history) == 336 * 4
+
+
+def test_run_matches_deprecated_replay_shim(paper_result):
+    with pytest.warns(DeprecationWarning):
+        legacy, ctl = replay_paper_campaign(seed=2021)
+    assert paper_result.to_dict() == legacy
+    assert list(paper_result.log) == ctl.log
+
+
+# -- randomized specs: solo == batched, including the new event kinds ------
+
+def _random_specs():
+    """A deliberately gnarly mix of catalogs, mixes and timed events.
+    Floors sit on ledger-threshold values so the cap tick is
+    engine-order independent."""
+    return [
+        CampaignSpec(
+            name="shifty", duration_h=36.0, budget=9000.0,
+            budget_floor_fraction=0.25, downscale_target=150,
+            timeline=(SetTarget(0.0, 300), PriceShift(6.0, 1.4),
+                      CapacityShift(10.0, 0.4), SetTarget(18.0, 500),
+                      PriceShift(24.0, 0.7))),
+        CampaignSpec(
+            name="floor-rearm", duration_h=36.0, budget=6000.0,
+            budget_floor_fraction=0.1, downscale_target=50,
+            timeline=(SetTarget(0.0, 400), BudgetFloor(8.0, 0.5, 120),
+                      SetTarget(12.0, 600), CEOutage(20.0, 4.0, 250))),
+        CampaignSpec(
+            name="hetero-squeeze", catalog="heterogeneous",
+            duration_h=30.0, budget=40000.0, min_queue=6000,
+            timeline=(SetTarget(0.0, 2500), CapacityShift(8.0, 0.3),
+                      CapacityShift(16.0, 2.0), PriceShift(12.0, 1.1))),
+        CampaignSpec(
+            name="od-mix", ondemand_fraction=0.25, price_scale=0.9,
+            duration_h=30.0, budget=15000.0,
+            timeline=(SetTarget(0.0, 800), PriceShift(10.0, 2.0),
+                      SetTarget(20.0, 200))),
+        CampaignSpec(
+            name="ondemand-storm", spot=False, duration_h=24.0,
+            budget=30000.0, lease_interval_s=300.0,  # NAT-drop regime
+            timeline=(SetTarget(0.0, 350), CEOutage(10.0, 2.0, 300))),
+    ]
+
+
+@pytest.mark.parametrize("spec", _random_specs(),
+                         ids=lambda s: s.name)
+def test_solo_vs_batched_bit_identical(spec):
+    solo, ctl = run_solo(spec, 13)
+    batched = run(spec, seeds=13, engine="batched")
+    _assert_results_match(batched.to_dict(), solo.to_dict())
+    assert list(batched.events_fired) == list(solo.events_fired)
+    # the spec actually exercised its timeline
+    assert len(solo.events_fired) >= len(spec.timeline)
+
+
+def test_mixed_spec_sweep_batched_matches_sequential():
+    """All the gnarly specs in ONE sweep call: lanes group into
+    structurally-compatible engines and every row still matches the
+    sequential reference, events_fired included."""
+    specs = _random_specs()
+    seeds = [3, 13]
+    batched = api_sweep(specs, seeds, engine="batched")
+    seq = api_sweep(specs, seeds, engine="sequential")
+    assert len(batched.rows) == len(specs) * len(seeds)
+    for rb, rs in zip(batched.rows, seq.rows):
+        assert (rb["scenario"], rb["seed"]) == (rs["scenario"], rs["seed"])
+        _assert_results_match(rb, rs)
+        assert rb["events_fired"] == rs["events_fired"]
+        assert rb["events_fired"], "provenance must not be empty"
+
+
+def test_sweep_campaigns_sequential_carries_events_fired():
+    """Regression (satellite): the sequential engine used to discard the
+    per-lane controller provenance; both engines now record it."""
+    spec = CampaignSpec(name="tiny", duration_h=24.0, budget=3000.0,
+                        timeline=(SetTarget(0.0, 120),
+                                  CEOutage(6.0, 2.0, 80)))
+    for engine in ("batched", "sequential"):
+        sw = sweep_campaigns([spec], [5], engine=engine)
+        (row,) = sw.rows
+        kinds = [e["event"] for e in row["events_fired"]]
+        assert kinds[:2] == ["scale", "outage_on"], engine
+        assert "outage_off" in kinds, engine
+
+
+# -- price/capacity shifts actually bite -----------------------------------
+
+def test_price_shift_charges_more():
+    base = CampaignSpec(name="flat", duration_h=24.0, budget=1e9,
+                        overhead_per_day=0.0,
+                        timeline=(SetTarget(0.0, 200),))
+    shifted = CampaignSpec(name="spike", duration_h=24.0, budget=1e9,
+                           overhead_per_day=0.0,
+                           timeline=(SetTarget(0.0, 200),
+                                     PriceShift(12.0, 3.0)))
+    r0 = run(base, seeds=2)
+    r1 = run(shifted, seeds=2)
+    # 12h at 1x + 12h at 3x => roughly 2x the flat bill
+    assert 1.7 * r0.cost < r1.cost < 2.3 * r0.cost
+    assert r1.accel_hours == r0.accel_hours   # fleet behavior unchanged
+
+
+def test_capacity_shift_limits_refill_without_evicting():
+    spec = CampaignSpec(name="shrink", duration_h=24.0, budget=1e9,
+                        timeline=(SetTarget(0.0, 1000),
+                                  CapacityShift(8.0, 0.1)))
+    res, ctl = run_solo(spec, 4)
+    running = [t.running for t in res.history]
+    assert max(running[:32]) >= 990         # filled before the shift
+    # capacity shrink does not evict: fleet persists above the new cap
+    assert running[33] > 500
+    assert ctl.sim.prov.groups[0].region.capacity \
+        == max(1, int(500 * 0.1))
+
+
+# -- CSV artifact ----------------------------------------------------------
+
+def test_sweep_csv_deterministic_and_sorted(tmp_path):
+    specs = [CampaignSpec(name="b", duration_h=24.0, budget=4000.0,
+                          timeline=(SetTarget(0.0, 100),)),
+             CampaignSpec(name="a", duration_h=24.0, budget=4000.0,
+                          timeline=(SetTarget(0.0, 150),))]
+    sw = api_sweep(specs, [2, 1], engine="batched")
+    text = sw.to_csv()
+    assert text == sw.to_csv()              # byte-deterministic
+    lines = text.strip().split("\n")
+    assert lines[0].startswith("scenario,seed,")
+    assert "budget.total_spent" in lines[0]
+    assert "events_fired" in lines[0]
+    # rows sorted by (scenario, seed) regardless of input order
+    keys = [tuple(line.split(",")[:2]) for line in lines[1:]]
+    assert keys == [("a", "1"), ("a", "2"), ("b", "1"), ("b", "2")]
+    out = tmp_path / "sweep.csv"
+    sw.to_csv(str(out))
+    assert out.read_text() == text
+
+
+# -- CLI -------------------------------------------------------------------
+
+def test_campaigns_cli_run_and_show(tmp_path, capsys):
+    from repro import campaigns as cli
+    spec = CampaignSpec(name="cli-smoke", duration_h=12.0, budget=2000.0,
+                        timeline=(SetTarget(0.0, 80),))
+    spec_path = tmp_path / "smoke.spec.json"
+    spec_path.write_text(spec.to_json())
+    out_json = tmp_path / "out.json"
+    assert cli.main(["run", str(spec_path), "--seeds", "3",
+                     "--json", str(out_json)]) == 0
+    payload = json.loads(out_json.read_text())
+    assert payload["kind"] == "campaign"
+    assert payload["results"]["cost"] > 0
+    assert payload["spec"]["name"] == "cli-smoke"
+    # sweep path + csv artifact
+    out_csv = tmp_path / "out.csv"
+    assert cli.main(["run", str(spec_path), "--seeds", "3,4",
+                     "--csv", str(out_csv)]) == 0
+    assert out_csv.read_text().startswith("scenario,seed,")
+    assert cli.main(["show", str(spec_path)]) == 0
+    assert "cli-smoke" in capsys.readouterr().out
+
+
+def test_campaigns_cli_paper_emits_golden(tmp_path):
+    from repro import campaigns as cli
+    out = tmp_path / "paper.spec.json"
+    assert cli.main(["paper", "--out", str(out)]) == 0
+    assert out.read_text() == open(GOLDEN).read()
+
+
+# -- shims stay importable and equivalent ----------------------------------
+
+def test_scenario_shim_bridges_to_spec():
+    with pytest.warns(DeprecationWarning):
+        from repro.core.scenarios import Scenario
+        sc = Scenario()
+    assert sc.to_spec() == paper_spec()
+    with pytest.warns(DeprecationWarning):
+        custom = Scenario(outage_at_h=60.0, outage_duration_h=12.0)
+    tl = custom.to_spec().timeline
+    assert tl[:-1] == PAPER_RAMP_EVENTS
+    assert tl[-1] == CEOutage(60.0, 12.0, 1000)
+
+
+def test_run_accepts_scenario_shims():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.core.scenarios import Scenario
+        sc = Scenario(duration_h=24.0, outage=False, budget=5000.0)
+        res = run(sc, seeds=9)
+    solo, _ = run_solo(sc.to_spec(), 9)
+    assert res.to_dict() == solo.to_dict()
