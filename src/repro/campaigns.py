@@ -7,6 +7,7 @@ CI-pinnable:
     PYTHONPATH=src python -m repro.campaigns run spec.json \\
         --seeds 2021,2022,2023 --engine batched --csv sweep.csv
     PYTHONPATH=src python -m repro.campaigns show spec.json
+    PYTHONPATH=src python -m repro.campaigns lint spec.json
     PYTHONPATH=src python -m repro.campaigns paper --out paper.spec.json
 
 ``run`` executes the spec(s) through the ``repro.core.api.run`` front
@@ -23,7 +24,8 @@ import sys
 from typing import List, Optional
 
 from repro.core.api import run as api_run
-from repro.core.spec import CampaignResult, CampaignSpec, paper_spec
+from repro.core.spec import (CampaignResult, CampaignSpec, lint_spec,
+                             paper_spec)
 
 
 def _load_spec(path: str) -> CampaignSpec:
@@ -89,6 +91,29 @@ def cmd_show(args) -> int:
     return 0
 
 
+def cmd_lint(args) -> int:
+    """Spec-level validation: report every finding (unsorted/duplicate
+    event times, negative prices/targets, unknown catalog/provider
+    names) and exit 1 if any spec has one."""
+    bad = 0
+    for path in args.spec:
+        try:
+            spec = _load_spec(path)
+        except (OSError, ValueError, KeyError, TypeError) as e:
+            print(f"{path}: ERROR: cannot load spec: {e}")
+            bad += 1
+            continue
+        findings = lint_spec(spec)
+        if findings:
+            bad += 1
+            for f in findings:
+                print(f"{path}: {f}")
+        else:
+            print(f"{path}: OK ({spec.name!r}, "
+                  f"{len(spec.timeline)} timeline events)")
+    return 1 if bad else 0
+
+
 def cmd_paper(args) -> int:
     text = paper_spec().to_json()
     if args.out:
@@ -122,6 +147,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     p_show = sub.add_parser("show", help="pretty-print spec file(s)")
     p_show.add_argument("spec", nargs="+")
     p_show.set_defaults(fn=cmd_show)
+
+    p_lint = sub.add_parser(
+        "lint", help="validate spec file(s) without running them")
+    p_lint.add_argument("spec", nargs="+")
+    p_lint.set_defaults(fn=cmd_lint)
 
     p_paper = sub.add_parser("paper",
                              help="emit the paper-replay golden spec")

@@ -35,13 +35,25 @@ __all__ = ["run", "sweep", "paper_spec", "CampaignResult", "SweepResult"]
 _SOLO_ENGINES = {"array", "object"}
 
 
+def _as_seed(s) -> int:
+    """Seeds are exact campaign identities: a float like 3.7 used to
+    truncate to 3 via ``int()`` and silently run a different campaign,
+    so floats (integral ones included) are rejected outright."""
+    import numbers
+    if isinstance(s, numbers.Real) and not isinstance(s, numbers.Integral):
+        raise TypeError(
+            f"seeds must be integers, got {s!r} ({type(s).__name__}); "
+            "float seeds would be silently truncated — pass an int")
+    return int(s)
+
+
 def sweep(specs: Sequence[CampaignSpec], seeds: Sequence[int],
           engine: str = "batched") -> SweepResult:
     """Run every (spec x seed) lane and always return a SweepResult
     (``run()`` delegates here for multi-lane inputs).  ``engine``:
     "batched" (lock-step array program) or "sequential" / "array" /
     "object" (solo reference loop)."""
-    lanes = [(spec.to_spec(), int(seed)) for spec in specs
+    lanes = [(spec.to_spec(), _as_seed(seed)) for spec in specs
              for seed in seeds]
     if engine == "batched":
         detailed = run_batched_detailed(lanes)
@@ -74,8 +86,8 @@ def _coerce_seeds(seeds) -> Tuple[List[int], bool]:
         # become the 4-seed sweep [2, 0, 2, 1] — treat it as one seed
         return [int(seeds)], True
     if not isinstance(seeds, Iterable):
-        return [int(seeds)], True
-    seeds = [int(s) for s in seeds]
+        return [_as_seed(seeds)], True
+    seeds = [_as_seed(s) for s in seeds]
     if not seeds:
         raise ValueError("run() needs at least one seed")
     return seeds, False

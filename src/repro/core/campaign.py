@@ -187,5 +187,6 @@ def sweep_campaigns(scenarios, seeds, *, engine: str = "batched"):
     from repro.core.api import sweep as api_sweep
     if engine not in ("batched", "sequential"):
         raise ValueError(f"unknown sweep engine {engine!r}")
-    return api_sweep([s.to_spec() for s in scenarios],
-                     [int(s) for s in seeds], engine=engine)
+    # seed coercion/validation happens in api.sweep (floats rejected)
+    return api_sweep([s.to_spec() for s in scenarios], list(seeds),
+                     engine=engine)

@@ -153,6 +153,8 @@ class ArrayFleetEngine:
         self.nat_drop_events = 0
         self.outage = False
         self._price_scale = 1.0
+        # absolute per-provider curve factors (spec.PriceCurve)
+        self._curve_factor: Dict[str, float] = {}
         self._busy_by_group = np.zeros(G, dtype=np.int64)
 
         self.prov = ArrayProvisionerView(self)
@@ -170,14 +172,26 @@ class ArrayFleetEngine:
 
     def rate_h(self, gi: int) -> float:
         p = self.g_provider[gi]
+        # ((price/24) * shift scalar) * curve factor — the shared billing
+        # expression (see MultiCloudProvisioner.bill); x1.0 is exact
         return (p.spot_price_per_day if self._spot
-                else p.ondemand_price_per_day) / 24.0 * self._price_scale
+                else p.ondemand_price_per_day) / 24.0 * self._price_scale \
+            * self._curve_factor.get(p.name, 1.0)
 
-    # -- timeline ops (spec.PriceShift / spec.CapacityShift) --------------
+    # -- timeline ops (spec.PriceShift/CapacityShift/PriceCurve) ----------
     def scale_prices(self, factor: float):
         """Uniform price shift from now on; one cumulative scalar so the
         price-priority group order is unaffected."""
         self._price_scale *= factor
+
+    def set_price_factor(self, provider: Optional[str], factor: float):
+        """Absolute per-provider curve factor (None = every provider) —
+        the spec timeline's ``PriceCurve`` op; replaces, not compounds."""
+        if provider is None:
+            for name in self.catalog:
+                self._curve_factor[name] = factor
+        else:
+            self._curve_factor[provider] = factor
 
     def scale_capacity(self, factor: float):
         """Multiply every group's capacity (floored at 1); shrinking
@@ -609,6 +623,9 @@ class ArrayProvisionerView:
 
     def scale_prices(self, factor: float):
         self._e.scale_prices(factor)
+
+    def set_price_factor(self, provider, factor: float):
+        self._e.set_price_factor(provider, factor)
 
     def scale_capacity(self, factor: float):
         self._e.scale_capacity(factor)

@@ -98,6 +98,42 @@ def tpu_catalog() -> Dict[str, ProviderSpec]:
     }
 
 
+def slice_provider(p: ProviderSpec, slices: int, *,
+                   price_factor: float = 1.0, tflops_factor: float = 1.0,
+                   default_tflops: Optional[float] = None) -> ProviderSpec:
+    """The provider's sub-GPU-slice variant (Sfiligoi 2022): each region
+    offers ``slices`` fractional-GPU slots per physical device, priced
+    and rated at ``1/slices`` of the whole GPU times the overhead
+    factors (MIG-style partitions are rarely perfectly proportional).
+    ``default_tflops`` supplies the device peak where the catalog leaves
+    ``fp32_tflops`` unset (the homogeneous T4 replay; defaults to the T4
+    peak) — a slice must always carry an explicit sliced peak, else the
+    simulator's homogeneous EFLOP path would count each slice as a
+    whole device."""
+    if slices < 1:
+        raise ValueError(f"slices must be >= 1, got {slices}")
+    full = p.fp32_tflops if p.fp32_tflops is not None else \
+        (default_tflops if default_tflops is not None else T4_FP32_TFLOPS)
+    return replace(
+        p, name=f"{p.name}/{slices}", accel=f"{p.accel}/{slices}",
+        spot_price_per_day=p.spot_price_per_day / slices * price_factor,
+        ondemand_price_per_day=(p.ondemand_price_per_day / slices
+                                * price_factor),
+        fp32_tflops=full / slices * tflops_factor,
+        regions=tuple(replace(r, capacity=r.capacity * slices)
+                      for r in p.regions))
+
+
+def sliced_catalog(slices: int = 2, capacity_scale: float = 1.0,
+                   **slice_kwargs) -> Dict[str, ProviderSpec]:
+    """The §III heterogeneous T4/V100/P100/M60 pool planned in 1/k-GPU
+    slices instead of whole devices — the Sfiligoi 2022 what-if: same
+    physical fleet, k-fold finer-grained capacity accounting."""
+    return {p.name: p for p in (
+        slice_provider(spec, slices, **slice_kwargs)
+        for spec in heterogeneous_catalog(capacity_scale).values())}
+
+
 # fp32 peaks (paper's EFLOP accounting; §III GPU generations): TFLOP/s
 T4_FP32_TFLOPS = 8.141
 V100_FP32_TFLOPS = 14.13

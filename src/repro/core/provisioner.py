@@ -120,6 +120,9 @@ class MultiCloudProvisioner:
         # cumulative uniform market drift (spec.PriceShift events); kept
         # as one scalar so the price-priority group order is unaffected
         self.price_scale = 1.0
+        # absolute per-provider curve factors (spec.PriceCurve events);
+        # stack multiplicatively on the uniform scalar
+        self.curve_factor: Dict[str, float] = {}
 
     def _price(self, prov: ProviderSpec) -> float:
         return (prov.spot_price_per_day if self.spot
@@ -129,6 +132,17 @@ class MultiCloudProvisioner:
         """Uniform price shift from now on (already-billed hours keep
         their old price) — the spec timeline's ``PriceShift`` op."""
         self.price_scale *= factor
+
+    def set_price_factor(self, provider: Optional[str], factor: float):
+        """Set the absolute curve factor for one provider (or all, when
+        ``provider`` is None) — the spec timeline's ``PriceCurve`` op.
+        Unlike ``scale_prices`` this *replaces* the previous curve value
+        rather than compounding on it."""
+        if provider is None:
+            for name in self.catalog:
+                self.curve_factor[name] = factor
+        else:
+            self.curve_factor[provider] = factor
 
     def scale_capacity(self, factor: float):
         """Multiply every region's capacity (floored at 1 instance);
@@ -163,7 +177,11 @@ class MultiCloudProvisioner:
             return 0.0
         total = 0.0
         for g in self.groups:
-            rate_h = self._price(g.provider) / 24.0 * self.price_scale
+            # ((price/24) * shift scalar) * curve factor — the exact
+            # float expression every engine must share for bit-identical
+            # billing (curve defaults to x1.0, an exact no-op)
+            rate_h = self._price(g.provider) / 24.0 * self.price_scale \
+                * self.curve_factor.get(g.provider.name, 1.0)
             for inst in g.instances.values():
                 end = now
                 if inst.preempted_at is not None:

@@ -28,7 +28,8 @@ from repro.core.campaign import (OUTAGE_AT_H, OUTAGE_DURATION_H, PAPER_RAMP,
                                  POST_OUTAGE_TARGET, RampStage, _timeline)
 from repro.core.provider import T4_FP32_TFLOPS, ProviderSpec
 from repro.core.simulator import SimConfig
-from repro.core.spec import (CampaignSpec, CEOutage, PAPER_RAMP_EVENTS,
+from repro.core.spec import (CampaignSpec, CEOutage, GpuSlicing,
+                             PAPER_RAMP_EVENTS, PAPER_TIMELINE, PriceCurve,
                              build_catalog as _spec_build_catalog,
                              paper_spec, run_solo)
 
@@ -162,6 +163,62 @@ def price_perturbations(factors: Sequence[float] = (0.8, 1.0, 1.25)
             for f in factors]
 
 
+# named multi-day market curves for the paper's two-week window
+# (piecewise-constant daily factors; the paper priced everything off the
+# burst-day spot rate — these ask what the drift it ignored would cost)
+MARKET_CURVES: Dict[str, PriceCurve] = {
+    # steady upward drift as the burst itself tightens the spot pools
+    "drift-up": PriceCurve(((72.0, 1.1), (144.0, 1.25), (240.0, 1.4))),
+    # weekday-peak / weekend-dip rhythm
+    "weekend-dip": PriceCurve(((96.0, 0.85), (144.0, 1.0),
+                               (264.0, 0.85))),
+    # the favored provider gets squeezed mid-burst, others stay flat
+    "azure-squeeze": PriceCurve(((120.0, 1.5), (216.0, 1.1)),
+                                provider="azure"),
+}
+
+
+def _sorted_timeline(*events):
+    """Anchor-time-sorted (lint-clean) timeline; engines tie-break
+    stably by declaration position either way."""
+    return tuple(sorted(events, key=lambda e: e.at_h))
+
+
+def price_curve_scenarios(curves: Sequence[str] = tuple(MARKET_CURVES)
+                          ) -> List[CampaignSpec]:
+    """The paper burst priced under realistic *drifting* spot markets:
+    each variant weaves one named multi-day ``PriceCurve`` into the
+    paper timeline (first-class spec data — serializable, sweepable)."""
+    return [paper_spec(name=f"curve-{name}",
+                       timeline=_sorted_timeline(*PAPER_TIMELINE,
+                                                 MARKET_CURVES[name]))
+            for name in curves]
+
+
+def gpu_slicing_variants(slices: Sequence[int] = (2, 4, 7)
+                         ) -> List[CampaignSpec]:
+    """Sfiligoi 2022 sub-GPU accounting: the same burst planned in
+    1/2..1/7-GPU slices (k-fold capacity at ~1/k price and TFLOPS per
+    slot) instead of whole devices."""
+    return [paper_spec(name=f"slice{k}",
+                       gpu_slicing=GpuSlicing(slices=k)) for k in slices]
+
+
+def curve_sliced_burst(slices: int = 4) -> CampaignSpec:
+    """Both new surfaces at once — the golden regression campaign
+    (tests/data/curve_sliced.spec.json, pinned at seed 2021): the §III
+    heterogeneous pool in 1/4-GPU slices, priced under a drifting
+    market plus a provider-targeted squeeze on the sliced Azure T4
+    pool."""
+    return paper_spec(
+        name="curve-sliced", catalog="heterogeneous",
+        gpu_slicing=GpuSlicing(slices=slices),
+        timeline=_sorted_timeline(
+            *PAPER_TIMELINE, MARKET_CURVES["drift-up"],
+            PriceCurve(((120.0, 1.5), (216.0, 1.1)),
+                       provider=f"azure-t4/{slices}")))
+
+
 def default_suite() -> List[CampaignSpec]:
     """A representative pre-burst planning suite: the paper baseline plus
     one of each what-if family."""
@@ -171,4 +228,6 @@ def default_suite() -> List[CampaignSpec]:
             heterogeneous_burst(),
             *outage_grid((60.0, 300.0), (6.0,)),
             *budget_floor_variants((0.3,)),
-            *price_perturbations((0.8, 1.25))]
+            *price_perturbations((0.8, 1.25)),
+            *price_curve_scenarios(("drift-up", "azure-squeeze")),
+            *gpu_slicing_variants((4,))]

@@ -53,7 +53,15 @@ class SimConfig:
     def from_spec(cls, spec, seed: int,
                   engine: Optional[str] = None) -> "SimConfig":
         """Engine knobs of a ``repro.core.spec.CampaignSpec`` (duck-typed
-        so the deprecated Scenario shim also works)."""
+        so the deprecated Scenario shim also works).  ``seed`` must be an
+        integer: a float like 3.7 would previously truncate to 3 via
+        ``int()`` and silently run a different campaign."""
+        if isinstance(seed, float) or not isinstance(
+                seed, (int, np.integer)):
+            raise TypeError(
+                f"seed must be an integer, got {seed!r} "
+                f"({type(seed).__name__}); float seeds would be "
+                "silently truncated")
         return cls(duration_h=spec.duration_h, dt_h=spec.dt_h,
                    seed=seed, lease_interval_s=spec.lease_interval_s,
                    job_wall_h=spec.job_wall_h,
@@ -221,7 +229,10 @@ class CloudSimulator:
     def _eflop_hours(self) -> float:
         """fp32 EFLOP-hours delivered.  Homogeneous catalogs (no
         per-provider fp32_tflops) use the seed formula; heterogeneous
-        catalogs weight each provider's busy hours by its GPU's peak."""
+        catalogs weight each provider's busy hours by its GPU's peak.
+        Sub-GPU slices (spec.GpuSlicing) flow through the heterogeneous
+        path: a ``name/k`` provider carries a 1/k-scaled fp32_tflops, so
+        slice-hours aggregate to the same device-hours of compute."""
         specs = self.prov.catalog.values()
         if not any(p.fp32_tflops is not None for p in specs):
             return self.busy_hours * self.cfg.accel_tflops * 1e12 / 1e18

@@ -41,7 +41,8 @@ from dataclasses import asdict, dataclass, field, fields, replace
 from typing import Dict, List, Mapping, Optional, Tuple, Union
 
 from repro.core.provider import (T4_FP32_TFLOPS, ProviderSpec, RegionSpec,
-                                 heterogeneous_catalog, t4_catalog)
+                                 heterogeneous_catalog, slice_provider,
+                                 t4_catalog)
 from repro.core.simulator import CloudSimulator, SimConfig
 
 SCHEMA_VERSION = 1
@@ -173,9 +174,58 @@ class CapacityShift:
         sim.at(self.at_h, fire)
 
 
-Event = Union[SetTarget, CEOutage, PriceShift, BudgetFloor, CapacityShift]
+@dataclass(frozen=True)
+class PriceCurve:
+    """A piecewise-constant multi-day $/h curve: at each ``(t_h, factor)``
+    breakpoint the price factor is *set* to ``factor`` (absolute, unlike
+    the cumulative ``PriceShift`` multiplier), so a drifting spot market
+    is declared as one curve instead of a chain of compensating shifts.
+    ``provider=None`` drives every provider's rate; naming a provider
+    drives that provider's groups only (per-provider curve factors stack
+    multiplicatively on the uniform ``PriceShift`` scalar).  Already-
+    billed hours keep their old price."""
+    points: Tuple[Tuple[float, float], ...]
+    provider: Optional[str] = None
+
+    kind = "price_curve"
+
+    @property
+    def at_h(self) -> float:
+        """First breakpoint time (lint/sorting anchor)."""
+        return self.points[0][0] if self.points else 0.0
+
+    def install(self, sim: CloudSimulator, ctl: "TimelineController"):
+        who = self.provider if self.provider is not None else "all"
+        for t, f in self.points:
+            def fire(s, f=f):
+                s.prov.set_price_factor(self.provider, f)
+                ctl.record(f"t={s.now:6.1f}h price curve [{who}] -> x{f}",
+                           {"t": float(s.now), "event": "price_curve",
+                            "provider": self.provider,
+                            "factor": float(f)})
+            sim.at(t, fire)
+
+
+Event = Union[SetTarget, CEOutage, PriceShift, BudgetFloor, CapacityShift,
+              PriceCurve]
 EVENT_KINDS = {cls.kind: cls for cls in
-               (SetTarget, CEOutage, PriceShift, BudgetFloor, CapacityShift)}
+               (SetTarget, CEOutage, PriceShift, BudgetFloor, CapacityShift,
+                PriceCurve)}
+
+
+@dataclass(frozen=True)
+class GpuSlicing:
+    """Sub-GPU slicing (Sfiligoi 2022, "The anachronism of whole-GPU
+    accounting"): plan capacity in fractional-GPU slices instead of
+    whole devices.  Applied as a catalog transform: each matched
+    provider becomes a ``name/k`` variant whose regions hold ``k``
+    slices per physical GPU, priced and rated at ``1/k`` of the device
+    (times the overhead factors — slicing is rarely perfectly free).
+    ``providers=None`` slices the whole catalog."""
+    slices: int = 2
+    providers: Optional[Tuple[str, ...]] = None
+    price_factor: float = 1.0    # per-slice $ = price/slices * this
+    tflops_factor: float = 1.0   # per-slice peak = tflops/slices * this
 
 # the paper's staged ramp (§IV): small-scale validation, then
 # 400 -> 900 -> 1.2k -> 1.6k -> 2k, each step sustained "for extended
@@ -214,6 +264,9 @@ class CampaignSpec:
     min_queue: int = 4000                # CE queue top-up level per tick
     overhead_per_day: float = 390.0      # CE VM, storage, egress
     accel_tflops: float = T4_FP32_TFLOPS
+    # sub-GPU slicing transform applied to the chosen catalog (None =
+    # whole-GPU accounting, the paper's mode)
+    gpu_slicing: Optional[GpuSlicing] = None
     timeline: Tuple[Event, ...] = PAPER_TIMELINE
 
     def to_spec(self) -> "CampaignSpec":
@@ -228,9 +281,22 @@ class CampaignSpec:
             raise ValueError("duration_h and dt_h must be positive")
         if self.budget <= 0:
             raise ValueError("campaigns need a positive budget")
+        if self.gpu_slicing is not None:
+            if not isinstance(self.gpu_slicing, GpuSlicing):
+                raise ValueError(
+                    f"gpu_slicing must be a GpuSlicing, "
+                    f"got {self.gpu_slicing!r}")
+            if self.gpu_slicing.slices < 1:
+                raise ValueError("gpu_slicing.slices must be >= 1")
         for ev in self.timeline:
             if type(ev) not in EVENT_KINDS.values():
                 raise ValueError(f"unknown timeline event {ev!r}")
+            if isinstance(ev, PriceCurve):
+                for p in ev.points:
+                    if len(p) != 2:
+                        raise ValueError(
+                            f"PriceCurve points must be (t_h, factor) "
+                            f"pairs, got {p!r}")
         return self
 
     # -- serialization -----------------------------------------------------
@@ -249,6 +315,8 @@ class CampaignSpec:
                     {**asdict(p), "nat_idle_timeout_s":
                      None if p.nat_idle_timeout_s == float("inf")
                      else p.nat_idle_timeout_s} for p in v]
+            elif f.name == "gpu_slicing":
+                d[f.name] = None if v is None else asdict(v)
             else:
                 d[f.name] = v
         return d
@@ -275,8 +343,16 @@ class CampaignSpec:
                 kind = ev.pop("kind")
                 if kind not in EVENT_KINDS:
                     raise ValueError(f"unknown timeline event kind {kind!r}")
+                if kind == PriceCurve.kind:
+                    ev["points"] = tuple(
+                        (float(t), float(f)) for t, f in ev["points"])
                 evs.append(EVENT_KINDS[kind](**ev))
             d["timeline"] = tuple(evs)
+        if d.get("gpu_slicing") is not None:
+            g = dict(d["gpu_slicing"])
+            if g.get("providers") is not None:
+                g["providers"] = tuple(g["providers"])
+            d["gpu_slicing"] = GpuSlicing(**g)
         if d.get("providers") is not None:
             d["providers"] = tuple(
                 ProviderSpec(**{
@@ -321,6 +397,27 @@ def _scale_prices(cat: Dict[str, ProviderSpec],
             for name, p in cat.items()}
 
 
+def _apply_slicing(cat: Dict[str, ProviderSpec], sl: Optional[GpuSlicing],
+                   default_tflops: float) -> Dict[str, ProviderSpec]:
+    """Replace each matched provider with its ``name/k`` sub-GPU-slice
+    variant (k slices per device, ~1/k price and TFLOPS per slice).
+    Unmatched providers keep offering whole GPUs, so mixed whole/sliced
+    pools are expressible."""
+    if sl is None or sl.slices == 1:
+        return cat
+    out: Dict[str, ProviderSpec] = {}
+    for name, p in cat.items():
+        if sl.providers is None or name in sl.providers:
+            sp = slice_provider(p, sl.slices,
+                                price_factor=sl.price_factor,
+                                tflops_factor=sl.tflops_factor,
+                                default_tflops=default_tflops)
+            out[sp.name] = sp
+        else:
+            out[name] = p
+    return out
+
+
 def _split_ondemand(cat: Dict[str, ProviderSpec],
                     frac: float) -> Dict[str, ProviderSpec]:
     """Carve ``frac`` of every region's capacity into a preemption-free
@@ -357,10 +454,132 @@ def build_catalog(spec) -> Dict[str, ProviderSpec]:
         cat = heterogeneous_catalog()
     else:
         raise ValueError(f"unknown catalog {spec.catalog!r}")
+    cat = _apply_slicing(cat, spec.gpu_slicing, spec.accel_tflops)
     cat = _scale_capacity(cat, spec.capacity_scale)
     cat = _scale_prices(cat, spec.price_scale)
     cat = _split_ondemand(cat, spec.ondemand_fraction)
     return cat
+
+
+# -- spec-level lint (the `campaigns lint` CLI) ----------------------------
+
+def lint_spec(spec: CampaignSpec) -> List[str]:
+    """Static plausibility checks a spec author wants *before* burning a
+    sweep on a typo'd campaign: unsorted/duplicate event times, negative
+    prices/targets/factors, unknown catalog and provider names.  Returns
+    human-readable findings (empty == clean); unlike ``validate()`` it
+    reports everything at once and never raises."""
+    out: List[str] = []
+    if spec.providers is None and spec.catalog not in (
+            "t4", "heterogeneous"):
+        out.append(f"unknown catalog name {spec.catalog!r} "
+                   "(known: 't4', 'heterogeneous')")
+    if spec.duration_h <= 0:
+        out.append(f"duration_h must be positive, got {spec.duration_h}")
+    if spec.dt_h <= 0:
+        out.append(f"dt_h must be positive, got {spec.dt_h}")
+    if spec.budget <= 0:
+        out.append(f"budget must be positive, got {spec.budget}")
+    if spec.price_scale < 0:
+        out.append(f"negative price_scale {spec.price_scale}")
+    if not 0.0 <= spec.budget_floor_fraction <= 1.0:
+        out.append(f"budget_floor_fraction {spec.budget_floor_fraction} "
+                   "outside [0, 1]")
+    if spec.downscale_target < 0:
+        out.append(f"negative downscale_target {spec.downscale_target}")
+    if spec.min_queue < 0:
+        out.append(f"negative min_queue {spec.min_queue}")
+    if spec.providers is not None:
+        for p in spec.providers:
+            if p.spot_price_per_day < 0 or p.ondemand_price_per_day < 0:
+                out.append(f"provider {p.name!r} has a negative price")
+            for r in p.regions:
+                if r.capacity < 0:
+                    out.append(f"provider {p.name!r} region {r.name!r} "
+                               "has negative capacity")
+    try:
+        known_providers = set(build_catalog(spec))
+    except (ValueError, ZeroDivisionError):
+        known_providers = None           # catalog findings already queued
+    sl = spec.gpu_slicing
+    if sl is not None:
+        if sl.slices < 1:
+            out.append(f"gpu_slicing.slices must be >= 1, got {sl.slices}")
+        if sl.price_factor <= 0 or sl.tflops_factor <= 0:
+            out.append("gpu_slicing price/tflops factors must be positive")
+        if sl.providers is not None:
+            if spec.providers is not None:
+                base = {p.name for p in spec.providers}
+            elif spec.catalog == "t4":
+                base = set(t4_catalog())
+            elif spec.catalog == "heterogeneous":
+                base = set(heterogeneous_catalog())
+            else:
+                base = None               # catalog finding already queued
+            for name in sl.providers:
+                if base is not None and name not in base:
+                    out.append(f"gpu_slicing names unknown provider "
+                               f"{name!r}")
+    prev_t = None
+    seen_times: Dict[float, int] = {}
+    for i, ev in enumerate(spec.timeline):
+        at = f"timeline[{i}] {type(ev).__name__}"
+        t0 = ev.at_h
+        if t0 < 0:
+            out.append(f"{at}: negative event time {t0}")
+        if prev_t is not None and t0 < prev_t:
+            out.append(f"{at}: event times not sorted "
+                       f"({t0} after {prev_t})")
+        prev_t = max(t0, prev_t) if prev_t is not None else t0
+        # dead events never execute: anchor for plain events, every
+        # breakpoint for curves
+        dead_ts = [t for t, _f in ev.points] if isinstance(ev, PriceCurve) \
+            else [t0]
+        for t in dead_ts:
+            if t >= spec.duration_h:
+                out.append(f"{at}: fires at t={t} h, at/after the "
+                           f"campaign end ({spec.duration_h} h) — never "
+                           "executes")
+        if not isinstance(ev, PriceCurve):
+            seen_times[t0] = seen_times.get(t0, 0) + 1
+        if isinstance(ev, SetTarget) and ev.target < 0:
+            out.append(f"{at}: negative target {ev.target}")
+        elif isinstance(ev, CEOutage):
+            if ev.duration_h <= 0:
+                out.append(f"{at}: outage duration must be positive")
+            if ev.resume_target < 0:
+                out.append(f"{at}: negative resume_target "
+                           f"{ev.resume_target}")
+        elif isinstance(ev, (PriceShift, CapacityShift)) and ev.factor <= 0:
+            out.append(f"{at}: factor must be positive, got {ev.factor}")
+        elif isinstance(ev, BudgetFloor):
+            if not 0.0 <= ev.fraction <= 1.0:
+                out.append(f"{at}: fraction {ev.fraction} outside [0, 1]")
+            if ev.downscale_target < 0:
+                out.append(f"{at}: negative downscale_target "
+                           f"{ev.downscale_target}")
+        elif isinstance(ev, PriceCurve):
+            if not ev.points:
+                out.append(f"{at}: empty curve (no points)")
+            pt = None
+            for t, f in ev.points:
+                if f <= 0:
+                    out.append(f"{at}: non-positive price factor {f} "
+                               f"at t={t}")
+                if pt is not None and t <= pt:
+                    out.append(f"{at}: curve points not strictly "
+                               f"time-sorted ({t} after {pt})")
+                pt = t
+            if ev.provider is not None and known_providers is not None \
+                    and ev.provider not in known_providers:
+                out.append(f"{at}: unknown provider {ev.provider!r} "
+                           f"(catalog has {sorted(known_providers)})")
+    for t, n in seen_times.items():
+        if n > 1:
+            out.append(f"timeline: {n} events share t={t} h — they "
+                       "execute in declaration order; split the times "
+                       "if that overlap is unintended")
+    return out
 
 
 # -- solo execution --------------------------------------------------------

@@ -33,10 +33,15 @@ vary freely per lane within a batch.
 
 Campaign control is the declarative ``CampaignSpec`` timeline
 (core/spec.py): ``SetTarget`` / ``CEOutage`` / ``PriceShift`` /
-``BudgetFloor`` / ``CapacityShift`` events compile to per-lane
-``(t, kind, arg)`` tuples interpreted by ``_run_events`` — no Python
-callbacks to special-case.  Every executed event is recorded in a
-per-lane ``events_fired`` provenance log, bit-identical to the solo
+``BudgetFloor`` / ``CapacityShift`` / ``PriceCurve`` events compile to
+per-lane ``(t, kind, arg)`` tuples interpreted by ``_run_events`` — no
+Python callbacks to special-case.  Effective billing rates follow the
+engines' shared expression ``((base) * PriceShift scalar) * curve
+factor``: the cumulative scalar is per-lane, the absolute curve factors
+are per-(lane, group) (``curve_lg``), and both are only touched at
+event time (``_refresh_rates``), so the hot loop never recomputes
+prices.  Every executed event is recorded in a per-lane
+``events_fired`` provenance log, bit-identical to the solo
 ``TimelineController``'s.
 
 Tick-phase primitives (hazard model, checkpoint flooring, segmented
@@ -54,7 +59,8 @@ from repro.core.fleet import (_NO_PILOT, _PILOT_DEAD, _PILOT_LIVE,
                               checkpoint_floor, preemption_rate,
                               segment_ranks)
 from repro.core.spec import (BudgetFloor, CampaignSpec, CapacityShift,
-                             CEOutage, PriceShift, SetTarget, build_catalog)
+                             CEOutage, PriceCurve, PriceShift, SetTarget,
+                             build_catalog)
 
 # ledger alert levels, descending — the solo controller reacts to these
 # ledger callbacks, so both engines must cross the same set
@@ -108,6 +114,11 @@ def _compile_timeline(spec: CampaignSpec) -> List[tuple]:
                         ev.resume_target))
         elif isinstance(ev, PriceShift):
             evs.append((ev.at_h, "price", ev.factor))
+        elif isinstance(ev, PriceCurve):
+            # one op per breakpoint, at its own time (the solo controller
+            # installs each point as its own one-shot)
+            for t, f in ev.points:
+                evs.append((t, "curve", (ev.provider, f)))
         elif isinstance(ev, CapacityShift):
             evs.append((ev.at_h, "capacity", ev.factor))
         elif isinstance(ev, BudgetFloor):
@@ -205,6 +216,14 @@ class BatchedFleetEngine:
              for ln in self.lanes for p, _ in ln.pairs])
         self.rate_h_lg = self._rate_base_lg.copy()
         self.lane_price_scale = np.ones(B)
+        # absolute per-(lane, group) curve factors (spec.PriceCurve);
+        # group lists are identical across lanes (batch key), so one
+        # name -> group-index map serves every lane
+        self.curve_lg = np.ones(self.LG)
+        self._prov_groups = {
+            name: np.array([g for g, n in enumerate(self.g_provider)
+                            if n == name], dtype=np.int64)
+            for name in self.providers}
 
         # -- per-lane RNG/counters/state ---------------------------------
         self.rngs = [np.random.default_rng(ln.seed) for ln in self.lanes]
@@ -456,6 +475,14 @@ class BatchedFleetEngine:
         for g in range(self.G):
             self._lane_set_group_target(b, g, 0, now)
 
+    def _refresh_rates(self, b: int):
+        """Effective $/h for lane b: ((base) * shift scalar) * curve —
+        the same float-op order as the solo engines' rate expression,
+        so billing stays bit-identical."""
+        s = slice(b * self.G, (b + 1) * self.G)
+        self.rate_h_lg[s] = self._rate_base_lg[s] \
+            * self.lane_price_scale[b] * self.curve_lg[s]
+
     # -- controller events ------------------------------------------------
     def _run_events(self, now: float):
         if not (self.cap_pending.any()
@@ -492,15 +519,23 @@ class BatchedFleetEngine:
                     fired.append({"t": float(now), "event": "outage_off",
                                   "target": int(arg)})
                 elif kind == "price":
-                    # cumulative per-lane scale; effective rate is always
-                    # base * scale so it stays bit-identical to the solo
-                    # engines' (price/24) * price_scale
-                    s = slice(b * self.G, (b + 1) * self.G)
+                    # cumulative per-lane scale on top of which curve
+                    # factors stack (solo: scale_prices)
                     self.lane_price_scale[b] *= arg
-                    self.rate_h_lg[s] = self._rate_base_lg[s] \
-                        * self.lane_price_scale[b]
+                    self._refresh_rates(b)
                     fired.append({"t": float(now), "event": "price",
                                   "factor": float(arg)})
+                elif kind == "curve":
+                    pname, f = arg
+                    if pname is None:
+                        self.curve_lg[b * self.G:(b + 1) * self.G] = f
+                    else:
+                        gs = self._prov_groups.get(pname)
+                        if gs is not None:
+                            self.curve_lg[b * self.G + gs] = f
+                    self._refresh_rates(b)
+                    fired.append({"t": float(now), "event": "price_curve",
+                                  "provider": pname, "factor": float(f)})
                 elif kind == "capacity":
                     s = slice(b * self.G, (b + 1) * self.G)
                     self.g_cap_lg[s] = np.maximum(

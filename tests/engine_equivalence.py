@@ -1,0 +1,151 @@
+"""Reusable differential harness for the repo's flagship invariant:
+every engine interprets a CampaignSpec bit-identically —
+
+    solo object == solo array == batched sweep lane
+
+``assert_results_match`` is the single comparison policy (counts exact,
+rounded $ values one rounding ulp of slack) that used to be duplicated
+across test_spec.py / test_sweep.py / test_fleet_engine.py.
+``assert_engines_equivalent`` runs one (spec, seed) campaign on the solo
+array reference plus any requested engines and cross-checks results AND
+``events_fired`` provenance; ``assert_sweep_equivalent`` does the same
+for a whole (specs x seeds) sweep against the sequential reference loop.
+
+Where hypothesis is installed, this module also exports the strategies
+(``spec_strategy`` / ``event_strategy``) that generate random
+CampaignSpec timelines — including the PriceCurve / GpuSlicing surfaces
+— for the property tests in test_spec_properties.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core.api import run, sweep as api_sweep
+from repro.core.spec import run_solo
+
+
+def assert_results_match(lane, solo):
+    """Counts exact; rounded $ values get one rounding ulp of slack."""
+    assert set(lane) >= set(solo)
+    for k in solo:
+        vs, vl = solo[k], lane[k]
+        if isinstance(vs, dict):
+            assert set(vs) == set(vl), k
+            for kk in vs:
+                assert vl[kk] == pytest.approx(vs[kk], rel=1e-9,
+                                               abs=0.02), (k, kk)
+        elif isinstance(vs, (int, np.integer)) and not isinstance(vs, bool):
+            assert vl == vs, k
+        else:
+            assert vl == pytest.approx(vs, rel=1e-9, abs=0.02), k
+
+
+def assert_engines_equivalent(spec, seed, engines=("batched",),
+                              check_events=True):
+    """Run one (spec, seed) campaign on the solo array engine (the
+    reference semantics) and on every engine in ``engines`` ("batched"
+    and/or "object"), asserting bit-identical results and — for engines
+    that carry it — identical executed-event provenance.  Returns the
+    reference CampaignResult."""
+    ref, _ctl = run_solo(spec, seed)
+    ref_d = ref.to_dict()
+    for engine in engines:
+        if engine == "object":
+            other, _ = run_solo(spec, seed, engine="object")
+        elif engine == "batched":
+            other = run(spec, seeds=seed, engine="batched")
+        else:
+            raise ValueError(f"unknown differential engine {engine!r}")
+        assert_results_match(other.to_dict(), ref_d)
+        if check_events:
+            assert list(other.events_fired) == list(ref.events_fired), \
+                engine
+    return ref
+
+
+def assert_sweep_equivalent(specs, seeds):
+    """Batched (specs x seeds) sweep row-for-row against the sequential
+    solo reference loop, events_fired included.  Returns the batched
+    SweepResult."""
+    batched = api_sweep(specs, seeds, engine="batched")
+    seq = api_sweep(specs, seeds, engine="sequential")
+    assert len(batched.rows) == len(specs) * len(seeds)
+    for rb, rs in zip(batched.rows, seq.rows):
+        assert (rb["scenario"], rb["seed"]) == (rs["scenario"], rs["seed"])
+        assert_results_match(rb, rs)
+        assert rb["events_fired"] == rs["events_fired"]
+    return batched
+
+
+# -- hypothesis strategies (exported only where hypothesis exists) ---------
+
+try:
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    st = None
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    from repro.core.spec import (BudgetFloor, CampaignSpec, CapacityShift,
+                                 CEOutage, GpuSlicing, PriceCurve,
+                                 PriceShift, SetTarget)
+
+    _times = st.integers(0, 120).map(lambda q: q * 0.25)
+    _factors = st.sampled_from([0.5, 0.8, 1.25, 2.0])
+
+    def _curve(ts, fs):
+        # strictly increasing breakpoint times, one factor each
+        ts = sorted(set(ts))
+        return PriceCurve(tuple(zip(ts, fs[:len(ts)])))
+
+    _curves = st.builds(
+        _curve,
+        st.lists(_times, min_size=1, max_size=3),
+        st.lists(_factors, min_size=3, max_size=3))
+    _provider_curves = st.builds(
+        lambda c, p: PriceCurve(c.points, provider=p),
+        _curves, st.sampled_from(["azure", "gcp", "no-such-provider"]))
+
+    def event_strategy():
+        """One random timeline event, every kind included."""
+        return st.one_of(
+            st.builds(SetTarget, at_h=_times, target=st.integers(0, 600)),
+            st.builds(CEOutage, at_h=_times,
+                      duration_h=st.sampled_from([1.0, 2.0, 6.0]),
+                      resume_target=st.integers(0, 400)),
+            st.builds(PriceShift, at_h=_times, factor=_factors),
+            st.builds(CapacityShift, at_h=_times,
+                      factor=st.sampled_from([0.25, 0.5, 1.5, 2.0])),
+            st.builds(BudgetFloor, at_h=_times,
+                      # ledger-threshold values only: the cap decision is
+                      # then charge-order independent
+                      fraction=st.sampled_from([0.05, 0.1, 0.2, 0.25,
+                                                0.5]),
+                      downscale_target=st.integers(0, 300)),
+            _curves, _provider_curves)
+
+    def spec_strategy():
+        """A random small CampaignSpec over every spec surface, the new
+        PriceCurve timeline events and GpuSlicing field included."""
+        return st.builds(
+            CampaignSpec,
+            name=st.sampled_from(["a", "b"]),
+            catalog=st.sampled_from(["t4", "heterogeneous"]),
+            capacity_scale=st.sampled_from([0.5, 1.0]),
+            spot=st.booleans(),
+            ondemand_fraction=st.sampled_from([0.0, 0.25]),
+            price_scale=st.sampled_from([0.8, 1.0, 1.25]),
+            budget=st.sampled_from([2000.0, 8000.0, 1e9]),
+            budget_floor_fraction=st.sampled_from([0.1, 0.2, 0.25]),
+            downscale_target=st.integers(0, 300),
+            duration_h=st.sampled_from([12.0, 24.0, 30.0]),
+            lease_interval_s=st.sampled_from([120.0, 300.0]),
+            job_wall_h=st.sampled_from([1.0, 4.0]),
+            min_queue=st.sampled_from([500, 4000]),
+            gpu_slicing=st.one_of(
+                st.none(),
+                st.builds(GpuSlicing,
+                          slices=st.sampled_from([2, 4, 7]),
+                          price_factor=st.sampled_from([1.0, 1.1]),
+                          tflops_factor=st.sampled_from([0.9, 1.0]))),
+            timeline=st.lists(event_strategy(), max_size=5).map(tuple))

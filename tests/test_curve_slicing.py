@@ -1,0 +1,283 @@
+"""Multi-day price curves + sub-GPU slicing as first-class spec surfaces.
+
+Covers the PR-4 tentpole end to end:
+
+  * ``PriceCurve`` semantics: breakpoints *set* the price factor
+    (absolute), uniform and per-provider curves, stacking on the
+    cumulative ``PriceShift`` scalar — billed identically by all three
+    engines,
+  * ``GpuSlicing`` semantics: the catalog transform (k-fold capacity at
+    1/k price and TFLOPS per slice) and the sliced §III catalog in
+    ``core/provider.py``,
+  * the committed golden curve+sliced campaign
+    (tests/data/curve_sliced.spec.json) pinned bit-for-bit at seed 2021,
+  * the acceptance bar: a 64-lane sweep over curve+slicing scenarios
+    through ``api.run`` with every lane bit-identical to its solo
+    ``run(spec, seeds=s)`` counterpart (the differential harness in
+    tests/engine_equivalence.py enforces it).
+"""
+import json
+import os
+
+import pytest
+
+from repro.core.api import run
+from repro.core.provider import (T4_FP32_TFLOPS, heterogeneous_catalog,
+                                 slice_provider, sliced_catalog, t4_catalog)
+from repro.core.scenarios import (MARKET_CURVES, curve_sliced_burst,
+                                  gpu_slicing_variants,
+                                  price_curve_scenarios)
+from repro.core.spec import (CampaignSpec, GpuSlicing, PriceCurve,
+                             PriceShift, SetTarget, build_catalog,
+                             lint_spec, paper_spec, run_solo)
+from tests.engine_equivalence import (assert_engines_equivalent,
+                                      assert_sweep_equivalent)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "curve_sliced.spec.json")
+
+# seed-2021 curve+sliced totals (pinned; must never drift)
+CURVE_SLICED_2021 = {"cost": 19254.14, "accel_days": 16422.4,
+                     "eflop_hours_fp32": 0.491, "preemptions": 1969,
+                     "jobs_finished": 98019}
+
+
+# -- PriceCurve semantics --------------------------------------------------
+
+def _flat(duration_h=24.0, **over):
+    base = dict(name="flat", duration_h=duration_h, budget=1e9,
+                overhead_per_day=0.0, timeline=(SetTarget(0.0, 200),))
+    base.update(over)
+    return CampaignSpec(**base)
+
+
+def test_price_curve_sets_absolute_factor():
+    """A curve breakpoint SETS the factor; a PriceShift multiplies.  The
+    same numbers therefore bill differently: shift 2.0 then shift 2.0 is
+    x4, curve 2.0 then curve 2.0 stays x2."""
+    shift2 = _flat(name="shifts", timeline=(
+        SetTarget(0.0, 200), PriceShift(8.0, 2.0), PriceShift(16.0, 2.0)))
+    curve2 = _flat(name="curve", timeline=(
+        SetTarget(0.0, 200), PriceCurve(((8.0, 2.0), (16.0, 2.0)))))
+    rs = run(shift2, seeds=2)
+    rc = run(curve2, seeds=2)
+    # shifts: 8h@1x + 8h@2x + 8h@4x = 56 rate-hours; curve: 8+16+16 = 40
+    assert rs.cost == pytest.approx(rc.cost * 56 / 40, rel=0.02)
+    assert rs.accel_hours == rc.accel_hours       # fleet untouched
+
+
+def test_price_curve_dips_below_baseline():
+    base = _flat()
+    dip = _flat(name="dip", timeline=(
+        SetTarget(0.0, 200), PriceCurve(((12.0, 0.5),))))
+    assert run(dip, seeds=2).cost < run(base, seeds=2).cost
+
+
+def test_provider_curve_hits_only_that_provider():
+    """An azure-only squeeze reroutes nothing (targets are set by count)
+    but bills only azure hours at the new rate."""
+    base = _flat(duration_h=16.0)
+    sq = _flat(name="sq", duration_h=16.0, timeline=(
+        SetTarget(0.0, 200), PriceCurve(((8.0, 3.0),), provider="azure")))
+    rb = run(base, seeds=3)
+    rq = run(sq, seeds=3)
+    extra = rq["budget"]["by_provider"].get("azure", 0.0) \
+        - rb["budget"]["by_provider"].get("azure", 0.0)
+    assert extra > 0
+    for name in ("gcp", "aws"):
+        assert rq["budget"]["by_provider"].get(name, 0.0) \
+            == pytest.approx(rb["budget"]["by_provider"].get(name, 0.0),
+                             abs=0.02)
+
+
+def test_curve_stacks_on_price_shift():
+    """Curve factors multiply the cumulative PriceShift scalar: shift
+    x2 then curve-set 1.5 bills at x3, engine-identically."""
+    spec = _flat(name="stack", timeline=(
+        SetTarget(0.0, 200), PriceShift(6.0, 2.0),
+        PriceCurve(((12.0, 1.5),))))
+    assert_engines_equivalent(spec, 5, engines=("batched", "object"))
+
+
+def test_unknown_curve_provider_is_consistent_noop():
+    """A curve naming a provider absent from the catalog fires (and is
+    recorded) but changes nothing — identically in every engine."""
+    spec = _flat(name="ghost", timeline=(
+        SetTarget(0.0, 150), PriceCurve(((6.0, 9.0),), provider="ghost")))
+    ref = assert_engines_equivalent(spec, 4, engines=("batched", "object"))
+    assert ref.cost == run(_flat(timeline=(SetTarget(0.0, 150),)),
+                           seeds=4).cost
+    assert [e["event"] for e in ref.events_fired] == ["scale",
+                                                      "price_curve"]
+
+
+# -- GpuSlicing semantics --------------------------------------------------
+
+def test_slice_provider_transform():
+    azure = t4_catalog()["azure"]
+    s4 = slice_provider(azure, 4, default_tflops=T4_FP32_TFLOPS)
+    assert s4.name == "azure/4" and s4.accel == "t4/4"
+    assert s4.spot_price_per_day == pytest.approx(2.9 / 4)
+    assert s4.ondemand_price_per_day == pytest.approx(12.7 / 4)
+    assert s4.fp32_tflops == pytest.approx(T4_FP32_TFLOPS / 4)
+    assert [r.capacity for r in s4.regions] \
+        == [4 * r.capacity for r in azure.regions]
+    # overhead factors: slicing is rarely perfectly proportional
+    s2 = slice_provider(azure, 2, price_factor=1.2, tflops_factor=0.9)
+    assert s2.spot_price_per_day == pytest.approx(2.9 / 2 * 1.2)
+    assert s2.fp32_tflops == pytest.approx(T4_FP32_TFLOPS / 2 * 0.9)
+    with pytest.raises(ValueError):
+        slice_provider(azure, 0)
+
+
+def test_sliced_catalog_covers_the_full_pool():
+    het = heterogeneous_catalog()
+    cat = sliced_catalog(4)
+    assert set(cat) == {f"{n}/4" for n in het}
+    v100 = cat["azure-v100/4"]
+    assert v100.fp32_tflops == pytest.approx(
+        het["azure-v100"].fp32_tflops / 4)
+    assert v100.total_capacity == 4 * het["azure-v100"].total_capacity
+
+
+def test_build_catalog_applies_gpu_slicing():
+    spec = paper_spec(gpu_slicing=GpuSlicing(
+        slices=2, providers=("azure",)))
+    cat = build_catalog(spec)
+    assert set(cat) == {"azure/2", "gcp", "aws"}      # mixed whole/sliced
+    assert cat["azure/2"].spot_price_per_day == pytest.approx(2.9 / 2)
+    assert cat["gcp"].spot_price_per_day == t4_catalog()["gcp"] \
+        .spot_price_per_day
+    # slices=1 and None are whole-GPU no-ops
+    assert build_catalog(paper_spec(gpu_slicing=GpuSlicing(slices=1))) \
+        .keys() == t4_catalog().keys()
+    with pytest.raises(ValueError):
+        paper_spec(gpu_slicing=GpuSlicing(slices=0)).validate()
+
+
+def test_sliced_campaign_eflops_account_fractionally():
+    """2000 quarter-T4 slices deliver ~1/4 the fp32 EFLOP-hours of 2000
+    whole T4s (same slot count, 4x less silicon), at ~1/4 the cost."""
+    whole = CampaignSpec(name="whole", duration_h=24.0, budget=1e9,
+                         overhead_per_day=0.0,     # infra $ doesn't slice
+                         timeline=(SetTarget(0.0, 1000),))
+    sliced = CampaignSpec(name="sliced", duration_h=24.0, budget=1e9,
+                          overhead_per_day=0.0,
+                          gpu_slicing=GpuSlicing(slices=4),
+                          timeline=(SetTarget(0.0, 1000),))
+    rw = run(whole, seeds=6)
+    rsl = run(sliced, seeds=6)
+    assert rsl.eflop_hours_fp32 == pytest.approx(
+        rw.eflop_hours_fp32 / 4, rel=0.05)
+    assert rsl.cost == pytest.approx(rw.cost / 4, rel=0.05)
+
+
+# -- scenario library ------------------------------------------------------
+
+def test_lint_flags_dead_curve_breakpoints():
+    """A curve breakpoint at/after duration_h never fires; lint must
+    flag it even when the curve's first point is in range."""
+    spec = CampaignSpec(name="late", duration_h=24.0,
+                        timeline=(SetTarget(0.0, 100),
+                                  PriceCurve(((10.0, 1.2), (500.0, 1.5)))))
+    findings = lint_spec(spec)
+    assert any("t=500.0" in f and "never" in f for f in findings)
+
+
+def test_curve_and_slicing_scenarios_are_wellformed():
+    specs = price_curve_scenarios() + gpu_slicing_variants()
+    assert len({s.name for s in specs}) == len(specs)
+    for s in specs:
+        assert lint_spec(s) == [], s.name
+        s.validate()
+    # named curves target real timeline windows
+    assert MARKET_CURVES["azure-squeeze"].provider == "azure"
+
+
+# -- the committed golden campaign -----------------------------------------
+
+def test_golden_curve_sliced_spec_file_is_current():
+    with open(GOLDEN) as f:
+        spec = CampaignSpec.from_json(f.read())
+    assert spec == curve_sliced_burst()
+    assert lint_spec(spec) == []
+
+
+@pytest.fixture(scope="module")
+def golden_result():
+    with open(GOLDEN) as f:
+        spec = CampaignSpec.from_json(f.read())
+    return run(spec, seeds=2021)
+
+
+def test_golden_curve_sliced_reproduces_pinned_totals(golden_result):
+    res = golden_result
+    for k, v in CURVE_SLICED_2021.items():
+        assert res[k] == v, k
+    # both new surfaces actually fired: slicing in the catalog,
+    # curve points in the provenance
+    assert all("/" in name for name in res["by_provider"])
+    curve_events = [e for e in res.events_fired
+                    if e["event"] == "price_curve"]
+    assert len(curve_events) == 5
+    assert {e["provider"] for e in curve_events} == {None, "azure-t4/4"}
+
+
+def test_golden_curve_sliced_batched_lane_is_identical(golden_result):
+    with open(GOLDEN) as f:
+        spec = CampaignSpec.from_json(f.read())
+    batched = run(spec, seeds=2021, engine="batched")
+    assert batched.to_dict() == golden_result.to_dict()
+    assert list(batched.events_fired) == list(golden_result.events_fired)
+
+
+# -- acceptance: 64 curve+slicing lanes, every one solo-identical ----------
+
+def _grid_specs():
+    """8 short curve/slicing what-ifs (x 8 seeds = 64 lanes)."""
+    curve_a = PriceCurve(((6.0, 1.3), (15.0, 0.8), (24.0, 1.1)))
+    curve_az = PriceCurve(((9.0, 1.6),), provider="azure")
+    base = dict(duration_h=30.0, budget=1e9)
+    return [
+        CampaignSpec(name="c-flat", timeline=(SetTarget(0.0, 250),),
+                     **base),
+        CampaignSpec(name="c-drift", timeline=(SetTarget(0.0, 250),
+                                               curve_a), **base),
+        CampaignSpec(name="c-az", timeline=(SetTarget(0.0, 250),
+                                            curve_az), **base),
+        CampaignSpec(name="c-stack",
+                     timeline=(SetTarget(0.0, 250), PriceShift(3.0, 1.2),
+                               curve_a, curve_az), **base),
+        CampaignSpec(name="s-2", gpu_slicing=GpuSlicing(slices=2),
+                     timeline=(SetTarget(0.0, 400),), **base),
+        CampaignSpec(name="s-7", gpu_slicing=GpuSlicing(slices=7),
+                     timeline=(SetTarget(0.0, 400),), **base),
+        CampaignSpec(name="cs-az",
+                     gpu_slicing=GpuSlicing(slices=2,
+                                            providers=("azure",)),
+                     timeline=(SetTarget(0.0, 400),
+                               PriceCurve(((9.0, 1.6),),
+                                          provider="azure/2")), **base),
+        CampaignSpec(name="cs-het", catalog="heterogeneous",
+                     gpu_slicing=GpuSlicing(slices=4, price_factor=1.1,
+                                            tflops_factor=0.9),
+                     timeline=(SetTarget(0.0, 600), curve_a), **base),
+    ]
+
+
+def test_64_lane_curve_slicing_sweep_matches_solo():
+    """The PR acceptance bar: a 64-lane (8 spec x 8 seed) sweep over
+    curve+slicing scenarios through api.run, every lane bit-identical to
+    its solo counterpart (including events_fired provenance)."""
+    specs = _grid_specs()
+    seeds = list(range(8))
+    sw = assert_sweep_equivalent(specs, seeds)
+    assert len(sw.rows) == 64
+    # every scenario exercised its surface
+    by_name = {r["scenario"]: r for r in sw.rows}
+    assert any(e["event"] == "price_curve"
+               for e in by_name["c-drift"]["events_fired"])
+    assert any("/" in p for p in by_name["s-7"]["by_provider"])
+    # CSV artifact stays deterministic with the new surfaces in play
+    assert sw.to_csv() == sw.to_csv()
+    assert json.dumps(sw.summary(), sort_keys=True)   # JSON-serializable

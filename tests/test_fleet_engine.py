@@ -13,24 +13,15 @@ from repro.core.campaign import (RampStage, replay_paper_campaign,
 from repro.core.overlay import Job
 from repro.core.provider import heterogeneous_catalog, t4_catalog
 from repro.core.simulator import CloudSimulator, SimConfig
+from tests.engine_equivalence import assert_results_match
 
 
-def _assert_results_match(a, o, rel=1e-9):
-    """Counts must match exactly; rounded $ values get one rounding ulp of
-    absolute slack (billing sums the same amounts in a different order, so
-    a value sitting exactly on a .005 boundary can round either way)."""
+def _assert_results_match(a, o):
+    """Shared comparison policy (tests/engine_equivalence.py) plus a
+    both-ways key check: engine-vs-engine results must carry exactly the
+    same keys (the harness's one-way check serves lane >= solo rows)."""
     assert set(a) == set(o)
-    for k in a:
-        va, vo = a[k], o[k]
-        if isinstance(va, dict):
-            assert set(va) == set(vo), k
-            for kk in va:
-                assert va[kk] == pytest.approx(vo[kk], rel=rel,
-                                               abs=0.02), (k, kk)
-        elif isinstance(va, (int, np.integer)) and not isinstance(va, bool):
-            assert va == vo, k
-        else:
-            assert va == pytest.approx(vo, rel=rel, abs=0.02), k
+    assert_results_match(a, o)
 
 
 def test_paper_replay_engines_identical():

@@ -18,15 +18,21 @@ import json
 import os
 import warnings
 
-import numpy as np
 import pytest
 
 from repro.core.api import run, sweep as api_sweep
 from repro.core.campaign import replay_paper_campaign, sweep_campaigns
 from repro.core.provider import t4_catalog
 from repro.core.spec import (BudgetFloor, CampaignResult, CampaignSpec,
-                             CapacityShift, CEOutage, PAPER_RAMP_EVENTS,
-                             PriceShift, SetTarget, paper_spec, run_solo)
+                             CapacityShift, CEOutage, GpuSlicing,
+                             PAPER_RAMP_EVENTS, PriceCurve, PriceShift,
+                             SetTarget, paper_spec, run_solo)
+from tests.engine_equivalence import (assert_engines_equivalent,
+                                      assert_results_match,
+                                      assert_sweep_equivalent)
+
+# migrated call sites keep the historical underscore name
+_assert_results_match = assert_results_match
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "data",
                       "paper_replay.spec.json")
@@ -35,23 +41,6 @@ GOLDEN = os.path.join(os.path.dirname(__file__), "data",
 PAPER_2021 = {"cost": 56936.43, "accel_days": 16407.9,
               "eflop_hours_fp32": 3.007, "preemptions": 3716,
               "jobs_finished": 97852}
-
-
-def _assert_results_match(lane, solo):
-    """Counts exact; rounded $ values get one rounding ulp of slack
-    (identical policy to tests/test_fleet_engine.py)."""
-    assert set(lane) >= set(solo)
-    for k in solo:
-        vs, vl = solo[k], lane[k]
-        if isinstance(vs, dict):
-            assert set(vs) == set(vl), k
-            for kk in vs:
-                assert vl[kk] == pytest.approx(vs[kk], rel=1e-9,
-                                               abs=0.02), (k, kk)
-        elif isinstance(vs, (int, np.integer)) and not isinstance(vs, bool):
-            assert vl == vs, k
-        else:
-            assert vl == pytest.approx(vs, rel=1e-9, abs=0.02), k
 
 
 # -- serialization ---------------------------------------------------------
@@ -65,14 +54,24 @@ def test_json_roundtrip_every_event_kind_and_inline_catalog():
         downscale_target=321, duration_h=48.0, dt_h=0.25,
         lease_interval_s=90.0, job_wall_h=3.0, job_checkpoint_h=0.5,
         min_queue=1234, overhead_per_day=10.0, accel_tflops=7.5,
+        gpu_slicing=GpuSlicing(slices=4, providers=("azure", "gcp"),
+                               price_factor=1.1, tflops_factor=0.95),
         timeline=(SetTarget(0.0, 100), PriceShift(6.0, 1.3),
                   CapacityShift(12.0, 0.5), BudgetFloor(18.0, 0.1, 50),
-                  CEOutage(24.0, 3.0, 77), SetTarget(30.0, 200)))
+                  CEOutage(24.0, 3.0, 77), SetTarget(30.0, 200),
+                  PriceCurve(((32.0, 1.2), (40.0, 0.8))),
+                  PriceCurve(((36.0, 1.5),), provider="azure/4")))
     again = CampaignSpec.from_json(spec.to_json())
     assert again == spec
     # and the dict form is pure JSON (no dataclasses smuggled through)
-    assert json.loads(spec.to_json())["timeline"][1] \
+    d = json.loads(spec.to_json())
+    assert d["timeline"][1] \
         == {"kind": "price_shift", "at_h": 6.0, "factor": 1.3}
+    assert d["timeline"][6] == {"kind": "price_curve", "provider": None,
+                                "points": [[32.0, 1.2], [40.0, 0.8]]}
+    assert d["gpu_slicing"]["slices"] == 4
+    assert again.gpu_slicing.providers == ("azure", "gcp")
+    assert again.timeline[6].points == ((32.0, 1.2), (40.0, 0.8))
 
 
 def test_inline_catalog_json_is_strict_json():
@@ -189,12 +188,9 @@ def _random_specs():
 @pytest.mark.parametrize("spec", _random_specs(),
                          ids=lambda s: s.name)
 def test_solo_vs_batched_bit_identical(spec):
-    solo, ctl = run_solo(spec, 13)
-    batched = run(spec, seeds=13, engine="batched")
-    _assert_results_match(batched.to_dict(), solo.to_dict())
-    assert list(batched.events_fired) == list(solo.events_fired)
+    ref = assert_engines_equivalent(spec, 13, engines=("batched",))
     # the spec actually exercised its timeline
-    assert len(solo.events_fired) >= len(spec.timeline)
+    assert len(ref.events_fired) >= len(spec.timeline)
 
 
 def test_mixed_spec_sweep_batched_matches_sequential():
@@ -202,15 +198,9 @@ def test_mixed_spec_sweep_batched_matches_sequential():
     structurally-compatible engines and every row still matches the
     sequential reference, events_fired included."""
     specs = _random_specs()
-    seeds = [3, 13]
-    batched = api_sweep(specs, seeds, engine="batched")
-    seq = api_sweep(specs, seeds, engine="sequential")
-    assert len(batched.rows) == len(specs) * len(seeds)
-    for rb, rs in zip(batched.rows, seq.rows):
-        assert (rb["scenario"], rb["seed"]) == (rs["scenario"], rs["seed"])
-        _assert_results_match(rb, rs)
-        assert rb["events_fired"] == rs["events_fired"]
-        assert rb["events_fired"], "provenance must not be empty"
+    batched = assert_sweep_equivalent(specs, [3, 13])
+    for row in batched.rows:
+        assert row["events_fired"], "provenance must not be empty"
 
 
 def test_sweep_campaigns_sequential_carries_events_fired():
@@ -308,6 +298,77 @@ def test_campaigns_cli_paper_emits_golden(tmp_path):
     out = tmp_path / "paper.spec.json"
     assert cli.main(["paper", "--out", str(out)]) == 0
     assert out.read_text() == open(GOLDEN).read()
+
+
+def test_campaigns_cli_lint(tmp_path, capsys):
+    from repro import campaigns as cli
+    good = tmp_path / "good.spec.json"
+    good.write_text(paper_spec().to_json())
+    assert cli.main(["lint", str(good)]) == 0
+    assert "OK" in capsys.readouterr().out
+    # a spec with unsorted/duplicate times, a negative target, a bad
+    # catalog and a bogus curve provider lints dirty (exit 1), listing
+    # every finding at once
+    bad = CampaignSpec(
+        name="bad", catalog="t4", budget=1000.0, duration_h=24.0,
+        timeline=(SetTarget(12.0, 100), SetTarget(6.0, -5),
+                  SetTarget(6.0, 7),
+                  PriceCurve(((3.0, -2.0),), provider="warp-cloud")))
+    bad_path = tmp_path / "bad.spec.json"
+    bad_path.write_text(bad.to_json())
+    assert cli.main(["lint", str(bad_path)]) == 1
+    out = capsys.readouterr().out
+    assert "not sorted" in out
+    assert "negative target" in out
+    assert "non-positive price factor" in out
+    assert "unknown provider 'warp-cloud'" in out
+    assert "share t=6.0" in out
+    # unloadable file: reported, nonzero exit
+    mangled = tmp_path / "mangled.spec.json"
+    mangled.write_text("{\"no_such_field\": 1}")
+    assert cli.main(["lint", str(mangled), str(good)]) == 1
+    out = capsys.readouterr().out
+    assert "cannot load spec" in out
+    assert "OK" in out                    # the good file still lints
+
+
+def test_campaigns_cli_lint_unknown_catalog(tmp_path, capsys):
+    spec_d = CampaignSpec(name="x", duration_h=12.0,
+                          timeline=()).to_dict()
+    spec_d["catalog"] = "no-such-cloud"
+    p = tmp_path / "cat.spec.json"
+    p.write_text(json.dumps(spec_d))
+    from repro import campaigns as cli
+    assert cli.main(["lint", str(p)]) == 1
+    assert "unknown catalog name" in capsys.readouterr().out
+
+
+# -- float seeds are rejected, not truncated --------------------------------
+
+def test_run_rejects_float_seeds():
+    """Regression: seeds=2021.7 used to truncate to 2021 via int() and
+    silently run a different campaign."""
+    spec = CampaignSpec(name="floaty", duration_h=12.0, budget=2000.0,
+                        timeline=(SetTarget(0.0, 50),))
+    with pytest.raises(TypeError, match="silently truncated"):
+        run(spec, seeds=2021.7)
+    with pytest.raises(TypeError, match="integers"):
+        run(spec, seeds=[3, 4.5])
+    with pytest.raises(TypeError):
+        run(spec, seeds=3.0)              # integral floats too: be strict
+    import numpy as np
+    with pytest.raises(TypeError):
+        run(spec, seeds=np.float64(3))
+    with pytest.raises(TypeError):
+        api_sweep([spec, spec], [1.5, 2], engine="batched")
+    with pytest.raises(TypeError):
+        sweep_campaigns([spec], [2.5])
+    # and the SimConfig derivation itself is guarded
+    from repro.core.simulator import SimConfig
+    with pytest.raises(TypeError):
+        SimConfig.from_spec(spec, 7.2)
+    # ints (and numpy ints) still work
+    assert run(spec, seeds=np.int64(5)).seed == 5
 
 
 # -- shims stay importable and equivalent ----------------------------------

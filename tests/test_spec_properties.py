@@ -1,51 +1,22 @@
 """Property tests for CampaignSpec (hypothesis): JSON round-trip is the
-identity for arbitrary specs, and random small specs run bit-identically
-solo vs batched.  Degrades gracefully where hypothesis is absent (the
-deterministic variants live in tests/test_spec.py)."""
+identity for arbitrary specs, and random small specs — including the
+PriceCurve / GpuSlicing surfaces — run bit-identically solo vs batched.
+The strategies and the differential assertion live in
+tests/engine_equivalence.py; this module degrades gracefully where
+hypothesis is absent (the deterministic variants live in
+tests/test_spec.py and tests/test_curve_slicing.py)."""
 import pytest
 
 pytest.importorskip("hypothesis")
-import hypothesis.strategies as st_
+import hypothesis.strategies as st_  # noqa: F401  (re-export convention)
 
 from hypothesis import given, settings
 
-from repro.core.api import run
-from repro.core.spec import (BudgetFloor, CampaignSpec, CapacityShift,
-                             CEOutage, PriceShift, SetTarget, run_solo)
-from tests.test_spec import _assert_results_match
+from repro.core.spec import CampaignSpec
+from tests.engine_equivalence import (assert_engines_equivalent,
+                                      spec_strategy)
 
-_times = st_.integers(0, 120).map(lambda q: q * 0.25)
-_events = st_.one_of(
-    st_.builds(SetTarget, at_h=_times, target=st_.integers(0, 600)),
-    st_.builds(CEOutage, at_h=_times,
-               duration_h=st_.sampled_from([1.0, 2.0, 6.0]),
-               resume_target=st_.integers(0, 400)),
-    st_.builds(PriceShift, at_h=_times,
-               factor=st_.sampled_from([0.5, 0.8, 1.25, 2.0])),
-    st_.builds(CapacityShift, at_h=_times,
-               factor=st_.sampled_from([0.25, 0.5, 1.5, 2.0])),
-    st_.builds(BudgetFloor, at_h=_times,
-               # ledger-threshold values only: the cap decision is then
-               # charge-order independent (see sweep._check_thresholds)
-               fraction=st_.sampled_from([0.05, 0.1, 0.2, 0.25, 0.5]),
-               downscale_target=st_.integers(0, 300)))
-
-_specs = st_.builds(
-    CampaignSpec,
-    name=st_.sampled_from(["a", "b"]),
-    catalog=st_.sampled_from(["t4", "heterogeneous"]),
-    capacity_scale=st_.sampled_from([0.5, 1.0]),
-    spot=st_.booleans(),
-    ondemand_fraction=st_.sampled_from([0.0, 0.25]),
-    price_scale=st_.sampled_from([0.8, 1.0, 1.25]),
-    budget=st_.sampled_from([2000.0, 8000.0, 1e9]),
-    budget_floor_fraction=st_.sampled_from([0.1, 0.2, 0.25]),
-    downscale_target=st_.integers(0, 300),
-    duration_h=st_.sampled_from([12.0, 24.0, 30.0]),
-    lease_interval_s=st_.sampled_from([120.0, 300.0]),
-    job_wall_h=st_.sampled_from([1.0, 4.0]),
-    min_queue=st_.sampled_from([500, 4000]),
-    timeline=st_.lists(_events, max_size=5).map(tuple))
+_specs = spec_strategy()
 
 
 @settings(max_examples=50, deadline=None)
@@ -57,7 +28,4 @@ def test_spec_json_roundtrip_is_identity(spec):
 @settings(max_examples=8, deadline=None)
 @given(_specs, st_.integers(0, 2 ** 16))
 def test_random_specs_solo_vs_batched_bit_identical(spec, seed):
-    solo, _ctl = run_solo(spec, seed)
-    batched = run(spec, seeds=seed, engine="batched")
-    _assert_results_match(batched.to_dict(), solo.to_dict())
-    assert list(batched.events_fired) == list(solo.events_fired)
+    assert_engines_equivalent(spec, seed, engines=("batched",))

@@ -17,23 +17,10 @@ from repro.core.scenarios import (Scenario, budget_floor_variants,
                                   outage_grid, run_scenario,
                                   spot_ondemand_mixes)
 from repro.core.simulator import CloudSimulator, SimConfig
+from tests.engine_equivalence import assert_results_match
 
-
-def _assert_results_match(lane, solo):
-    """Counts exact; rounded $ values get one rounding ulp of slack
-    (identical policy to tests/test_fleet_engine.py)."""
-    assert set(lane) >= set(solo)
-    for k in solo:
-        vs, vl = solo[k], lane[k]
-        if isinstance(vs, dict):
-            assert set(vs) == set(vl), k
-            for kk in vs:
-                assert vl[kk] == pytest.approx(vs[kk], rel=1e-9,
-                                               abs=0.02), (k, kk)
-        elif isinstance(vs, (int, np.integer)) and not isinstance(vs, bool):
-            assert vl == vs, k
-        else:
-            assert vl == pytest.approx(vs, rel=1e-9, abs=0.02), k
+# migrated call sites keep the historical underscore name
+_assert_results_match = assert_results_match
 
 
 def test_sweep_lanes_match_solo_campaigns():
