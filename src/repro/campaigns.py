@@ -8,12 +8,17 @@ CI-pinnable:
         --seeds 2021,2022,2023 --engine batched --csv sweep.csv
     PYTHONPATH=src python -m repro.campaigns show spec.json
     PYTHONPATH=src python -m repro.campaigns lint spec.json
+    PYTHONPATH=src python -m repro.campaigns trace spec.json \\
+        --out trace.jsonl
     PYTHONPATH=src python -m repro.campaigns paper --out paper.spec.json
 
 ``run`` executes the spec(s) through the ``repro.core.api.run`` front
 door (solo for one spec x one seed, the batched lock-step sweep engine
 otherwise), prints a summary, and optionally writes machine-readable
-JSON/CSV artifacts.  ``paper`` emits the golden paper-replay spec
+JSON/CSV artifacts.  ``trace`` runs one (spec, seed) campaign with
+``collect="trace"`` and streams the typed event trace
+(``repro.core.events.CampaignTrace``) as JSONL — byte-identical
+whichever engine ran it.  ``paper`` emits the golden paper-replay spec
 (committed at tests/data/paper_replay.spec.json and smoke-run in CI).
 """
 from __future__ import annotations
@@ -114,6 +119,29 @@ def cmd_lint(args) -> int:
     return 1 if bad else 0
 
 
+def cmd_trace(args) -> int:
+    """Run one (spec, seed) campaign with ``collect="trace"`` and write
+    the typed event stream as JSONL (stdout or ``--out``)."""
+    spec = _load_spec(args.spec)
+    res = api_run(spec, seeds=args.seed, engine=args.engine,
+                  collect="trace")
+    text = res.trace.to_jsonl()
+    if args.out:
+        # newline="\n": the trace bytes are canonical (sha256-pinned);
+        # platform CRLF translation must not touch them
+        with open(args.out, "w", newline="\n") as f:
+            f.write(text)
+        print(f"# wrote {args.out}", file=sys.stderr)
+    else:
+        sys.stdout.write(text)
+    counts = {k: v for k, v in sorted(res.trace.counts().items()) if v}
+    print(f"# trace {spec.name!r} seed={res.seed}: "
+          f"{len(res.trace)} events "
+          + " ".join(f"{k}={v}" for k, v in counts.items()),
+          file=sys.stderr)
+    return 0
+
+
 def cmd_paper(args) -> int:
     text = paper_spec().to_json()
     if args.out:
@@ -152,6 +180,18 @@ def main(argv: Optional[List[str]] = None) -> int:
         "lint", help="validate spec file(s) without running them")
     p_lint.add_argument("spec", nargs="+")
     p_lint.set_defaults(fn=cmd_lint)
+
+    p_trace = sub.add_parser(
+        "trace", help="run one campaign and emit its typed event trace "
+                      "as JSONL")
+    p_trace.add_argument("spec", help="CampaignSpec JSON file")
+    p_trace.add_argument("--seed", default=2021, type=int,
+                         help="campaign seed (default: 2021)")
+    p_trace.add_argument("--engine", default="auto",
+                         choices=["auto", "array", "object", "batched"])
+    p_trace.add_argument("--out", default=None,
+                         help="write the JSONL here (default: stdout)")
+    p_trace.set_defaults(fn=cmd_trace)
 
     p_paper = sub.add_parser("paper",
                              help="emit the paper-replay golden spec")

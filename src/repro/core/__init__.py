@@ -10,6 +10,8 @@ provisioner  — VMSS/InstanceGroups/SpotFleet-style group provisioning
 budget       — CloudBank analogue: ledger, spend-rate, threshold alerts
 overlay      — OSG CE + glideinWMS analogue: pilots, leases, matchmaking
 simulator    — discrete-event cloud simulator binding the above
+events       — typed, replayable CampaignTrace event stream (emitted
+               byte-identically by every engine via collect="trace")
 campaign     — deprecated shims (run_campaign/replay_paper_campaign/
                CampaignController) over specs
 scenarios    — what-if spec library (spot mixes, outages, budgets) +
@@ -30,7 +32,10 @@ from repro.core.spec import (BudgetFloor, CampaignResult,  # noqa: F401
                              CampaignSpec, CapacityShift, CEOutage,
                              PriceShift, SetTarget, paper_spec)
 from repro.core.sweep import SweepResult  # noqa: F401
-from repro.core.elastic import ElasticRunner, PodPool  # noqa: F401
+from repro.core.events import CampaignTrace, TraceRecorder  # noqa: F401
+from repro.core.elastic import (ElasticRunner, GoodputReport,  # noqa: F401
+                                PodPool, SimulatedElasticRunner,
+                                drive_pool)
 from repro.core.overlay import ComputeElement, Job, Pilot  # noqa: F401
 from repro.core.provider import t4_catalog, tpu_catalog  # noqa: F401
 from repro.core.provisioner import MultiCloudProvisioner  # noqa: F401

@@ -24,10 +24,13 @@ The deprecated ``Scenario`` shim is accepted anywhere a spec is.
 """
 from __future__ import annotations
 
+import numbers
 from typing import Iterable, List, Sequence, Tuple, Union
 
-from repro.core.spec import (CampaignResult, CampaignSpec, paper_spec,
-                             run_solo)
+import numpy as np
+
+from repro.core.spec import (CampaignResult, CampaignSpec, check_collect,
+                             paper_spec, run_solo)
 from repro.core.sweep import SweepResult, run_batched_detailed
 
 __all__ = ["run", "sweep", "paper_spec", "CampaignResult", "SweepResult"]
@@ -38,8 +41,12 @@ _SOLO_ENGINES = {"array", "object"}
 def _as_seed(s) -> int:
     """Seeds are exact campaign identities: a float like 3.7 used to
     truncate to 3 via ``int()`` and silently run a different campaign,
-    so floats (integral ones included) are rejected outright."""
-    import numbers
+    and ``True`` (an ``Integral`` subclass; ``np.bool_`` registers with
+    neither ABC) would silently run seed 1 — all are rejected outright."""
+    if isinstance(s, (bool, np.bool_)):
+        raise TypeError(
+            f"seeds must be integers, got {s!r} (bool); a bool seed "
+            f"would silently run seed {int(s)} — pass an int")
     if isinstance(s, numbers.Real) and not isinstance(s, numbers.Integral):
         raise TypeError(
             f"seeds must be integers, got {s!r} ({type(s).__name__}); "
@@ -48,27 +55,38 @@ def _as_seed(s) -> int:
 
 
 def sweep(specs: Sequence[CampaignSpec], seeds: Sequence[int],
-          engine: str = "batched") -> SweepResult:
+          engine: str = "batched", collect: str = "summary") -> SweepResult:
     """Run every (spec x seed) lane and always return a SweepResult
     (``run()`` delegates here for multi-lane inputs).  ``engine``:
     "batched" (lock-step array program) or "sequential" / "array" /
-    "object" (solo reference loop)."""
-    lanes = [(spec.to_spec(), _as_seed(seed)) for spec in specs
-             for seed in seeds]
+    "object" (solo reference loop).  ``collect="trace"`` additionally
+    records one typed ``CampaignTrace`` per lane (``SweepResult.traces``
+    / ``trace_for``)."""
+    check_collect(collect)
+    specs = list(specs)
+    if not specs:
+        raise ValueError("sweep() needs at least one spec")
+    seeds = [_as_seed(seed) for seed in seeds]
+    if not seeds:
+        raise ValueError("sweep() needs at least one seed")
+    lanes = [(spec.to_spec(), seed) for spec in specs for seed in seeds]
     if engine == "batched":
-        detailed = run_batched_detailed(lanes)
+        detailed = run_batched_detailed(lanes, collect=collect)
     elif engine in _SOLO_ENGINES | {"sequential"}:
         eng = engine if engine in _SOLO_ENGINES else None
         detailed = []
         for spec, seed in lanes:
-            res, ctl = run_solo(spec, seed, engine=eng)
-            detailed.append((res.to_dict(), list(ctl.events_fired)))
+            res, ctl = run_solo(spec, seed, engine=eng, collect=collect)
+            detailed.append((res.to_dict(), list(ctl.events_fired),
+                             res.trace))
     else:
         raise ValueError(f"unknown sweep engine {engine!r}")
     rows = [{"scenario": spec.name, "seed": seed, **res,
              "events_fired": events}
-            for (spec, seed), (res, events) in zip(lanes, detailed)]
-    return SweepResult(rows)
+            for (spec, seed), (res, events, _tr) in zip(lanes, detailed)]
+    traces = [tr for _res, _ev, tr in detailed] \
+        if collect == "trace" else None
+    return SweepResult(rows, traces=traces)
 
 
 def _coerce_specs(spec_or_specs) -> Tuple[List[CampaignSpec], bool]:
@@ -95,8 +113,19 @@ def _coerce_seeds(seeds) -> Tuple[List[int], bool]:
 
 def run(spec_or_specs: Union[CampaignSpec, Sequence[CampaignSpec]],
         seeds: Union[int, Sequence[int]] = 2021,
-        engine: str = "auto") -> Union[CampaignResult, SweepResult]:
-    """Execute campaign spec(s); see module docstring for dispatch."""
+        engine: str = "auto",
+        collect: str = "summary") -> Union[CampaignResult, SweepResult]:
+    """Execute campaign spec(s); see module docstring for dispatch.
+
+    ``collect`` selects the results surface: ``"summary"`` (default —
+    end-of-run totals only, the historical behavior) or ``"trace"``,
+    which additionally records the typed event stream (every launch /
+    stop / preemption / pilot / NAT drop / job completion / timeline
+    firing) as a :class:`~repro.core.events.CampaignTrace` on
+    ``CampaignResult.trace`` (solo) or ``SweepResult.traces`` (sweeps).
+    Collection is RNG-free: summary numbers are identical either way,
+    and all engines emit byte-identical serialized traces."""
+    check_collect(collect)
     specs, single_spec = _coerce_specs(spec_or_specs)
     seed_list, single_seed = _coerce_seeds(seeds)
     solo = single_spec and len(specs) == 1 and len(seed_list) == 1
@@ -104,14 +133,17 @@ def run(spec_or_specs: Union[CampaignSpec, Sequence[CampaignSpec]],
         raise ValueError(f"unknown engine {engine!r}")
 
     if solo and engine == "batched":     # forced single-lane batched run
-        (res, events), = run_batched_detailed([(specs[0], seed_list[0])])
+        (res, events, trace), = run_batched_detailed(
+            [(specs[0], seed_list[0])], collect=collect)
         return CampaignResult.from_results(
             res, spec=specs[0], seed=seed_list[0], engine="batched",
-            events_fired=tuple(events))
+            events_fired=tuple(events), trace=trace)
     if solo:
         eng = None if engine in ("auto", "sequential") else engine
-        result, _ctl = run_solo(specs[0], seed_list[0], engine=eng)
+        result, _ctl = run_solo(specs[0], seed_list[0], engine=eng,
+                                collect=collect)
         return result
 
     return sweep(specs, seed_list,
-                 engine="batched" if engine == "auto" else engine)
+                 engine="batched" if engine == "auto" else engine,
+                 collect=collect)

@@ -15,11 +15,18 @@ training survives fleet changes by:
 
 Goodput accounting mirrors the paper's operational stance: preempted work
 since the last checkpoint is lost, everything else is durable.
+
+The simulator side connects here through the typed event-trace API:
+``drive_pool(trace, pool, runner)`` replays a campaign's
+preemption/join stream (``api.run(spec, collect="trace")`` ->
+``CampaignResult.trace``) into a :class:`PodPool` + runner, turning any
+what-if spec from ``core/scenarios.py`` into an elastic-training
+goodput study (:class:`GoodputReport`) with no new glue.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -36,6 +43,7 @@ class PodPool:
     pods: Dict[str, float] = field(default_factory=dict)  # id -> joined_at
     draining: Dict[str, float] = field(default_factory=dict)
     listeners: List[Callable[[int], None]] = field(default_factory=list)
+    rejected_joins: int = 0      # joins refused because the pool was full
 
     def on_change(self, cb: Callable[[int], None]):
         self.listeners.append(cb)
@@ -49,11 +57,19 @@ class PodPool:
     def size(self) -> int:
         return len(self.pods)
 
-    def join(self, pod_id: str, now: float = 0.0):
-        if pod_id not in self.pods and \
-                len(self.pods) < self.max_pods:
-            self.pods[pod_id] = now
-            self._notify()
+    def join(self, pod_id: str, now: float = 0.0) -> bool:
+        """Admit a pod; returns whether membership actually changed.
+        A join refused at ``max_pods`` is observable (False +
+        ``rejected_joins``) so capacity-bound provisioning loops can see
+        the clip instead of silently over-offering."""
+        if pod_id in self.pods:
+            return False
+        if len(self.pods) >= self.max_pods:
+            self.rejected_joins += 1
+            return False
+        self.pods[pod_id] = now
+        self._notify()
+        return True
 
     def preemption_notice(self, pod_id: str, now: float = 0.0):
         """Cloud 30s-2min warning: mark draining; runner checkpoints before
@@ -86,10 +102,18 @@ class ElasticRunner:
         self.n_pods = 0
         self.rebuilds = 0
         self.lost_steps = 0
+        # last rebuild's wall time; initialized so reading it before the
+        # first ensure() is 0.0, not an AttributeError
+        self.rebuild_s = 0.0
 
     # -- (re)build ------------------------------------------------------------
-    def ensure(self, n_pods: int):
-        if n_pods == self.n_pods and self.mesh is not None:
+    def ensure(self, n_pods: int, force: bool = False):
+        """Drain/checkpoint/rebuild for ``n_pods`` pods; no-op when the
+        count is unchanged.  ``force=True`` rebuilds even at the same
+        count — a same-size member *swap* (pod preempted, replacement
+        joined) changes the device set, so the mesh and its compiled
+        step must re-form."""
+        if not force and n_pods == self.n_pods and self.mesh is not None:
             return False
         t0 = time.time()
         if self.params is not None:
@@ -101,7 +125,9 @@ class ElasticRunner:
         osh = sh.opt_shardings(self._host["opt"], self.mesh)
         self.params = jax.device_put(self._host["params"], psh)
         self.opt = jax.device_put(self._host["opt"], osh)
-        if n_pods not in self._jit_cache:
+        if force or n_pods not in self._jit_cache:
+            # forced rebuilds mean a new device set: a cached step
+            # compiled against the old mesh would be stale
             self._jit_cache[n_pods] = self.step_builder(self.mesh)
         self.n_pods = n_pods
         self.rebuilds += 1
@@ -124,3 +150,188 @@ class ElasticRunner:
         if self.checkpointer is not None:
             self.checkpointer.save_blocking(
                 step, {"params": self.params, "opt": self.opt})
+
+
+class SimulatedElasticRunner:
+    """Accounting-only stand-in for :class:`ElasticRunner`: the same
+    counters and control surface ``drive_pool`` needs (``ensure`` /
+    ``handle_preemption`` / ``rebuilds`` / ``rebuild_s`` /
+    ``lost_steps``), with a fixed per-rebuild cost instead of real
+    mesh/re-shard work — so campaign traces replay into elastic-training
+    what-ifs without devices.  Swap in a real ``ElasticRunner`` and the
+    same ``drive_pool`` call drives actual mesh rebuilds."""
+
+    def __init__(self, *, rebuild_s: float = 30.0):
+        self._fixed_rebuild_s = rebuild_s
+        self.n_pods = 0
+        self.rebuilds = 0
+        self.lost_steps = 0
+        self.rebuild_s = 0.0
+        self.checkpoints = 0
+        self.blocking_checkpoints = 0
+
+    def ensure(self, n_pods: int, force: bool = False) -> bool:
+        if not force and n_pods == self.n_pods:
+            return False
+        self.n_pods = n_pods
+        self.rebuilds += 1
+        self.rebuild_s = self._fixed_rebuild_s
+        return True
+
+    def checkpoint(self, step):
+        self.checkpoints += 1
+
+    def handle_preemption(self, step):
+        """Preemption-notice response: one blocking checkpoint."""
+        self.blocking_checkpoints += 1
+
+
+@dataclass(frozen=True)
+class GoodputReport:
+    """Elastic-training accounting for one replayed campaign trace.
+
+    Steps are global synchronous-SPMD steps; ``goodput_fraction``
+    compares net completed steps against an ideal uninterrupted run of
+    the same wall-clock length (so fleet-empty gaps — e.g. a CE outage
+    — and rebuild downtime and lost work all show up as goodput)."""
+    wall_h: float
+    pod_hours: float
+    steps_done: float
+    steps_lost: float
+    rebuilds: int
+    rebuild_downtime_s: float
+    preemptions: int
+    graceful_leaves: int
+    joins: int
+    joins_rejected: int
+    peak_pods: int
+    goodput_fraction: float
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+def drive_pool(trace, pool: PodPool, runner, *, step_time_s: float = 2.0,
+               checkpoint_period_s: float = 600.0, notice: bool = True,
+               providers: Optional[tuple] = None) -> GoodputReport:
+    """Replay a campaign's instance stream into an elastic pod pool.
+
+    ``trace`` is a :class:`~repro.core.events.CampaignTrace`
+    (``api.run(spec, collect="trace")``); every ``InstanceLaunched``
+    offers a pod to ``pool`` (clips observably at ``max_pods``), every
+    ``InstancePreempted`` runs the preemption-notice path
+    (notice -> blocking checkpoint -> leave -> drain/rebuild via
+    ``runner.ensure``), and every ``InstanceStopped`` is a graceful
+    leave.  Between events the global training step advances whenever
+    the pool holds at least ``pool.min_pods`` pods, minus pending
+    rebuild downtime; async checkpoints land every
+    ``checkpoint_period_s`` of progress.
+
+    ``notice=True`` models the cloud's 30 s-2 min warning being honored
+    (checkpoint completes, nothing is lost); ``notice=False`` models
+    hard kills — work since the last periodic checkpoint is lost, the
+    simulator's own ``checkpoint_floor`` stance.  ``providers``
+    optionally restricts which trace instances become pods (e.g. only
+    the on-demand carve-out).  Membership changes sharing one timestamp
+    coalesce into a single drain -> rebuild (``runner.ensure(size,
+    force=True)``), mirroring how a staged ramp joins hundreds of pods
+    behind one mesh rebuild — and a same-size member *swap*
+    (k preemptions + k replacement launches in one tick) still rebuilds:
+    the device set changed even though the pod count did not.
+    """
+    from repro.core.events import (InstanceLaunched, InstancePreempted,
+                                   InstanceStopped)
+    from repro.core.fleet import checkpoint_floor
+
+    ckpt_steps = max(checkpoint_period_s, step_time_s) / step_time_s
+    min_active = max(1, pool.min_pods)
+    steps = 0.0
+    lost = 0.0
+    last_ckpt = 0.0
+    pod_hours = 0.0
+    downtime_pending = 0.0
+    downtime_total = 0.0
+    joins = rejected = preempts = leaves = peak = rebuilds = 0
+    t = 0.0
+
+    def advance(to_h: float):
+        nonlocal t, steps, last_ckpt, pod_hours, downtime_pending
+        dt_h = to_h - t
+        if dt_h <= 0:
+            return
+        pod_hours += pool.size * dt_h
+        if pool.size >= min_active:
+            active_s = dt_h * 3600.0
+            used = min(downtime_pending, active_s)
+            downtime_pending -= used
+            steps += (active_s - used) / step_time_s
+            last_ckpt = max(last_ckpt,
+                            float(checkpoint_floor(steps, ckpt_steps)))
+        t = to_h
+
+    evs = trace.events
+    i, n = 0, len(evs)
+    while i < n:
+        t_ev = evs[i].t
+        advance(t_ev)
+        changed = False            # any membership churn this timestamp
+        while i < n and evs[i].t == t_ev:
+            ev = evs[i]
+            i += 1
+            if isinstance(ev, InstanceLaunched):
+                if providers is not None and ev.provider not in providers:
+                    continue
+                pod_id = f"i{ev.instance}"
+                if pod_id in pool.pods:      # idempotent re-offer, not a
+                    continue                 # capacity refusal
+                if pool.join(pod_id, now=t_ev):
+                    joins += 1
+                    changed = True
+                else:
+                    rejected += 1
+            elif isinstance(ev, InstancePreempted):
+                pod_id = f"i{ev.instance}"
+                if pod_id not in pool.pods:
+                    continue
+                preempts += 1
+                changed = True
+                pool.preemption_notice(pod_id, t_ev)
+                if notice:
+                    runner.handle_preemption(int(steps))
+                    last_ckpt = steps
+                else:
+                    dropped = steps - last_ckpt
+                    lost += dropped
+                    steps = last_ckpt
+                    runner.lost_steps += int(dropped)
+                pool.leave(pod_id, t_ev)
+            elif isinstance(ev, InstanceStopped):
+                pod_id = f"i{ev.instance}"
+                if pod_id in pool.pods:
+                    leaves += 1
+                    changed = True
+                    pool.leave(pod_id, t_ev)
+        peak = max(peak, pool.size)
+        if changed and pool.size >= min_active:
+            # any membership change re-forms the mesh — force covers the
+            # same-size member swap, where the device set changed but
+            # the pod count did not
+            if runner.ensure(pool.size, force=True):
+                rebuilds += 1
+                downtime_pending += runner.rebuild_s
+                downtime_total += runner.rebuild_s
+    advance(trace.duration_h)
+    ideal_steps = trace.duration_h * 3600.0 / step_time_s
+    return GoodputReport(
+        wall_h=round(trace.duration_h, 2),
+        pod_hours=round(pod_hours, 1),
+        steps_done=round(steps, 1),
+        steps_lost=round(lost, 1),
+        rebuilds=rebuilds,
+        rebuild_downtime_s=round(downtime_total, 1),
+        preemptions=preempts,
+        graceful_leaves=leaves,
+        joins=joins,
+        joins_rejected=rejected,
+        peak_pods=peak,
+        goodput_fraction=round(steps / max(ideal_steps, 1e-9), 4))

@@ -1,0 +1,326 @@
+"""Typed, replayable campaign event traces: the ``CampaignTrace`` API.
+
+The paper's operational story is a *stream of events* — spot preemptions,
+NAT-timeout drops, pilot joins, job completions, price changes — but the
+results surface used to collapse every campaign into end-of-run scalar
+aggregates.  This module makes the stream itself a first-class, frozen,
+JSON-round-trippable artifact:
+
+  * one frozen dataclass per event kind (:class:`InstanceLaunched`,
+    :class:`InstancePreempted`, :class:`InstanceStopped`,
+    :class:`PilotRegistered`, :class:`NatDrop`, :class:`JobFinished`,
+    :class:`PriceChanged`, :class:`TimelineEventFired`), each with a
+    stable ``kind`` tag and a stable field schema,
+  * :class:`TraceRecorder` — the engine-side collection hook.  All three
+    execution engines (solo object, solo array, batched sweep) call the
+    same recorder methods at their instance/pilot/job choke points; the
+    recorder consumes **no randomness**, so collecting a trace never
+    changes the simulated campaign,
+  * :class:`CampaignTrace` — the frozen result: every event of one
+    (spec, seed) campaign in canonical order, serializable to JSONL
+    (``python -m repro.campaigns trace`` writes it).
+
+Cross-engine contract (tests/engine_equivalence.py): at matching
+(spec, seed) all three engines produce **byte-identical** serialized
+traces.  That holds because (a) instance/pilot/job identities are
+already engine-identical (per-lane 0-based instance counters, 1-based
+pilot registration order, submission-order job IDs), (b) timestamps are
+the same float tick walk everywhere, and (c) event order *within* a
+tick is canonicalized here — events sort by ``(t, kind rank, entity
+id)``, with timeline events keeping their provenance order — so the
+engines' differing intra-tick iteration orders can never leak into the
+artifact.  The canonical kind rank mirrors the tick phase order:
+timeline/price events, launches, stops, pilot registrations,
+preemptions, NAT drops, job completions.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Iterator, List, Mapping, Optional, Tuple, Union
+
+TRACE_SCHEMA_VERSION = 1
+
+
+# -- the typed events ------------------------------------------------------
+
+@dataclass(frozen=True)
+class InstanceLaunched:
+    """A cloud instance (one group-provisioned VM/slice) started."""
+    t: float
+    instance: int
+    provider: str
+    region: str
+
+    kind = "launch"
+
+
+@dataclass(frozen=True)
+class InstanceStopped:
+    """Graceful scale-down/deprovision stop (not a preemption): the
+    instance was billed to ``t`` and its pilot drained normally."""
+    t: float
+    instance: int
+    provider: str
+    region: str
+
+    kind = "stop"
+
+
+@dataclass(frozen=True)
+class InstancePreempted:
+    """Spot preemption: the provider reclaimed the instance at ``t``
+    (cloud notice semantics: 30 s - 2 min warning before the kill)."""
+    t: float
+    instance: int
+    provider: str
+    region: str
+
+    kind = "preempt"
+
+
+@dataclass(frozen=True)
+class PilotRegistered:
+    """A pilot on ``instance`` registered with the Compute Element.
+    ``pilot`` is the 1-based global registration order — identical
+    across engines."""
+    t: float
+    pilot: int
+    instance: int
+    provider: str
+
+    kind = "pilot"
+
+
+@dataclass(frozen=True)
+class NatDrop:
+    """The pilot's idle lease connection outlived the provider NAT
+    timeout mid-job (the paper's Azure 240 s bug); its job re-queued."""
+    t: float
+    pilot: int
+    instance: int
+    provider: str
+
+    kind = "nat_drop"
+
+
+@dataclass(frozen=True)
+class JobFinished:
+    """A job completed its wall hours at ``t`` (``attempts`` counts
+    matches, i.e. 1 + re-queues survived)."""
+    t: float
+    job: int
+    attempts: int
+
+    kind = "job_done"
+
+
+@dataclass(frozen=True)
+class PriceChanged:
+    """A billing-rate change fired from the spec timeline: cumulative
+    ``PriceShift`` (``absolute=False``, uniform) or a ``PriceCurve``
+    breakpoint (``absolute=True``, optionally per-provider)."""
+    t: float
+    factor: float
+    provider: Optional[str] = None
+    absolute: bool = False
+
+    kind = "price"
+
+
+@dataclass(frozen=True)
+class TimelineEventFired:
+    """Any other executed controller event (``scale`` / ``outage_on`` /
+    ``outage_off`` / ``capacity`` / ``floor`` / ``budget_floor``) with
+    its structured payload — the events_fired provenance, typed."""
+    t: float
+    event: str
+    payload: Mapping = field(default_factory=dict)
+
+    kind = "timeline"
+
+
+TraceEvent = Union[InstanceLaunched, InstanceStopped, InstancePreempted,
+                   PilotRegistered, NatDrop, JobFinished, PriceChanged,
+                   TimelineEventFired]
+
+TRACE_EVENT_KINDS: Dict[str, type] = {
+    cls.kind: cls for cls in (InstanceLaunched, InstanceStopped,
+                              InstancePreempted, PilotRegistered, NatDrop,
+                              JobFinished, PriceChanged, TimelineEventFired)}
+
+# canonical intra-tick order == the engines' tick phase order; entity ids
+# (unique per kind per campaign) break ties, so the sort is total and
+# engine-iteration-order independent
+_KIND_RANK = {"timeline": 0, "price": 0, "launch": 1, "stop": 2,
+              "pilot": 3, "preempt": 4, "nat_drop": 5, "job_done": 6}
+
+
+def event_to_dict(ev: TraceEvent) -> dict:
+    d = asdict(ev)
+    if ev.kind == "timeline":
+        d["payload"] = dict(d["payload"])
+    return {"kind": ev.kind, **d}
+
+
+def event_from_dict(d: Mapping) -> TraceEvent:
+    d = dict(d)
+    kind = d.pop("kind", None)
+    cls = TRACE_EVENT_KINDS.get(kind)
+    if cls is None:
+        raise ValueError(f"unknown trace event kind {kind!r}")
+    return cls(**d)
+
+
+# -- engine-side collection ------------------------------------------------
+
+class TraceRecorder:
+    """Collects raw entity events from one engine (or one batched lane).
+
+    Methods cast every value to a native Python type at record time, so
+    numpy scalars from the array engines can never leak into the frozen
+    events (and JSON serialization stays byte-identical across engines).
+    Recording consumes no RNG: a campaign run with a recorder attached is
+    bit-identical to the same campaign without one.
+    """
+
+    __slots__ = ("_raw",)
+
+    def __init__(self):
+        # (t, kind rank, entity key, event) — presorted tuples
+        self._raw: List[tuple] = []
+
+    def launched(self, t, instance, provider, region):
+        t, i = float(t), int(instance)
+        self._raw.append((t, _KIND_RANK[InstanceLaunched.kind], i,
+                          InstanceLaunched(t, i, provider, region)))
+
+    def stopped(self, t, instance, provider, region):
+        t, i = float(t), int(instance)
+        self._raw.append((t, _KIND_RANK[InstanceStopped.kind], i,
+                          InstanceStopped(t, i, provider, region)))
+
+    def preempted(self, t, instance, provider, region):
+        t, i = float(t), int(instance)
+        self._raw.append((t, _KIND_RANK[InstancePreempted.kind], i,
+                          InstancePreempted(t, i, provider, region)))
+
+    def pilot_registered(self, t, pilot, instance, provider):
+        t, p = float(t), int(pilot)
+        self._raw.append((t, _KIND_RANK[PilotRegistered.kind], p,
+                          PilotRegistered(t, p, int(instance), provider)))
+
+    def nat_drop(self, t, pilot, instance, provider):
+        t, p = float(t), int(pilot)
+        self._raw.append((t, _KIND_RANK[NatDrop.kind], p,
+                          NatDrop(t, p, int(instance), provider)))
+
+    def job_finished(self, t, job, attempts):
+        t, j = float(t), int(job)
+        self._raw.append((t, _KIND_RANK[JobFinished.kind], j,
+                          JobFinished(t, j, int(attempts))))
+
+
+def _timeline_trace_event(rec: Mapping) -> TraceEvent:
+    """One events_fired provenance record (already engine-identical) as
+    a typed trace event."""
+    d = dict(rec)
+    t = float(d.pop("t"))
+    ev = d.pop("event")
+    if ev == "price":
+        return PriceChanged(t, factor=float(d["factor"]))
+    if ev == "price_curve":
+        return PriceChanged(t, factor=float(d["factor"]),
+                            provider=d.get("provider"), absolute=True)
+    return TimelineEventFired(t, event=ev, payload=d)
+
+
+def build_trace(name: str, seed: int, duration_h: float, dt_h: float,
+                recorder: Optional[TraceRecorder],
+                events_fired: List[Mapping]) -> "CampaignTrace":
+    """Freeze one campaign's collected events into the canonical-order
+    trace (entity events from the recorder + typed timeline events from
+    the engine's events_fired provenance)."""
+    items = list(recorder._raw) if recorder is not None else []
+    for seq, rec in enumerate(events_fired):
+        ev = _timeline_trace_event(rec)
+        # timeline/price events share rank 0; the provenance sequence
+        # number (engine-identical) breaks ties
+        items.append((ev.t, _KIND_RANK[ev.kind], seq, ev))
+    items.sort(key=lambda it: it[:3])
+    return CampaignTrace(name=name, seed=int(seed),
+                         duration_h=float(duration_h), dt_h=float(dt_h),
+                         events=tuple(it[3] for it in items))
+
+
+# -- the frozen artifact ---------------------------------------------------
+
+@dataclass(frozen=True)
+class CampaignTrace:
+    """Every event of one (spec, seed) campaign, in canonical order.
+
+    Deliberately engine-agnostic: the serialized form carries no engine
+    tag, because all three engines emit the same bytes — that identity
+    IS the API contract (tests/engine_equivalence.py pins it)."""
+    name: str
+    seed: int
+    duration_h: float
+    dt_h: float
+    events: Tuple[TraceEvent, ...] = ()
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self) -> Iterator[TraceEvent]:
+        return iter(self.events)
+
+    def filter(self, *kinds: str) -> Tuple[TraceEvent, ...]:
+        """Events of the given kind tag(s), trace order preserved."""
+        unknown = set(kinds) - set(TRACE_EVENT_KINDS)
+        if unknown:
+            raise ValueError(f"unknown trace event kinds {sorted(unknown)}")
+        return tuple(ev for ev in self.events if ev.kind in kinds)
+
+    def counts(self) -> Dict[str, int]:
+        """{kind: occurrences}, every known kind present (0 included)."""
+        out = {k: 0 for k in TRACE_EVENT_KINDS}
+        for ev in self.events:
+            out[ev.kind] += 1
+        return out
+
+    # -- serialization -----------------------------------------------------
+    def to_jsonl(self) -> str:
+        """One meta header line + one compact JSON object per event.
+        ``sort_keys`` + fixed separators make the bytes canonical: equal
+        traces serialize to equal strings, whichever engine emitted them."""
+        head = {"schema_version": TRACE_SCHEMA_VERSION,
+                "kind": "campaign_trace", "name": self.name,
+                "seed": self.seed, "duration_h": self.duration_h,
+                "dt_h": self.dt_h, "events": len(self.events)}
+        dump = json.dumps
+        lines = [dump(head, sort_keys=True, separators=(",", ":"),
+                      allow_nan=False)]
+        lines.extend(dump(event_to_dict(ev), sort_keys=True,
+                          separators=(",", ":"), allow_nan=False)
+                     for ev in self.events)
+        return "\n".join(lines) + "\n"
+
+    @classmethod
+    def from_jsonl(cls, text: str) -> "CampaignTrace":
+        lines = [ln for ln in text.splitlines() if ln.strip()]
+        if not lines:
+            raise ValueError("empty trace stream")
+        head = json.loads(lines[0])
+        if head.get("kind") != "campaign_trace":
+            raise ValueError("not a campaign trace (missing meta header)")
+        version = head.get("schema_version")
+        if version != TRACE_SCHEMA_VERSION:
+            raise ValueError(f"unsupported trace schema_version {version!r}")
+        events = tuple(event_from_dict(json.loads(ln)) for ln in lines[1:])
+        if len(events) != head.get("events"):
+            raise ValueError(
+                f"truncated trace: header promises {head.get('events')} "
+                f"events, stream has {len(events)}")
+        return cls(name=head["name"], seed=head["seed"],
+                   duration_h=head["duration_h"], dt_h=head["dt_h"],
+                   events=events)

@@ -79,10 +79,13 @@ class ArrayFleetEngine:
                  ledger: Optional[BudgetLedger], rng: np.random.Generator,
                  *, lease_interval_s: float = 120.0, spot: bool = True,
                  job_wall_h: float = 4.0, job_checkpoint_h: float = 1.0,
-                 accept_policy: str = "icecube"):
+                 accept_policy: str = "icecube", recorder=None):
         self.catalog = catalog
         self.ledger = ledger
         self.rng = rng
+        # optional events.TraceRecorder; consumes no RNG, so attaching it
+        # never changes the campaign
+        self.recorder = recorder
         self.lease_interval_s = lease_interval_s
         self._spot = spot
         self.job_wall_h = job_wall_h
@@ -286,6 +289,11 @@ class ArrayFleetEngine:
         self.i_pilot_order[s] = 0
         self.i_job[s] = -1
         self.n += k
+        if self.recorder is not None:
+            pname = self.g_provider[gi].name
+            rname = self.g_region[gi].name
+            for iid in self.i_id[s]:
+                self.recorder.launched(now, iid, pname, rname)
 
     def set_group_target(self, gi: int, n: int, now: float):
         """Provider group semantics: fill to min(target, capacity)
@@ -300,6 +308,11 @@ class ArrayFleetEngine:
         elif live > self.g_target[gi]:
             stop = rows[self.g_target[gi]:]
             self.i_end[stop] = now        # stopped (not preempted)
+            if self.recorder is not None:
+                pname = self.g_provider[gi].name
+                rname = self.g_region[gi].name
+                for iid in self.i_id[stop]:
+                    self.recorder.stopped(now, iid, pname, rname)
 
     def scale_to(self, n: int, now: float) -> int:
         """Greedy cheapest-first fill, mirroring the object provisioner."""
@@ -324,6 +337,11 @@ class ArrayFleetEngine:
                 and np.isnan(self.i_end[idx]):
             self.i_end[idx] = now
             self.i_preempted[idx] = True
+            if self.recorder is not None:
+                gi = int(self.i_group[idx])
+                self.recorder.preempted(now, inst_id,
+                                        self.g_provider[gi].name,
+                                        self.g_region[gi].name)
 
     # -- tick phases (ordering mirrors CloudSimulator.step exactly) -------
     def maintain_groups(self, now: float):
@@ -361,6 +379,14 @@ class ArrayFleetEngine:
                     self.i_pilot_order[rows] = np.arange(
                         self._pilot_seq, self._pilot_seq + k)
                     self._pilot_seq += k
+                    if self.recorder is not None:
+                        pname = self.g_provider[gi].name
+                        for r in rows:
+                            # 1-based registration order: the object CE's
+                            # pilot-id numbering
+                            self.recorder.pilot_registered(
+                                now, self.i_pilot_order[r] + 1,
+                                self.i_id[r], pname)
         # reap: pilots whose instance is gone, in registration order
         lost = (~alive) & (self.i_pilot[:self.n] == _PILOT_LIVE)
         if lost.any():
@@ -383,6 +409,11 @@ class ArrayFleetEngine:
                 continue
             self.i_end[hits] = now
             self.i_preempted[hits] = True
+            if self.recorder is not None:
+                pname = self.g_provider[gi].name
+                rname = self.g_region[gi].name
+                for iid in self.i_id[hits]:
+                    self.recorder.preempted(now, iid, pname, rname)
             piloted = hits[self.i_pilot[hits] == _PILOT_LIVE]
             self.preemption_events += self._requeue(piloted)
             self.i_pilot[piloted] = _PILOT_DEAD
@@ -450,6 +481,12 @@ class ArrayFleetEngine:
             rows = np.nonzero(dropped)[0]
             rows = rows[np.argsort(self.i_pilot_order[rows], kind="stable")]
             self.nat_drop_events += len(rows)
+            if self.recorder is not None:
+                for r in rows:
+                    gi = int(self.i_group[r])
+                    self.recorder.nat_drop(now, self.i_pilot_order[r] + 1,
+                                           self.i_id[r],
+                                           self.g_provider[gi].name)
             # a NAT drop is a pilot loss: the job's return to queue counts
             # as a preemption, exactly like the object engine's pilot_lost
             self.preemption_events += self._requeue(rows)
@@ -468,6 +505,10 @@ class ArrayFleetEngine:
                                    kind="stable")
                 self.j_finished[done_jobs] = now
                 self.finished.extend(int(j) for j in done_jobs[order])
+                if self.recorder is not None:
+                    for j in done_jobs[order]:
+                        self.recorder.job_finished(now, self.j_id[j],
+                                                   self.j_attempts[j])
                 self.i_job[done_rows] = -1
 
     # -- billing + compaction ---------------------------------------------

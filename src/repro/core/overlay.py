@@ -70,9 +70,12 @@ class ComputeElement:
     jobs')."""
 
     def __init__(self, accept_policy: str = "icecube",
-                 lease_interval_s: float = 120.0):
+                 lease_interval_s: float = 120.0, recorder=None):
         self.accept_policy = accept_policy
         self.lease_interval_s = lease_interval_s
+        # optional events.TraceRecorder; RNG-free, attaching it never
+        # changes the campaign
+        self.recorder = recorder
         self.queue: collections.deque = collections.deque()
         self.pilots: Dict[int, Pilot] = {}
         self.finished: List[Job] = []
@@ -105,6 +108,9 @@ class ComputeElement:
                   self.lease_interval_s, nat_timeout_s,
                   registered_at=now_h, last_renew=now_h)
         self.pilots[p.id] = p
+        if self.recorder is not None:
+            self.recorder.pilot_registered(now_h, p.id, instance_id,
+                                           provider)
         return p
 
     def pilot_lost(self, pilot_id: int, now_h: float):
@@ -146,6 +152,9 @@ class ComputeElement:
             if not p.connected and p.job is not None:
                 # idle TCP connection outlived the NAT timeout mid-job
                 self.nat_drop_events += 1
+                if self.recorder is not None:
+                    self.recorder.nat_drop(now_h, p.id, p.instance_id,
+                                           p.provider)
                 self.pilot_lost(p.id, now_h)
                 continue
             if p.job is not None:
@@ -154,6 +163,8 @@ class ComputeElement:
                 if j.done_h >= j.wall_h:
                     j.finished_at = now_h
                     self.finished.append(j)
+                    if self.recorder is not None:
+                        self.recorder.job_finished(now_h, j.id, j.attempts)
                     p.job = None
 
     # -- views ---------------------------------------------------------------

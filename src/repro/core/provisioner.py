@@ -57,6 +57,9 @@ class InstanceGroup:
     # every group one shared counter so IDs are engine-unique and each
     # sim starts from 0 regardless of process history
     ids: Iterator[int] = field(default_factory=itertools.count)
+    # optional events.TraceRecorder (shared across groups by the
+    # provisioner); RNG-free, so attaching it never changes the campaign
+    recorder: Optional[object] = None
 
     @property
     def running(self) -> List[Instance]:
@@ -86,14 +89,25 @@ class InstanceGroup:
                 inst = Instance(next(self.ids), self.provider.name,
                                 self.region.name, now, last_charged=now)
                 self.instances[inst.id] = inst
+                if self.recorder is not None:
+                    self.recorder.launched(now, inst.id,
+                                           self.provider.name,
+                                           self.region.name)
         elif len(live) > self.target:
             for inst in live[self.target:]:
                 inst.stopped_at = now
+                if self.recorder is not None:
+                    self.recorder.stopped(now, inst.id,
+                                          self.provider.name,
+                                          self.region.name)
 
     def preempt(self, inst_id: int, now: float):
         inst = self.instances.get(inst_id)
         if inst is not None and inst.alive:
             inst.preempted_at = now
+            if self.recorder is not None:
+                self.recorder.preempted(now, inst.id, self.provider.name,
+                                        self.region.name)
 
     def utilization(self) -> float:
         return len(self.running) / max(1, self.region.capacity)
@@ -105,13 +119,13 @@ class MultiCloudProvisioner:
 
     def __init__(self, catalog: Dict[str, ProviderSpec],
                  ledger: Optional[BudgetLedger] = None,
-                 spot: bool = True):
+                 spot: bool = True, recorder=None):
         self.catalog = catalog
         self.ledger = ledger
         self.spot = spot
         ids = itertools.count()
         self.groups: List[InstanceGroup] = [
-            InstanceGroup(prov, region, ids=ids)
+            InstanceGroup(prov, region, ids=ids, recorder=recorder)
             for prov in catalog.values() for region in prov.regions]
         # cheapest first; stable for determinism
         self.groups.sort(key=lambda g: (self._price(g.provider),

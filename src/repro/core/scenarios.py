@@ -148,6 +148,17 @@ def outage_grid(times_h: Sequence[float] = (60.0, 252.0, 300.0),
             for t in times_h for d in durations_h]
 
 
+def outage_burst(at_h: float = 60.0, duration_h: float = 6.0
+                 ) -> CampaignSpec:
+    """One outage-grid member as a single named spec — the
+    preemption-bearing campaign the elastic-goodput path replays:
+    ``api.run(outage_burst(), collect="trace")`` ->
+    ``elastic.drive_pool(result.trace, pool, runner)`` (see
+    examples/elastic_goodput.py).  Defaults match the
+    ``outage-t60-d6`` entry of :func:`default_suite`."""
+    return outage_grid((at_h,), (duration_h,))[0]
+
+
 def budget_floor_variants(floors: Sequence[float] = (0.1, 0.2, 0.3)
                           ) -> List[CampaignSpec]:
     """How early the 'downscale to 1k' tripwire fires vs GPU-days kept."""

@@ -55,13 +55,14 @@ class SimConfig:
         """Engine knobs of a ``repro.core.spec.CampaignSpec`` (duck-typed
         so the deprecated Scenario shim also works).  ``seed`` must be an
         integer: a float like 3.7 would previously truncate to 3 via
-        ``int()`` and silently run a different campaign."""
-        if isinstance(seed, float) or not isinstance(
+        ``int()`` and silently run a different campaign, and a bool
+        (``True`` is an ``int`` subclass) would silently run seed 1."""
+        if isinstance(seed, bool) or not isinstance(
                 seed, (int, np.integer)):
             raise TypeError(
                 f"seed must be an integer, got {seed!r} "
-                f"({type(seed).__name__}); float seeds would be "
-                "silently truncated")
+                f"({type(seed).__name__}); float/bool seeds would be "
+                "silently coerced to a different campaign")
         return cls(duration_h=spec.duration_h, dt_h=spec.dt_h,
                    seed=seed, lease_interval_s=spec.lease_interval_s,
                    job_wall_h=spec.job_wall_h,
@@ -85,25 +86,29 @@ class TickStats:
 class CloudSimulator:
     def __init__(self, catalog: Dict[str, ProviderSpec], budget: float,
                  cfg: SimConfig = SimConfig(),
-                 engine: Optional[str] = None):
+                 engine: Optional[str] = None, recorder=None):
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
         self.ledger = BudgetLedger(budget)
         self.engine_kind = engine or cfg.engine
+        # recorder: optional events.TraceRecorder collecting the typed
+        # instance/pilot/job event stream (spec.run_solo(collect="trace"))
         if self.engine_kind == "array":
             from repro.core.fleet import ArrayFleetEngine
             self.fleet = ArrayFleetEngine(
                 catalog, self.ledger, self.rng,
                 lease_interval_s=cfg.lease_interval_s, spot=cfg.spot,
                 job_wall_h=cfg.job_wall_h,
-                job_checkpoint_h=cfg.job_checkpoint_h)
+                job_checkpoint_h=cfg.job_checkpoint_h, recorder=recorder)
             self.prov = self.fleet.prov
             self.ce = self.fleet.ce
         elif self.engine_kind == "object":
             self.fleet = None
             self.prov = MultiCloudProvisioner(catalog, self.ledger,
-                                              spot=cfg.spot)
-            self.ce = ComputeElement(lease_interval_s=cfg.lease_interval_s)
+                                              spot=cfg.spot,
+                                              recorder=recorder)
+            self.ce = ComputeElement(lease_interval_s=cfg.lease_interval_s,
+                                     recorder=recorder)
         else:
             raise ValueError(f"unknown engine {self.engine_kind!r}")
         self.now = 0.0
@@ -115,14 +120,15 @@ class CloudSimulator:
         self.busy_hours_by_provider: Dict[str, float] = {}
 
     @classmethod
-    def from_spec(cls, spec, seed: int,
-                  engine: Optional[str] = None) -> "CloudSimulator":
+    def from_spec(cls, spec, seed: int, engine: Optional[str] = None,
+                  recorder=None) -> "CloudSimulator":
         """Build a simulator straight from a declarative
         ``repro.core.spec.CampaignSpec`` (catalog + engine knobs); the
         spec's *timeline* is installed by ``spec.TimelineController``."""
         from repro.core.spec import build_catalog
         cfg = SimConfig.from_spec(spec, seed)
-        return cls(build_catalog(spec), spec.budget, cfg, engine=engine)
+        return cls(build_catalog(spec), spec.budget, cfg, engine=engine,
+                   recorder=recorder)
 
     # -- scheduling ---------------------------------------------------------
     def at(self, t_h: float, fn: Callable[["CloudSimulator"], None]):

@@ -40,6 +40,7 @@ from collections.abc import Mapping as MappingABC
 from dataclasses import asdict, dataclass, field, fields, replace
 from typing import Dict, List, Mapping, Optional, Tuple, Union
 
+from repro.core.events import CampaignTrace, TraceRecorder, build_trace
 from repro.core.provider import (T4_FP32_TFLOPS, ProviderSpec, RegionSpec,
                                  heterogeneous_catalog, slice_provider,
                                  t4_catalog)
@@ -627,19 +628,35 @@ class TimelineController:
                                   "event": "budget_floor", "target": tgt})
 
 
-def run_solo(spec, seed: int, engine: Optional[str] = None
+def check_collect(collect: str):
+    """Shared validation for the ``collect=`` results knob."""
+    if collect not in ("summary", "trace"):
+        raise ValueError(f"unknown collect mode {collect!r} "
+                         "(expected 'summary' or 'trace')")
+
+
+def run_solo(spec, seed: int, engine: Optional[str] = None,
+             collect: str = "summary"
              ) -> Tuple["CampaignResult", TimelineController]:
     """Reference execution of one (spec, seed) campaign on a solo
     ``CloudSimulator`` (array engine by default).  The batched sweep
-    engine is pinned lane-by-lane against this path."""
+    engine is pinned lane-by-lane against this path.  With
+    ``collect="trace"`` the typed event stream is recorded (RNG-free —
+    the campaign itself is unchanged) and returned as
+    ``CampaignResult.trace``."""
     spec = spec.to_spec().validate()
-    sim = CloudSimulator.from_spec(spec, seed, engine=engine)
+    check_collect(collect)
+    rec = TraceRecorder() if collect == "trace" else None
+    sim = CloudSimulator.from_spec(spec, seed, engine=engine, recorder=rec)
     ctl = TimelineController(sim, spec)
     sim.run_until(spec.duration_h)
+    results = sim.results()
+    trace = None if rec is None else build_trace(
+        spec.name, seed, spec.duration_h, spec.dt_h, rec, ctl.events_fired)
     res = CampaignResult.from_results(
-        sim.results(), spec=spec, seed=seed, engine=sim.engine_kind,
+        results, spec=spec, seed=seed, engine=sim.engine_kind,
         events_fired=tuple(ctl.events_fired), log=tuple(ctl.log),
-        history=tuple(sim.history))
+        history=tuple(sim.history), trace=trace)
     return res, ctl
 
 
@@ -692,16 +709,20 @@ class CampaignResult(MappingABC):
     events_fired: Tuple[dict, ...] = ()
     log: Tuple[str, ...] = ()
     history: Tuple = ()
+    # the typed event stream; populated only by collect="trace" runs
+    trace: Optional[CampaignTrace] = None
 
     @classmethod
     def from_results(cls, res: Mapping, *, spec=None, seed=None,
                      engine: str = "array", events_fired: Tuple[dict, ...]
-                     = (), log: Tuple[str, ...] = (), history: Tuple = ()
+                     = (), log: Tuple[str, ...] = (), history: Tuple = (),
+                     trace: Optional[CampaignTrace] = None
                      ) -> "CampaignResult":
         """Wrap a legacy ``results()`` dict (engine output schema)."""
         return cls(budget=BudgetReport(**res["budget"]),
                    spec=spec, seed=seed, engine=engine,
                    events_fired=events_fired, log=log, history=history,
+                   trace=trace,
                    **{k: res[k] for k in _RESULT_KEYS if k != "budget"})
 
     # -- legacy results() mapping ------------------------------------------

@@ -55,6 +55,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.budget import BudgetLedger
+from repro.core.events import CampaignTrace, TraceRecorder, build_trace
 from repro.core.fleet import (_NO_PILOT, _PILOT_DEAD, _PILOT_LIVE,
                               checkpoint_floor, preemption_rate,
                               segment_ranks)
@@ -147,11 +148,15 @@ def _prepare(sc, seed: int) -> Tuple[tuple, _Lane]:
 class BatchedFleetEngine:
     """B lock-step campaigns in one struct-of-arrays control plane."""
 
-    def __init__(self, lanes: Sequence[_Lane]):
+    def __init__(self, lanes: Sequence[_Lane], collect: bool = False):
         self.lanes = list(lanes)
         B = len(self.lanes)
         assert B > 0
         self.B = B
+        # per-lane typed event recorders (events.TraceRecorder); RNG-free,
+        # so collecting traces never changes any lane
+        self.recorders: Optional[List[TraceRecorder]] = \
+            [TraceRecorder() for _ in range(B)] if collect else None
         ref = self.lanes[0]
         pairs = ref.pairs
         G = len(pairs)
@@ -430,6 +435,12 @@ class BatchedFleetEngine:
         rows = np.arange(self.n, self.n + total,
                          dtype=np.int32)
         self.n += total
+        if self.recorders is not None:
+            ids = self.i_id[s]
+            for j in range(total):
+                b, g = divmod(int(lg[j]), self.G)
+                self.recorders[b].launched(now, ids[j], self.g_provider[g],
+                                           self.g_region[g])
         bc = np.bincount(lg, minlength=self.LG)
         self.live_lg += bc
         self._created_lg += bc
@@ -458,6 +469,11 @@ class BatchedFleetEngine:
             stop = rows[self.g_target[b, g]:]     # newest extras stop
             self.i_end[stop] = now                # stopped, not preempted
             self.alive[stop] = False
+            if self.recorders is not None:
+                for iid in self.i_id[stop]:
+                    self.recorders[b].stopped(now, iid,
+                                              self.g_provider[g],
+                                              self.g_region[g])
             self.live_lg[lg] -= len(stop)
             self._died_lg[lg] += len(stop)
             self._dead_unreaped += len(stop)
@@ -632,6 +648,14 @@ class BatchedFleetEngine:
                     + segment_ranks(lanes, counts)
                 self.pilot_seq += counts
                 self.i_pilot[rows] = _PILOT_LIVE
+                if self.recorders is not None:
+                    for row in rows.tolist():
+                        b, g = divmod(int(self.i_lg[row]), self.G)
+                        # 1-based registration order == the object CE's
+                        # pilot-id numbering
+                        self.recorders[b].pilot_registered(
+                            now, self.i_pilot_order[row] + 1,
+                            self.i_id[row], self.g_provider[g])
                 self._idle_cand = np.concatenate([self._idle_cand, rows])
         if self._stopped_rows:
             rows = np.concatenate(self._stopped_rows) \
@@ -714,6 +738,12 @@ class BatchedFleetEngine:
         self.i_end[hits] = now
         self.i_preempted[hits] = True
         self.alive[hits] = False
+        if self.recorders is not None:
+            for row, lgj in zip(hits.tolist(), hit_lg.tolist()):
+                b, g = divmod(int(lgj), self.G)
+                self.recorders[b].preempted(now, self.i_id[row],
+                                            self.g_provider[g],
+                                            self.g_region[g])
         hit_bc = np.bincount(hit_lg, minlength=self.LG)
         self.live_lg -= hit_bc
         self._died_lg += hit_bc
@@ -827,15 +857,23 @@ class BatchedFleetEngine:
             valid = (self.i_gen[rows] == gens) & (self.i_job[rows] != -1)
             done_rows = rows[valid]
             if len(done_rows):
-                self._finish_rows(done_rows)
+                self._finish_rows(done_rows, now)
             return
         self._advance_walk(dt, now)
 
-    def _finish_rows(self, done_rows: np.ndarray):
+    def _finish_rows(self, done_rows: np.ndarray, now: float):
         done_jobs = self.i_job[done_rows]
         done_lg = np.bincount(self.i_lg[done_rows], minlength=self.LG)
         self._busy_lg -= done_lg
         self.finished += done_lg.reshape(self.B, self.G).sum(axis=1)
+        if self.recorders is not None:
+            for row in done_rows.tolist():
+                b = int(self.i_lg[row]) // self.G
+                jrow = int(self.i_job[row])
+                # anonymous fresh jobs (-2) were matched exactly once
+                attempts = self.j_attempts[jrow] if jrow >= 0 else 1
+                self.recorders[b].job_finished(now, self.i_jid[row],
+                                               attempts)
         mat = done_jobs >= 0                   # anonymous jobs have no row
         if mat.any():
             dj = done_jobs[mat]
@@ -857,6 +895,12 @@ class BatchedFleetEngine:
                 order = np.lexsort((self.i_pilot_order[drop], lanes))
                 drop, lanes = drop[order], lanes[order]
                 self.nat_drops += np.bincount(lanes, minlength=self.B)
+                if self.recorders is not None:
+                    for row in drop.tolist():
+                        b, g = divmod(int(self.i_lg[row]), self.G)
+                        self.recorders[b].nat_drop(
+                            now, self.i_pilot_order[row] + 1,
+                            self.i_id[row], self.g_provider[g])
                 self._requeue_front(drop, lanes, now)  # deletes from busy
                 self.i_pilot[drop] = _PILOT_DEAD
         rows = self._busy_cand
@@ -868,7 +912,7 @@ class BatchedFleetEngine:
         self.i_done[rows] = done
         fin = done >= self.i_wall[rows]
         if fin.any():
-            self._finish_rows(rows[fin])
+            self._finish_rows(rows[fin], now)
             self._busy_cand = rows[~fin]       # compress keeps sort
 
     def _bill(self, now: float):
@@ -1032,6 +1076,16 @@ class BatchedFleetEngine:
         ``events_fired``."""
         return list(self.events_fired[b])
 
+    def lane_trace(self, b: int) -> Optional[CampaignTrace]:
+        """The lane's typed event trace (``collect`` engines only) —
+        byte-identical to the solo engines' trace at the same
+        (spec, seed)."""
+        if self.recorders is None:
+            return None
+        ln = self.lanes[b]
+        return build_trace(ln.spec.name, ln.seed, self.duration, self.dt,
+                           self.recorders[b], self.events_fired[b])
+
     def lane_results(self, b: int) -> dict:
         sc = self.lanes[b].spec
         busy_by_prov = {}
@@ -1090,30 +1144,34 @@ _MAX_LANES_PER_ENGINE = 64
 
 
 def run_batched_detailed(lane_specs: Sequence[Tuple[CampaignSpec, int]],
-                         max_lanes: int = _MAX_LANES_PER_ENGINE
-                         ) -> List[Tuple[dict, List[dict]]]:
+                         max_lanes: int = _MAX_LANES_PER_ENGINE,
+                         collect: str = "summary"
+                         ) -> List[Tuple[dict, List[dict],
+                                         Optional[CampaignTrace]]]:
     """Run every (spec, seed) lane, batching lock-step-compatible lanes
     into shared engines (chunked to keep the working set in cache);
-    returns per-lane ``(results, events_fired)`` in input order."""
+    returns per-lane ``(results, events_fired, trace)`` in input order
+    (``trace`` is None unless ``collect="trace"``)."""
     prepared = [_prepare(sc, seed) for sc, seed in lane_specs]
     batches: Dict[tuple, List[int]] = {}
     for i, (key, _lane) in enumerate(prepared):
         batches.setdefault(key, []).append(i)
-    out: List[Optional[Tuple[dict, List[dict]]]] = [None] * len(prepared)
+    out: List[Optional[tuple]] = [None] * len(prepared)
     for idxs in batches.values():
         for c in range(0, len(idxs), max_lanes):
             chunk = idxs[c:c + max_lanes]
-            eng = BatchedFleetEngine([prepared[i][1]
-                                      for i in chunk]).run()
+            eng = BatchedFleetEngine([prepared[i][1] for i in chunk],
+                                     collect=(collect == "trace")).run()
             for j, i in enumerate(chunk):
-                out[i] = (eng.lane_results(j), eng.lane_events(j))
+                out[i] = (eng.lane_results(j), eng.lane_events(j),
+                          eng.lane_trace(j))
     return out
 
 
 def run_batched(lane_specs: Sequence[Tuple[CampaignSpec, int]],
                 max_lanes: int = _MAX_LANES_PER_ENGINE) -> List[dict]:
     """Like :func:`run_batched_detailed`, results only."""
-    return [res for res, _events in
+    return [res for res, _events, _trace in
             run_batched_detailed(lane_specs, max_lanes)]
 
 
@@ -1151,8 +1209,24 @@ class SweepResult:
 
     Rows are legacy ``results()`` dicts extended with ``scenario`` /
     ``seed`` / ``events_fired`` (the executed-event provenance both the
-    batched and sequential engines record identically)."""
+    batched and sequential engines record identically).  Sweeps run
+    with ``collect="trace"`` additionally carry one
+    :class:`~repro.core.events.CampaignTrace` per lane in ``traces``
+    (row-aligned; reachable by name via :meth:`trace_for`) — rows stay
+    plain dicts so CSV export and back-compat consumers are unaffected."""
     rows: List[dict]
+    traces: Optional[List[Optional[CampaignTrace]]] = None
+
+    def trace_for(self, scenario: str, seed: int) -> CampaignTrace:
+        """The (scenario, seed) lane's typed event trace."""
+        if self.traces is None:
+            raise ValueError(
+                "this sweep ran with collect='summary'; re-run with "
+                "collect='trace' to record per-lane event traces")
+        for row, tr in zip(self.rows, self.traces):
+            if row["scenario"] == scenario and row["seed"] == seed:
+                return tr
+        raise KeyError((scenario, seed))
 
     def to_csv(self, path: Optional[str] = None) -> str:
         """Deterministic CSV of the per-lane rows: rows sorted by

@@ -11,6 +11,10 @@ array reference plus any requested engines and cross-checks results AND
 ``events_fired`` provenance; ``assert_sweep_equivalent`` does the same
 for a whole (specs x seeds) sweep against the sequential reference loop.
 
+``serialized_trace`` / ``assert_traces_equivalent`` extend the contract
+to the typed event-trace API (core/events.py): at matching (spec, seed)
+every engine must emit a **byte-identical** serialized CampaignTrace.
+
 Where hypothesis is installed, this module also exports the strategies
 (``spec_strategy`` / ``event_strategy``) that generate random
 CampaignSpec timelines — including the PriceCurve / GpuSlicing surfaces
@@ -74,6 +78,30 @@ def assert_sweep_equivalent(specs, seeds):
         assert_results_match(rb, rs)
         assert rb["events_fired"] == rs["events_fired"]
     return batched
+
+
+def serialized_trace(spec, seed, engine: str = "array") -> str:
+    """One (spec, seed) campaign's canonical JSONL trace bytes on the
+    requested engine ("array" | "object" | "batched")."""
+    if engine == "batched":
+        res = run(spec, seeds=seed, engine="batched", collect="trace")
+    elif engine in ("array", "object"):
+        res, _ctl = run_solo(spec, seed,
+                             engine=None if engine == "array" else engine,
+                             collect="trace")
+    else:
+        raise ValueError(f"unknown trace engine {engine!r}")
+    return res.trace.to_jsonl()
+
+
+def assert_traces_equivalent(spec, seed, engines=("batched",)) -> str:
+    """The trace contract: every engine in ``engines`` serializes the
+    same (spec, seed) campaign to exactly the solo-array reference
+    bytes.  Returns the reference JSONL."""
+    ref = serialized_trace(spec, seed)
+    for engine in engines:
+        assert serialized_trace(spec, seed, engine) == ref, engine
+    return ref
 
 
 # -- hypothesis strategies (exported only where hypothesis exists) ---------

@@ -1,0 +1,255 @@
+"""The typed event-trace API (core/events.py) and its cross-engine
+contract:
+
+  * every trace event kind round-trips through dict and JSONL forms,
+  * traces are in canonical (t, kind rank, entity id) order and their
+    counts reconcile with the summary totals,
+  * all three engines — solo object, solo array, batched sweep — emit
+    BYTE-identical serialized traces at matching (spec, seed), pinned on
+    hand-built specs (scheduled-completion and NAT walk modes) and on
+    the golden paper replay at seed 2021 (sha256-pinned),
+  * ``collect="trace"`` never changes the summary results (collection
+    is RNG-free),
+  * sweeps carry row-aligned per-lane trace handles,
+  * the ``python -m repro.campaigns trace`` subcommand streams JSONL,
+  * seed hygiene satellites: bool seeds are rejected everywhere float
+    seeds already were, and empty sweeps raise instead of silently
+    returning no rows.
+"""
+import hashlib
+import json
+import os
+
+import pytest
+
+from repro.core.api import run, sweep as api_sweep
+from repro.core.events import (CampaignTrace, InstanceLaunched,
+                               InstancePreempted, InstanceStopped,
+                               JobFinished, NatDrop, PilotRegistered,
+                               PriceChanged, TimelineEventFired,
+                               TRACE_EVENT_KINDS, _KIND_RANK,
+                               event_from_dict, event_to_dict)
+from repro.core.simulator import SimConfig
+from repro.core.spec import (CampaignSpec, CEOutage, PriceCurve,
+                             PriceShift, SetTarget, paper_spec, run_solo)
+from repro.campaigns import main as campaigns_main
+from tests.engine_equivalence import (assert_traces_equivalent,
+                                      serialized_trace)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "paper_replay.spec.json")
+
+# sha256 of the canonical JSONL trace of the golden paper replay at seed
+# 2021 — pinned so the trace schema (and the campaign it describes) can
+# never drift silently; regenerate via
+#   python -m repro.campaigns trace tests/data/paper_replay.spec.json
+PAPER_TRACE_SHA256 = \
+    "b547c83685583eeadb1c62e0e2d2ccfc9123e01dd6b9c4192e784a1ee1820ce6"
+
+# a small campaign exercising scheduled-completion mode (lease 120 <
+# every NAT timeout) with scale-downs, an outage, price events and
+# preemptions — fast enough to run on all three engines
+SMALL_SPEC = CampaignSpec(
+    name="small", duration_h=24.0, budget=8000.0, min_queue=500,
+    timeline=(SetTarget(0.0, 150), PriceShift(6.0, 1.2),
+              CEOutage(10.0, 2.0, 80),
+              PriceCurve(((14.0, 0.9), (20.0, 1.3)))))
+
+# lease 300 s > Azure's 240 s NAT timeout: constant mid-job drops, which
+# force the batched engine onto its per-tick walk path
+NAT_SPEC = CampaignSpec(
+    name="nat", duration_h=12.0, budget=5000.0, min_queue=400,
+    lease_interval_s=300.0, timeline=(SetTarget(0.0, 120),))
+
+
+@pytest.fixture(scope="module")
+def small_trace():
+    res, _ctl = run_solo(SMALL_SPEC, 7, collect="trace")
+    return res
+
+
+# -- schema + serialization ------------------------------------------------
+
+def test_every_event_kind_roundtrips_through_dicts():
+    events = [
+        InstanceLaunched(0.25, 3, "azure", "eastus"),
+        InstanceStopped(1.0, 3, "azure", "eastus"),
+        InstancePreempted(2.5, 4, "gcp", "us-central1"),
+        PilotRegistered(0.5, 1, 3, "azure"),
+        NatDrop(0.75, 1, 3, "azure"),
+        JobFinished(4.0, 17, 2),
+        PriceChanged(6.0, 1.2),
+        PriceChanged(6.0, 0.9, provider="azure", absolute=True),
+        TimelineEventFired(0.0, "scale", {"target": 2000}),
+    ]
+    assert {type(e).kind for e in events} == set(TRACE_EVENT_KINDS)
+    for ev in events:
+        d = event_to_dict(ev)
+        assert d["kind"] == ev.kind
+        json.dumps(d)                          # JSON-safe payloads only
+        assert event_from_dict(d) == ev
+    with pytest.raises(ValueError, match="unknown trace event kind"):
+        event_from_dict({"kind": "nope", "t": 0.0})
+
+
+def test_trace_jsonl_roundtrip_is_identity(small_trace):
+    tr = small_trace.trace
+    text = tr.to_jsonl()
+    back = CampaignTrace.from_jsonl(text)
+    assert back == tr
+    assert back.to_jsonl() == text            # canonical bytes are stable
+    # header carries the campaign identity, never the engine
+    head = json.loads(text.splitlines()[0])
+    assert head["name"] == "small" and head["seed"] == 7
+    assert "engine" not in head
+
+
+def test_trace_jsonl_rejects_malformed_streams(small_trace):
+    text = small_trace.trace.to_jsonl()
+    with pytest.raises(ValueError, match="empty trace"):
+        CampaignTrace.from_jsonl("")
+    with pytest.raises(ValueError, match="not a campaign trace"):
+        CampaignTrace.from_jsonl('{"foo": 1}\n')
+    bad = text.replace('"schema_version":1', '"schema_version":99')
+    with pytest.raises(ValueError, match="schema_version"):
+        CampaignTrace.from_jsonl(bad)
+    truncated = "\n".join(text.splitlines()[:-10]) + "\n"
+    with pytest.raises(ValueError, match="truncated"):
+        CampaignTrace.from_jsonl(truncated)
+
+
+def test_trace_canonical_order_and_filter(small_trace):
+    tr = small_trace.trace
+    keys = [(ev.t, _KIND_RANK[ev.kind]) for ev in tr]
+    assert keys == sorted(keys)
+    launches = tr.filter("launch")
+    assert launches and all(isinstance(e, InstanceLaunched)
+                            for e in launches)
+    assert len(tr.filter("launch", "stop", "preempt", "pilot", "nat_drop",
+                         "job_done", "price", "timeline")) == len(tr)
+    with pytest.raises(ValueError, match="unknown trace event kinds"):
+        tr.filter("bogus")
+
+
+# -- trace <-> summary reconciliation --------------------------------------
+
+def test_trace_counts_reconcile_with_summary(small_trace):
+    res = small_trace
+    c = res.trace.counts()
+    assert c["job_done"] == res.jobs_finished
+    assert c["nat_drop"] == res.nat_drops
+    assert c["pilot"] == c["launch"]          # one pilot per instance
+    # instance conservation: launched == stopped + preempted + still up
+    still_up = sum(res["by_provider"].values())
+    assert c["launch"] == c["stop"] + c["preempt"] + still_up
+    # timeline-derived events mirror the events_fired provenance 1:1
+    assert c["price"] + c["timeline"] == len(res.events_fired)
+
+
+def test_collect_trace_never_changes_summary_results():
+    plain, _ = run_solo(SMALL_SPEC, 7)
+    traced, _ = run_solo(SMALL_SPEC, 7, collect="trace")
+    assert plain.to_dict() == traced.to_dict()
+    assert plain.trace is None and traced.trace is not None
+    with pytest.raises(ValueError, match="unknown collect mode"):
+        run(SMALL_SPEC, seeds=7, collect="everything")
+
+
+# -- the cross-engine byte-identity contract -------------------------------
+
+def test_three_engines_emit_identical_trace_bytes_scheduled_mode():
+    assert_traces_equivalent(SMALL_SPEC, 7, engines=("object", "batched"))
+
+
+def test_three_engines_emit_identical_trace_bytes_nat_mode():
+    ref = assert_traces_equivalent(NAT_SPEC, 3,
+                                   engines=("object", "batched"))
+    tr = CampaignTrace.from_jsonl(ref)
+    assert tr.counts()["nat_drop"] > 0        # the walk path actually ran
+
+
+def test_paper_replay_trace_three_engines_and_sha_pinned():
+    """The acceptance pin: at (golden paper spec, seed 2021) all three
+    engines serialize the identical trace, and its digest never drifts."""
+    with open(GOLDEN) as f:
+        spec = CampaignSpec.from_json(f.read())
+    ref = assert_traces_equivalent(spec, 2021,
+                                   engines=("batched", "object"))
+    assert hashlib.sha256(ref.encode()).hexdigest() == PAPER_TRACE_SHA256
+    tr = CampaignTrace.from_jsonl(ref)
+    assert tr.counts()["job_done"] == 97852   # == PAPER_2021 pinned total
+
+
+# -- sweeps carry per-lane trace handles -----------------------------------
+
+def test_sweep_traces_row_aligned_and_lane_identical():
+    specs = [SMALL_SPEC, paper_spec(name="tiny", duration_h=18.0,
+                                    budget=6000.0, min_queue=500,
+                                    timeline=(SetTarget(0.0, 100),))]
+    sw = api_sweep(specs, [7, 8], collect="trace")
+    assert sw.traces is not None and len(sw.traces) == len(sw.rows) == 4
+    for row, tr in zip(sw.rows, sw.traces):
+        assert (tr.name, tr.seed) == (row["scenario"], row["seed"])
+        assert tr.counts()["job_done"] == row["jobs_finished"]
+    # lane handle lookup, and lane bytes == solo bytes at the same pair
+    tr = sw.trace_for("tiny", 8)
+    assert tr.to_jsonl() == serialized_trace(specs[1], 8)
+    with pytest.raises(KeyError):
+        sw.trace_for("tiny", 99)
+    # summary sweeps keep rows unchanged and refuse trace lookups
+    plain = api_sweep(specs, [7])
+    assert plain.traces is None
+    with pytest.raises(ValueError, match="collect='summary'"):
+        plain.trace_for("tiny", 7)
+
+
+# -- the campaigns CLI ------------------------------------------------------
+
+def test_campaigns_cli_trace_writes_jsonl(tmp_path, capsys):
+    spec_path = tmp_path / "small.spec.json"
+    spec_path.write_text(SMALL_SPEC.to_json())
+    out_path = tmp_path / "trace.jsonl"
+    rc = campaigns_main(["trace", str(spec_path), "--seed", "7",
+                         "--out", str(out_path)])
+    assert rc == 0
+    tr = CampaignTrace.from_jsonl(out_path.read_text())
+    assert tr.to_jsonl() == serialized_trace(SMALL_SPEC, 7)
+    # no --out: the JSONL streams to stdout
+    rc = campaigns_main(["trace", str(spec_path), "--seed", "7",
+                         "--engine", "batched"])
+    assert rc == 0
+    stdout = capsys.readouterr().out
+    assert CampaignTrace.from_jsonl(stdout) == tr
+
+
+# -- seed / empty-input hygiene satellites ---------------------------------
+
+def test_bool_seeds_rejected_everywhere():
+    """``True`` is an ``Integral`` (and ``np.bool_`` registers with
+    neither numbers ABC): both used to sail through the float guard and
+    silently run seed 1."""
+    import numpy as np
+    for bad in (True, False, np.True_, np.False_):
+        with pytest.raises(TypeError, match="bool"):
+            run(SMALL_SPEC, seeds=bad)
+        with pytest.raises(TypeError, match="bool"):
+            run(SMALL_SPEC, seeds=[2021, bad])
+        with pytest.raises(TypeError, match="bool"):
+            api_sweep([SMALL_SPEC], [bad])
+        with pytest.raises(TypeError):
+            SimConfig.from_spec(SMALL_SPEC, bad)
+    # the float rejection is unchanged
+    with pytest.raises(TypeError, match="float"):
+        run(SMALL_SPEC, seeds=2021.0)
+    with pytest.raises(TypeError):
+        SimConfig.from_spec(SMALL_SPEC, 2021.7)
+
+
+def test_sweep_rejects_empty_specs_and_seeds():
+    """sweep([], []) used to return an empty SweepResult silently."""
+    with pytest.raises(ValueError, match="at least one spec"):
+        api_sweep([], [2021])
+    with pytest.raises(ValueError, match="at least one seed"):
+        api_sweep([SMALL_SPEC], [])
+    with pytest.raises(ValueError, match="at least one spec"):
+        api_sweep([], [])

@@ -1,0 +1,68 @@
+"""Deterministic ComputeElement view tests (no hypothesis needed — the
+property-based overlay invariants live in tests/test_core.py, which
+importorskips hypothesis; these must run everywhere tier-1 does).
+
+``busy_by_provider()`` and ``stats()`` feed the weighted EFLOP
+accounting for heterogeneous catalogs, so they are exercised under
+every pilot state at once: busy (job attached), idle (no job) and dead
+(lost instance).
+"""
+from repro.core.overlay import ComputeElement, Job
+
+
+def test_busy_by_provider_and_stats_mixed_pilot_states():
+    """Dead pilots must drop out of both views even if they died
+    mid-job; idle pilots never appear in the busy view."""
+    ce = ComputeElement(lease_interval_s=120.0)
+    for jid in (1, 2, 3):
+        ce.submit(Job(jid, wall_h=10.0))
+    azure_busy = ce.register_pilot(1, "azure", 240.0, 0.0)
+    azure_doomed = ce.register_pilot(2, "azure", 240.0, 0.0)
+    gcp_busy = ce.register_pilot(3, "gcp", float("inf"), 0.0)
+    gcp_idle = ce.register_pilot(4, "gcp", float("inf"), 0.0)
+    assert ce.match(0.0) == 3                 # three jobs, four pilots
+    assert {p.id for p in (azure_busy, azure_doomed, gcp_busy)
+            if p.job is not None} == {azure_busy.id, azure_doomed.id,
+                                      gcp_busy.id}
+    assert gcp_idle.idle
+
+    assert ce.busy_by_provider() == {"azure": 2, "gcp": 1}
+    stats = ce.stats()
+    assert stats["pilots_live"] == 4
+    assert stats["pilots_busy"] == 3
+    assert stats["queued"] == 0
+
+    # one azure pilot's instance is preempted mid-job: its busy slot
+    # disappears from the per-provider view, its job re-queues
+    ce.pilot_lost(azure_doomed.id, 1.0)
+    assert ce.busy_by_provider() == {"azure": 1, "gcp": 1}
+    stats = ce.stats()
+    assert stats["pilots_live"] == 3
+    assert stats["pilots_busy"] == 2
+    assert stats["queued"] == 1
+    assert stats["preemptions"] == 1
+
+    # idle pilots never show up in busy_by_provider, even alone
+    ce.pilot_lost(azure_busy.id, 2.0)
+    ce.pilot_lost(gcp_busy.id, 2.0)
+    assert ce.busy_by_provider() == {}
+    assert ce.stats()["pilots_live"] == 1     # the idle gcp pilot
+    assert ce.stats()["pilots_busy"] == 0
+
+
+def test_stats_counts_finished_and_nat_drops():
+    """stats() surfaces the cumulative finished / preemption / NAT
+    counters alongside the live views."""
+    ce = ComputeElement(lease_interval_s=300.0)   # > azure NAT 240 s
+    ce.submit(Job(1, wall_h=0.25))
+    ce.submit(Job(2, wall_h=10.0))
+    ce.register_pilot(1, "gcp", float("inf"), 0.0)     # safe NAT
+    ce.register_pilot(2, "azure", 240.0, 0.0)          # doomed NAT
+    ce.match(0.0)
+    ce.advance(0.25, 0.25)
+    stats = ce.stats()
+    assert stats["finished"] == 1             # the short gcp job
+    assert stats["nat_drops"] == 1            # the azure mid-job drop
+    assert stats["preemptions"] == 1          # ... which re-queued job 2
+    assert stats["queued"] == 1
+    assert ce.busy_by_provider() == {}

@@ -1,10 +1,12 @@
 """Property tests for CampaignSpec (hypothesis): JSON round-trip is the
-identity for arbitrary specs, and random small specs — including the
-PriceCurve / GpuSlicing surfaces — run bit-identically solo vs batched.
-The strategies and the differential assertion live in
+identity for arbitrary specs, random small specs — including the
+PriceCurve / GpuSlicing surfaces — run bit-identically solo vs batched,
+and the typed event traces they emit serialize to identical bytes on
+every engine.  The strategies and the differential assertions live in
 tests/engine_equivalence.py; this module degrades gracefully where
 hypothesis is absent (the deterministic variants live in
-tests/test_spec.py and tests/test_curve_slicing.py)."""
+tests/test_spec.py, tests/test_curve_slicing.py and
+tests/test_events.py)."""
 import pytest
 
 pytest.importorskip("hypothesis")
@@ -12,8 +14,10 @@ import hypothesis.strategies as st_  # noqa: F401  (re-export convention)
 
 from hypothesis import given, settings
 
+from repro.core.events import CampaignTrace
 from repro.core.spec import CampaignSpec
 from tests.engine_equivalence import (assert_engines_equivalent,
+                                      assert_traces_equivalent,
                                       spec_strategy)
 
 _specs = spec_strategy()
@@ -29,3 +33,14 @@ def test_spec_json_roundtrip_is_identity(spec):
 @given(_specs, st_.integers(0, 2 ** 16))
 def test_random_specs_solo_vs_batched_bit_identical(spec, seed):
     assert_engines_equivalent(spec, seed, engines=("batched",))
+
+
+@settings(max_examples=8, deadline=None)
+@given(_specs, st_.integers(0, 2 ** 16))
+def test_random_specs_trace_bytes_identical_and_roundtrip(spec, seed):
+    """The trace contract swept over every spec surface: solo array and
+    batched lanes serialize identical traces, and the JSONL form is a
+    lossless round-trip."""
+    ref = assert_traces_equivalent(spec, seed, engines=("batched",))
+    tr = CampaignTrace.from_jsonl(ref)
+    assert tr.to_jsonl() == ref
