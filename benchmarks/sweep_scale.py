@@ -43,15 +43,18 @@ def time_sweep(lanes: int, seq_lanes: int, duration_h: float = 336.0):
 
 
 def bench_sweep_throughput():
-    """run.py-registered entry: B=16 quarter-length campaigns with a
-    2-lane sequential baseline, so the full bench suite (and the CI
-    smoke) stays fast; the standalone CLI runs the full B=64 bar."""
-    batched_per, seq_per, sw = time_sweep(16, 2, duration_h=84.0)
+    """run.py-registered entry: the acceptance-bar configuration itself
+    (B=64 paper-scale campaigns, 2-lane sequential baseline, ~6 s).  An
+    earlier quarter-length B=16 shape under-reported the speedup by
+    ~40%: the engine's fixed per-tick Python cost amortizes across
+    lanes, so the 10x bar is defined — and must be measured — at
+    B=64."""
+    batched_per, seq_per, sw = time_sweep(64, 2, duration_h=336.0)
     speedup = seq_per / batched_per
     lane0 = sw.rows[0]
     rows = [f"    batched {batched_per * 1e3:.0f} ms/campaign vs "
-            f"sequential {seq_per * 1e3:.0f} ms/campaign at B=16 "
-            f"(84h campaigns)",
+            f"sequential {seq_per * 1e3:.0f} ms/campaign at B=64 "
+            f"(paper-scale 336h campaigns)",
             f"    lane0: cost=${lane0['cost']:,.0f} "
             f"accel_days={lane0['accel_days']:,.1f} "
             f"preemptions={lane0['preemptions']}"]

@@ -96,11 +96,35 @@ def cmd_show(args) -> int:
     return 0
 
 
+def _registry_findings() -> List[str]:
+    """Registry completeness over the real engine classes: every
+    registered event must compile to ops every engine implements."""
+    from repro.core.fleet import ArrayProvisionerView
+    from repro.core.provisioner import MultiCloudProvisioner
+    from repro.core.spec import TimelineController
+    from repro.core.sweep import _LaneOps
+    from repro.core.timeline import registry_findings
+    return registry_findings(
+        {"solo": TimelineController, "batched": _LaneOps},
+        {"object": MultiCloudProvisioner, "array": ArrayProvisionerView})
+
+
 def cmd_lint(args) -> int:
     """Spec-level validation: report every finding (unsorted/duplicate
     event times, negative prices/targets, unknown catalog/provider
-    names) and exit 1 if any spec has one."""
+    names) and exit 1 if any spec has one.  ``--registry`` additionally
+    fails on timeline events registered for fewer than all engines."""
     bad = 0
+    if getattr(args, "registry", False):
+        findings = _registry_findings()
+        if findings:
+            bad += 1
+            for f in findings:
+                print(f"registry: {f}")
+        else:
+            from repro.core.timeline import REGISTRY
+            print(f"registry: OK ({len(REGISTRY)} event kinds on "
+                  "all engines)")
     for path in args.spec:
         try:
             spec = _load_spec(path)
@@ -179,6 +203,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     p_lint = sub.add_parser(
         "lint", help="validate spec file(s) without running them")
     p_lint.add_argument("spec", nargs="+")
+    p_lint.add_argument("--registry", action="store_true",
+                        help="also check the timeline-event registry: "
+                             "fail on events registered for fewer than "
+                             "all engines")
     p_lint.set_defaults(fn=cmd_lint)
 
     p_trace = sub.add_parser(

@@ -30,7 +30,8 @@ from repro.core.campaign import (CampaignController, PAPER_RAMP,  # noqa: F401
 from repro.core.scenarios import Scenario, default_suite  # noqa: F401
 from repro.core.spec import (BudgetFloor, CampaignResult,  # noqa: F401
                              CampaignSpec, CapacityShift, CEOutage,
-                             PriceShift, SetTarget, paper_spec)
+                             PriceCurve, PriceShift, SetTarget,
+                             WorkloadCurve, paper_spec)
 from repro.core.sweep import SweepResult  # noqa: F401
 from repro.core.events import CampaignTrace, TraceRecorder  # noqa: F401
 from repro.core.elastic import (ElasticRunner, GoodputReport,  # noqa: F401

@@ -30,6 +30,7 @@ from repro.core.provider import T4_FP32_TFLOPS, ProviderSpec
 from repro.core.simulator import SimConfig
 from repro.core.spec import (CampaignSpec, CEOutage, GpuSlicing,
                              PAPER_RAMP_EVENTS, PAPER_TIMELINE, PriceCurve,
+                             WorkloadCurve,
                              build_catalog as _spec_build_catalog,
                              paper_spec, run_solo)
 
@@ -206,6 +207,46 @@ def price_curve_scenarios(curves: Sequence[str] = tuple(MARKET_CURVES)
             for name in curves]
 
 
+# named request-rate curves (piecewise-constant factors on the CE queue
+# top-up level).  The paper treated the job supply as infinite; these ask
+# the HEPCloud cost question of *serving* load — what the same pool costs
+# when demand breathes.  Factors below ~0.03 starve the queue at full
+# fleet (int(4000 * f) jobs vs ~125 matched per tick at 2000 pilots).
+WORKLOAD_CURVES: Dict[str, WorkloadCurve] = {
+    # office-hours rhythm over the two-week window: full demand from
+    # 08:00, near-idle troughs from 20:00 each day
+    "diurnal": WorkloadCurve(tuple(
+        p for d in range(14)
+        for p in ((24.0 * d + 8.0, 1.0), (24.0 * d + 20.0, 0.02)))),
+    # near-idle background, then a 12 h flash crowd mid-burst
+    "flash-crowd": WorkloadCurve(((0.0, 0.05), (120.0, 1.0),
+                                  (132.0, 0.05))),
+}
+
+
+def workload_curve_scenarios(curves: Sequence[str] = tuple(WORKLOAD_CURVES)
+                             ) -> List[CampaignSpec]:
+    """The paper burst serving *time-varying* demand: each variant weaves
+    one named ``WorkloadCurve`` into the paper timeline, scaling the job
+    arrival rate all three engines see bit-identically."""
+    return [paper_spec(name=f"load-{name}",
+                       timeline=_sorted_timeline(*PAPER_TIMELINE,
+                                                 WORKLOAD_CURVES[name]))
+            for name in curves]
+
+
+def workload_burst() -> CampaignSpec:
+    """Demand and market shifting at once — the WorkloadCurve golden
+    campaign (tests/data/workload_curve.spec.json, pinned at seed 2021):
+    the paper burst under a drifting spot market while serving a
+    flash-crowd demand profile."""
+    return paper_spec(
+        name="workload-burst",
+        timeline=_sorted_timeline(*PAPER_TIMELINE,
+                                  MARKET_CURVES["drift-up"],
+                                  WORKLOAD_CURVES["flash-crowd"]))
+
+
 def gpu_slicing_variants(slices: Sequence[int] = (2, 4, 7)
                          ) -> List[CampaignSpec]:
     """Sfiligoi 2022 sub-GPU accounting: the same burst planned in
@@ -241,4 +282,5 @@ def default_suite() -> List[CampaignSpec]:
             *budget_floor_variants((0.3,)),
             *price_perturbations((0.8, 1.25)),
             *price_curve_scenarios(("drift-up", "azure-squeeze")),
+            *workload_curve_scenarios(),
             *gpu_slicing_variants((4,))]

@@ -115,6 +115,11 @@ class CloudSimulator:
         self.history: List[TickStats] = []
         self._pilot_by_instance: Dict[int, int] = {}
         self._events: List[tuple] = []   # (t_h, callable) one-shots
+        # request-rate factor (spec.WorkloadCurve): the CE queue tops up
+        # to int(min_queue * factor).  Set only at event time, so the
+        # per-tick int(int * float) product matches the batched engine's
+        # event-time cache bit-for-bit.
+        self.workload_factor = 1.0
         self.accel_hours = 0.0           # delivered accelerator wall hours
         self.busy_hours = 0.0            # hours with a job attached
         self.busy_hours_by_provider: Dict[str, float] = {}
@@ -135,9 +140,14 @@ class CloudSimulator:
         self._events.append((t_h, fn))
         self._events.sort(key=lambda e: e[0])
 
+    def effective_min_queue(self) -> int:
+        """The CE queue top-up level under the current request-rate
+        factor (1.0 unless a ``WorkloadCurve`` event changed it)."""
+        return int(self.cfg.min_queue * self.workload_factor)
+
     def ensure_jobs(self, min_queue: Optional[int] = None):
         """IceCube's queue was effectively infinite; keep it topped up."""
-        mq = self.cfg.min_queue if min_queue is None else min_queue
+        mq = self.effective_min_queue() if min_queue is None else min_queue
         if self.fleet is not None:
             self.fleet.ensure_jobs(mq)
             return
@@ -193,7 +203,7 @@ class CloudSimulator:
             fn(self)
         if self.fleet is not None:
             running, busy = self.fleet.tick(self.now, dt,
-                                            self.cfg.min_queue)
+                                            self.effective_min_queue())
             busy_by_prov = self.fleet.busy_by_provider()
         else:
             self._maintain_groups()

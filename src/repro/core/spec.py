@@ -38,13 +38,24 @@ from __future__ import annotations
 import json
 from collections.abc import Mapping as MappingABC
 from dataclasses import asdict, dataclass, field, fields, replace
-from typing import Dict, List, Mapping, Optional, Tuple, Union
+from typing import Dict, List, Mapping, Optional, Tuple
 
+from repro.core import timeline as timeline_registry
 from repro.core.events import CampaignTrace, TraceRecorder, build_trace
 from repro.core.provider import (T4_FP32_TFLOPS, ProviderSpec, RegionSpec,
                                  heterogeneous_catalog, slice_provider,
                                  t4_catalog)
 from repro.core.simulator import CloudSimulator, SimConfig
+# the timed-event dataclasses live in the core/timeline.py registry now
+# (one registration covers serialization, lint, compile and apply);
+# re-exported here because specs, goldens and tests import them as
+# spec.* since PR 3
+from repro.core.timeline import (EVENT_KINDS, BudgetFloor,  # noqa: F401
+                                 CapacityShift, CEOutage, Event,
+                                 PriceCurve, PriceShift, SetTarget,
+                                 WorkloadCurve, event_from_dict,
+                                 event_to_dict, lint_timeline,
+                                 validate_event)
 
 SCHEMA_VERSION = 1
 
@@ -57,161 +68,6 @@ ICECUBE_BASELINE_GPUH_PER_2W = 9e6 * (14 / 365.0)
 # §V summary claims the benchmarks compare against
 PAPER_CLAIMS = {"cost": 58000.0, "accel_days": 16000.0,
                 "eflop_hours_fp32": 3.1, "doubling": 2.0}
-
-
-# -- the declarative event timeline ---------------------------------------
-
-@dataclass(frozen=True)
-class SetTarget:
-    """Scale the global fleet target (staged-ramp step).  While the
-    budget floor has fired, targets are capped at the downscale target —
-    the controller semantics of the paper's staged ramp."""
-    at_h: float
-    target: int
-
-    kind = "set_target"
-
-    def install(self, sim: CloudSimulator, ctl: "TimelineController"):
-        def fire(s):
-            t = min(self.target, ctl.downscale_target) \
-                if ctl.budget_capped else self.target
-            s.prov.scale_to(t, s.now)
-            ctl.record(f"t={s.now:6.1f}h scale_to({t})",
-                       {"t": float(s.now), "event": "scale",
-                        "target": int(t)})
-        sim.at(self.at_h, fire)
-
-
-@dataclass(frozen=True)
-class CEOutage:
-    """Total CE backend collapse at ``at_h``: instant fleet-wide
-    deprovision ("minimal financial loss"), then resume at
-    ``resume_target`` once the outage clears."""
-    at_h: float
-    duration_h: float = 2.0
-    resume_target: int = 1000
-
-    kind = "ce_outage"
-
-    def install(self, sim: CloudSimulator, ctl: "TimelineController"):
-        def outage(s):
-            s.ce.outage = True
-            s.prov.deprovision_all(s.now)
-            ctl.record(f"t={s.now:6.1f}h CE OUTAGE -> deprovision all",
-                       {"t": float(s.now), "event": "outage_on"})
-
-        def recover(s):
-            s.ce.outage = False
-            s.prov.scale_to(self.resume_target, s.now)
-            ctl.record(f"t={s.now:6.1f}h CE recovered -> resume at "
-                       f"{self.resume_target}",
-                       {"t": float(s.now), "event": "outage_off",
-                        "target": int(self.resume_target)})
-        sim.at(self.at_h, outage)
-        sim.at(self.at_h + self.duration_h, recover)
-
-
-@dataclass(frozen=True)
-class PriceShift:
-    """Uniform market drift at ``at_h``: every provider's $/day is
-    multiplied by ``factor`` from then on (already-billed hours keep
-    their old price).  Uniformity preserves the price-priority fill
-    order, so provisioning decisions stay comparable."""
-    at_h: float
-    factor: float
-
-    kind = "price_shift"
-
-    def install(self, sim: CloudSimulator, ctl: "TimelineController"):
-        def fire(s):
-            s.prov.scale_prices(self.factor)
-            ctl.record(f"t={s.now:6.1f}h price shift x{self.factor}",
-                       {"t": float(s.now), "event": "price",
-                        "factor": float(self.factor)})
-        sim.at(self.at_h, fire)
-
-
-@dataclass(frozen=True)
-class BudgetFloor:
-    """(Re)arm the budget tripwire at ``at_h``: once remaining budget
-    crosses ``fraction``, cap the fleet at ``downscale_target`` (the
-    paper's "20% budget left -> resume at only 1k" decision).  A floor
-    that already fired stays fired."""
-    at_h: float
-    fraction: float
-    downscale_target: int
-
-    kind = "budget_floor"
-
-    def install(self, sim: CloudSimulator, ctl: "TimelineController"):
-        def fire(s):
-            ctl.floor_fraction = self.fraction
-            ctl.downscale_target = self.downscale_target
-            ctl.record(f"t={s.now:6.1f}h budget floor armed at "
-                       f"{self.fraction:.0%} -> {self.downscale_target}",
-                       {"t": float(s.now), "event": "floor",
-                        "fraction": float(self.fraction),
-                        "target": int(self.downscale_target)})
-        sim.at(self.at_h, fire)
-
-
-@dataclass(frozen=True)
-class CapacityShift:
-    """Capacity weather at ``at_h``: every region's spot capacity is
-    multiplied by ``factor`` (floored at 1 instance).  Shrinking below
-    the live count does not evict running instances — groups simply
-    stop refilling (provider group semantics)."""
-    at_h: float
-    factor: float
-
-    kind = "capacity_shift"
-
-    def install(self, sim: CloudSimulator, ctl: "TimelineController"):
-        def fire(s):
-            s.prov.scale_capacity(self.factor)
-            ctl.record(f"t={s.now:6.1f}h capacity shift x{self.factor}",
-                       {"t": float(s.now), "event": "capacity",
-                        "factor": float(self.factor)})
-        sim.at(self.at_h, fire)
-
-
-@dataclass(frozen=True)
-class PriceCurve:
-    """A piecewise-constant multi-day $/h curve: at each ``(t_h, factor)``
-    breakpoint the price factor is *set* to ``factor`` (absolute, unlike
-    the cumulative ``PriceShift`` multiplier), so a drifting spot market
-    is declared as one curve instead of a chain of compensating shifts.
-    ``provider=None`` drives every provider's rate; naming a provider
-    drives that provider's groups only (per-provider curve factors stack
-    multiplicatively on the uniform ``PriceShift`` scalar).  Already-
-    billed hours keep their old price."""
-    points: Tuple[Tuple[float, float], ...]
-    provider: Optional[str] = None
-
-    kind = "price_curve"
-
-    @property
-    def at_h(self) -> float:
-        """First breakpoint time (lint/sorting anchor)."""
-        return self.points[0][0] if self.points else 0.0
-
-    def install(self, sim: CloudSimulator, ctl: "TimelineController"):
-        who = self.provider if self.provider is not None else "all"
-        for t, f in self.points:
-            def fire(s, f=f):
-                s.prov.set_price_factor(self.provider, f)
-                ctl.record(f"t={s.now:6.1f}h price curve [{who}] -> x{f}",
-                           {"t": float(s.now), "event": "price_curve",
-                            "provider": self.provider,
-                            "factor": float(f)})
-            sim.at(t, fire)
-
-
-Event = Union[SetTarget, CEOutage, PriceShift, BudgetFloor, CapacityShift,
-              PriceCurve]
-EVENT_KINDS = {cls.kind: cls for cls in
-               (SetTarget, CEOutage, PriceShift, BudgetFloor, CapacityShift,
-                PriceCurve)}
 
 
 @dataclass(frozen=True)
@@ -290,14 +146,7 @@ class CampaignSpec:
             if self.gpu_slicing.slices < 1:
                 raise ValueError("gpu_slicing.slices must be >= 1")
         for ev in self.timeline:
-            if type(ev) not in EVENT_KINDS.values():
-                raise ValueError(f"unknown timeline event {ev!r}")
-            if isinstance(ev, PriceCurve):
-                for p in ev.points:
-                    if len(p) != 2:
-                        raise ValueError(
-                            f"PriceCurve points must be (t_h, factor) "
-                            f"pairs, got {p!r}")
+            validate_event(ev)
         return self
 
     # -- serialization -----------------------------------------------------
@@ -306,8 +155,7 @@ class CampaignSpec:
         for f in fields(self):
             v = getattr(self, f.name)
             if f.name == "timeline":
-                d[f.name] = [{"kind": ev.kind, **asdict(ev)}
-                             for ev in v]
+                d[f.name] = [event_to_dict(ev) for ev in v]
             elif f.name == "providers":
                 # nat_idle_timeout_s defaults to float('inf'), which JSON
                 # cannot represent (Python would emit the non-standard
@@ -338,17 +186,8 @@ class CampaignSpec:
         if unknown:
             raise ValueError(f"unknown CampaignSpec fields {sorted(unknown)}")
         if d.get("timeline") is not None:
-            evs = []
-            for ev in d["timeline"]:
-                ev = dict(ev)
-                kind = ev.pop("kind")
-                if kind not in EVENT_KINDS:
-                    raise ValueError(f"unknown timeline event kind {kind!r}")
-                if kind == PriceCurve.kind:
-                    ev["points"] = tuple(
-                        (float(t), float(f)) for t, f in ev["points"])
-                evs.append(EVENT_KINDS[kind](**ev))
-            d["timeline"] = tuple(evs)
+            d["timeline"] = tuple(event_from_dict(ev)
+                                  for ev in d["timeline"])
         if d.get("gpu_slicing") is not None:
             g = dict(d["gpu_slicing"])
             if g.get("providers") is not None:
@@ -521,65 +360,10 @@ def lint_spec(spec: CampaignSpec) -> List[str]:
                 if base is not None and name not in base:
                     out.append(f"gpu_slicing names unknown provider "
                                f"{name!r}")
-    prev_t = None
-    seen_times: Dict[float, int] = {}
-    for i, ev in enumerate(spec.timeline):
-        at = f"timeline[{i}] {type(ev).__name__}"
-        t0 = ev.at_h
-        if t0 < 0:
-            out.append(f"{at}: negative event time {t0}")
-        if prev_t is not None and t0 < prev_t:
-            out.append(f"{at}: event times not sorted "
-                       f"({t0} after {prev_t})")
-        prev_t = max(t0, prev_t) if prev_t is not None else t0
-        # dead events never execute: anchor for plain events, every
-        # breakpoint for curves
-        dead_ts = [t for t, _f in ev.points] if isinstance(ev, PriceCurve) \
-            else [t0]
-        for t in dead_ts:
-            if t >= spec.duration_h:
-                out.append(f"{at}: fires at t={t} h, at/after the "
-                           f"campaign end ({spec.duration_h} h) — never "
-                           "executes")
-        if not isinstance(ev, PriceCurve):
-            seen_times[t0] = seen_times.get(t0, 0) + 1
-        if isinstance(ev, SetTarget) and ev.target < 0:
-            out.append(f"{at}: negative target {ev.target}")
-        elif isinstance(ev, CEOutage):
-            if ev.duration_h <= 0:
-                out.append(f"{at}: outage duration must be positive")
-            if ev.resume_target < 0:
-                out.append(f"{at}: negative resume_target "
-                           f"{ev.resume_target}")
-        elif isinstance(ev, (PriceShift, CapacityShift)) and ev.factor <= 0:
-            out.append(f"{at}: factor must be positive, got {ev.factor}")
-        elif isinstance(ev, BudgetFloor):
-            if not 0.0 <= ev.fraction <= 1.0:
-                out.append(f"{at}: fraction {ev.fraction} outside [0, 1]")
-            if ev.downscale_target < 0:
-                out.append(f"{at}: negative downscale_target "
-                           f"{ev.downscale_target}")
-        elif isinstance(ev, PriceCurve):
-            if not ev.points:
-                out.append(f"{at}: empty curve (no points)")
-            pt = None
-            for t, f in ev.points:
-                if f <= 0:
-                    out.append(f"{at}: non-positive price factor {f} "
-                               f"at t={t}")
-                if pt is not None and t <= pt:
-                    out.append(f"{at}: curve points not strictly "
-                               f"time-sorted ({t} after {pt})")
-                pt = t
-            if ev.provider is not None and known_providers is not None \
-                    and ev.provider not in known_providers:
-                out.append(f"{at}: unknown provider {ev.provider!r} "
-                           f"(catalog has {sorted(known_providers)})")
-    for t, n in seen_times.items():
-        if n > 1:
-            out.append(f"timeline: {n} events share t={t} h — they "
-                       "execute in declaration order; split the times "
-                       "if that overlap is unintended")
+    # per-event rules are registry-derived: every registered kind
+    # declares its own lint in core/timeline.py
+    out.extend(lint_timeline(spec.timeline, spec.duration_h,
+                             known_providers))
     return out
 
 
@@ -587,11 +371,22 @@ def lint_spec(spec: CampaignSpec) -> List[str]:
 
 class TimelineController:
     """Interprets a spec's timeline against one solo ``CloudSimulator``:
-    installs every event as a one-shot at its time, arms the budget-floor
-    tripwire on the ledger's threshold alerts, and records operational
-    provenance — human-readable ``log`` lines (the controller log the
-    paper's operators kept) plus structured ``events_fired`` records that
-    are bit-identical to the batched engine's per-lane provenance."""
+    the solo :class:`~repro.core.timeline.EngineOps` adapter.  Every
+    event's compiled ops (``timeline.compile_event``) are installed as
+    one-shots at their times, the budget-floor tripwire is armed on the
+    ledger's threshold alerts, and operational provenance is recorded —
+    human-readable ``log`` lines (the controller log the paper's
+    operators kept) plus structured ``events_fired`` records that are
+    bit-identical to the batched engine's per-lane provenance.  Fleet
+    ops delegate to ``sim.prov``/``sim.ce``, which present the same
+    facade on the object and array engines — one adapter covers both
+    solo engines."""
+
+    # class-level defaults so the ``registry_findings`` drift guard can
+    # hasattr-check the EngineOps state members on the class itself
+    budget_capped = False
+    downscale_target = 0
+    floor_fraction = 0.0
 
     def __init__(self, sim: CloudSimulator, spec: CampaignSpec):
         self.sim = sim
@@ -603,13 +398,48 @@ class TimelineController:
         self.budget_capped = False
         sim.ledger.on_threshold(self._on_budget_alert)
         for ev in spec.timeline:
-            ev.install(sim, self)
+            for t, op_kind, arg in timeline_registry.compile_event(ev):
+                sim.at(t, self._fire(op_kind, arg))
+
+    def _fire(self, op_kind: str, arg):
+        def fire(s):
+            rec = timeline_registry.apply_op(self, op_kind, arg, s.now)
+            self.record(f"t={s.now:6.1f}h "
+                        + timeline_registry.describe_record(rec), rec)
+        return fire
 
     def record(self, line: str, event: Optional[dict] = None):
         self.log.append(line)
         if event is not None:
             self.events_fired.append(event)
 
+    # -- EngineOps (the registry's apply() targets) ------------------------
+    def scale_to(self, n: int):
+        self.sim.prov.scale_to(int(n), self.sim.now)
+
+    def deprovision_all(self):
+        self.sim.prov.deprovision_all(self.sim.now)
+
+    def set_outage(self, on: bool):
+        self.sim.ce.outage = bool(on)
+
+    def scale_prices(self, factor: float):
+        self.sim.prov.scale_prices(factor)
+
+    def set_price_factor(self, provider: Optional[str], factor: float):
+        self.sim.prov.set_price_factor(provider, factor)
+
+    def scale_capacity(self, factor: float):
+        self.sim.prov.scale_capacity(factor)
+
+    def arm_budget_floor(self, fraction: float, target: int):
+        self.floor_fraction = fraction
+        self.downscale_target = target
+
+    def set_workload_factor(self, factor: float):
+        self.sim.workload_factor = factor
+
+    # -- the budget tripwire ----------------------------------------------
     def _on_budget_alert(self, frac, remaining, rate_per_day):
         self.log.append(
             f"BUDGET ALERT: {frac:.0%} remaining (${remaining:,.0f}), "
@@ -622,10 +452,8 @@ class TimelineController:
                 f"cap fleet at {self.downscale_target}")
 
     def _apply_cap(self, sim):
-        tgt = int(self.downscale_target)
-        sim.prov.scale_to(tgt, sim.now)
-        self.events_fired.append({"t": float(sim.now),
-                                  "event": "budget_floor", "target": tgt})
+        self.events_fired.append(
+            timeline_registry.apply_budget_cap(self, sim.now))
 
 
 def check_collect(collect: str):

@@ -54,14 +54,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import timeline as timeline_registry
 from repro.core.budget import BudgetLedger
 from repro.core.events import CampaignTrace, TraceRecorder, build_trace
 from repro.core.fleet import (_NO_PILOT, _PILOT_DEAD, _PILOT_LIVE,
                               checkpoint_floor, preemption_rate,
                               segment_ranks)
-from repro.core.spec import (BudgetFloor, CampaignSpec, CapacityShift,
-                             CEOutage, PriceCurve, PriceShift, SetTarget,
-                             build_catalog)
+from repro.core.spec import CampaignSpec, build_catalog
 
 # ledger alert levels, descending — the solo controller reacts to these
 # ledger callbacks, so both engines must cross the same set
@@ -102,33 +101,77 @@ class _Lane:
 
 def _compile_timeline(spec: CampaignSpec) -> List[tuple]:
     """Flatten a spec's event timeline into stably time-sorted
-    ``(t, kind, arg)`` tuples — the same expansion order (CEOutage
+    ``(t, op_kind, arg)`` tuples — registry-derived
+    (``timeline.compile_timeline``), so the expansion order (CEOutage
     becomes on/off at its declaration point) and tie-breaking (stable by
-    timeline position) as the solo ``TimelineController`` installs."""
-    evs: List[tuple] = []
-    for ev in spec.timeline:
-        if isinstance(ev, SetTarget):
-            evs.append((ev.at_h, "scale", ev.target))
-        elif isinstance(ev, CEOutage):
-            evs.append((ev.at_h, "outage_on", 0))
-            evs.append((ev.at_h + ev.duration_h, "outage_off",
-                        ev.resume_target))
-        elif isinstance(ev, PriceShift):
-            evs.append((ev.at_h, "price", ev.factor))
-        elif isinstance(ev, PriceCurve):
-            # one op per breakpoint, at its own time (the solo controller
-            # installs each point as its own one-shot)
-            for t, f in ev.points:
-                evs.append((t, "curve", (ev.provider, f)))
-        elif isinstance(ev, CapacityShift):
-            evs.append((ev.at_h, "capacity", ev.factor))
-        elif isinstance(ev, BudgetFloor):
-            evs.append((ev.at_h, "floor",
-                        (ev.fraction, ev.downscale_target)))
+    timeline position) are by construction the same one-shots the solo
+    ``TimelineController`` installs."""
+    return timeline_registry.compile_timeline(spec.timeline)
+
+
+class _LaneOps:
+    """One lane's :class:`~repro.core.timeline.EngineOps` adapter: the
+    registry's shared ``apply`` bodies drive this to mutate lane ``b``'s
+    slice of the struct-of-arrays state.  Each method mirrors the solo
+    facade op exactly (same float-op order — see ``_refresh_rates``), so
+    every lane stays bit-identical to a solo run."""
+
+    __slots__ = ("eng", "b", "now")
+
+    def __init__(self, eng: "BatchedFleetEngine", b: int, now: float):
+        self.eng = eng
+        self.b = b
+        self.now = now
+
+    @property
+    def budget_capped(self) -> bool:
+        return bool(self.eng.capped[self.b])
+
+    @property
+    def downscale_target(self) -> int:
+        return int(self.eng.lane_downscale[self.b])
+
+    def scale_to(self, n: int):
+        self.eng._lane_scale_to(self.b, int(n), self.now)
+
+    def deprovision_all(self):
+        self.eng._lane_deprovision(self.b, self.now)
+
+    def set_outage(self, on: bool):
+        self.eng.outage[self.b] = bool(on)
+
+    def scale_prices(self, factor: float):
+        # cumulative per-lane scale on top of which curve factors stack
+        # (solo: prov.scale_prices)
+        self.eng.lane_price_scale[self.b] *= factor
+        self.eng._refresh_rates(self.b)
+
+    def set_price_factor(self, provider, factor: float):
+        eng, b = self.eng, self.b
+        if provider is None:
+            eng.curve_lg[b * eng.G:(b + 1) * eng.G] = factor
         else:
-            raise ValueError(f"unknown timeline event {ev!r}")
-    evs.sort(key=lambda e: e[0])
-    return evs
+            gs = eng._prov_groups.get(provider)
+            if gs is not None:           # unknown provider: no-op (solo
+                eng.curve_lg[b * eng.G + gs] = factor   # semantics)
+        eng._refresh_rates(b)
+
+    def scale_capacity(self, factor: float):
+        eng, b = self.eng, self.b
+        s = slice(b * eng.G, (b + 1) * eng.G)
+        eng.g_cap_lg[s] = np.maximum(
+            1, (eng.g_cap_lg[s] * factor).astype(np.int64))
+
+    def arm_budget_floor(self, fraction: float, target: int):
+        self.eng.lane_floor[self.b] = fraction
+        self.eng.lane_downscale[self.b] = target
+
+    def set_workload_factor(self, factor: float):
+        eng, b = self.eng, self.b
+        eng.lane_workload[b] = factor
+        # cached at event time; int(int64 * float) is the same IEEE
+        # product + truncation the solo sim computes per tick
+        eng.lane_min_queue_eff[b] = int(eng.lane_min_queue[b] * factor)
 
 
 def _prepare(sc, seed: int) -> Tuple[tuple, _Lane]:
@@ -205,6 +248,10 @@ class BatchedFleetEngine:
         self.lane_floor = col(lambda s: s.budget_floor_fraction)
         self.lane_downscale = col(lambda s: s.downscale_target, np.int64)
         self.lane_min_queue = col(lambda s: s.min_queue, np.int64)
+        # request-rate factor (spec.WorkloadCurve) and the cached
+        # effective top-up level it implies — refreshed at event time
+        self.lane_workload = np.ones(B)
+        self.lane_min_queue_eff = self.lane_min_queue.copy()
         self.lane_wall = col(lambda s: s.job_wall_h)
         self.lane_ckpt = col(lambda s: s.job_checkpoint_h)
         self.lane_overhead = col(lambda s: s.overhead_per_day)
@@ -252,6 +299,10 @@ class BatchedFleetEngine:
             self.events.append(evs)
             if evs:
                 self.next_event_t[b] = evs[0][0]
+        # scalar fast-path guards so the per-tick event check is two
+        # float/bool compares instead of two array reductions
+        self._next_wake = float(self.next_event_t.min())
+        self._cap_pending_any = False
 
         # -- vectorized ledger + totals ----------------------------------
         self.spent = np.zeros(B)
@@ -501,72 +552,31 @@ class BatchedFleetEngine:
 
     # -- controller events ------------------------------------------------
     def _run_events(self, now: float):
-        if not (self.cap_pending.any()
-                or (self.next_event_t <= now).any()):
+        if not self._cap_pending_any and now < self._next_wake:
             return
+        apply_op = timeline_registry.apply_op
         for b in range(self.B):
             fired = self.events_fired[b]
+            ops = None
             # the budget-floor cap was scheduled "at now" during the
             # previous tick's billing — it sorts before any event due
             # this tick, exactly like the solo sim.at(now, ...) insertion
             if self.cap_pending[b]:
-                self._lane_scale_to(b, int(self.lane_downscale[b]), now)
+                ops = _LaneOps(self, b, now)
+                fired.append(timeline_registry.apply_budget_cap(ops, now))
                 self.cap_pending[b] = False
-                fired.append({"t": float(now), "event": "budget_floor",
-                              "target": int(self.lane_downscale[b])})
             evs = self.events[b]
             while self.ev_ptr[b] < len(evs) \
                     and evs[self.ev_ptr[b]][0] <= now:
-                _t, kind, arg = evs[self.ev_ptr[b]]
+                _t, op_kind, arg = evs[self.ev_ptr[b]]
                 self.ev_ptr[b] += 1
-                if kind == "scale":
-                    tgt = min(arg, int(self.lane_downscale[b])) \
-                        if self.capped[b] else arg
-                    self._lane_scale_to(b, tgt, now)
-                    fired.append({"t": float(now), "event": "scale",
-                                  "target": int(tgt)})
-                elif kind == "outage_on":
-                    self.outage[b] = True
-                    self._lane_deprovision(b, now)
-                    fired.append({"t": float(now), "event": "outage_on"})
-                elif kind == "outage_off":
-                    self.outage[b] = False
-                    self._lane_scale_to(b, int(arg), now)
-                    fired.append({"t": float(now), "event": "outage_off",
-                                  "target": int(arg)})
-                elif kind == "price":
-                    # cumulative per-lane scale on top of which curve
-                    # factors stack (solo: scale_prices)
-                    self.lane_price_scale[b] *= arg
-                    self._refresh_rates(b)
-                    fired.append({"t": float(now), "event": "price",
-                                  "factor": float(arg)})
-                elif kind == "curve":
-                    pname, f = arg
-                    if pname is None:
-                        self.curve_lg[b * self.G:(b + 1) * self.G] = f
-                    else:
-                        gs = self._prov_groups.get(pname)
-                        if gs is not None:
-                            self.curve_lg[b * self.G + gs] = f
-                    self._refresh_rates(b)
-                    fired.append({"t": float(now), "event": "price_curve",
-                                  "provider": pname, "factor": float(f)})
-                elif kind == "capacity":
-                    s = slice(b * self.G, (b + 1) * self.G)
-                    self.g_cap_lg[s] = np.maximum(
-                        1, (self.g_cap_lg[s] * arg).astype(np.int64))
-                    fired.append({"t": float(now), "event": "capacity",
-                                  "factor": float(arg)})
-                elif kind == "floor":
-                    frac, tgt = arg
-                    self.lane_floor[b] = frac
-                    self.lane_downscale[b] = tgt
-                    fired.append({"t": float(now), "event": "floor",
-                                  "fraction": float(frac),
-                                  "target": int(tgt)})
+                if ops is None:
+                    ops = _LaneOps(self, b, now)
+                fired.append(apply_op(ops, op_kind, arg, now))
             self.next_event_t[b] = evs[self.ev_ptr[b]][0] \
                 if self.ev_ptr[b] < len(evs) else np.inf
+        self._next_wake = float(self.next_event_t.min())
+        self._cap_pending_any = False
 
     # -- vectorized tick phases ------------------------------------------
     def _maintain(self, now: float):
@@ -757,7 +767,7 @@ class BatchedFleetEngine:
         """Top the CE queue up to min_queue — pure counter arithmetic:
         fresh jobs stay anonymous until matched (IDs are the submission
         order, which FIFO matching preserves)."""
-        need = np.maximum(0, self.lane_min_queue
+        need = np.maximum(0, self.lane_min_queue_eff
                           - (self.q_len + self.fresh_q))
         self.fresh_q += need
         self.job_seq += need
@@ -1025,6 +1035,7 @@ class BatchedFleetEngine:
         if trigger.any():
             self.capped |= trigger
             self.cap_pending |= trigger
+            self._cap_pending_any = True
 
     def _accumulate(self, dt: float):
         running = self.live_lg.reshape(self.B, self.G).sum(axis=1)

@@ -1,0 +1,713 @@
+"""One declarative registry for every timed campaign event.
+
+Historically each timed spec event (the paper's staged ramp and CE
+outage, PR 3's price/capacity/floor shifts, PR 4's PriceCurve) was
+dispatched by four hand-maintained ``if``-ladders that had to agree:
+``spec.py`` per-event ``install`` closures (solo engines),
+``sweep.py`` ``_compile_timeline`` + ``_run_events`` (batched engine),
+``spec.lint_spec`` and the JSON (de)serialization — plus matching ops
+on both provisioners.  Adding one event meant five-plus coordinated
+edits, which is what kept serving-load and data-plane events off the
+roadmap.
+
+This module collapses all of it into data:
+
+  * :class:`EngineOps` — the narrow protocol an engine exposes to the
+    timeline (``scale_to`` / ``deprovision_all`` / ``set_outage`` /
+    ``scale_prices`` / ``set_price_factor`` / ``scale_capacity`` /
+    ``arm_budget_floor`` / ``set_workload_factor`` plus the
+    ``budget_capped`` / ``downscale_target`` cap state).  The solo
+    controller (``spec.TimelineController``, driving both the object
+    and array engines through ``sim.prov``/``sim.ce``) and the batched
+    per-lane adapter (``sweep._LaneOps``) implement it.
+  * :class:`OpSpec` — one compiled operation: how to apply it against
+    ``EngineOps`` (returning the provenance record body), how to
+    render the solo log line, and which EngineOps members it requires
+    (the drift guard ``registry_findings`` checks).
+  * :class:`EventType` — one registered event kind: its frozen
+    dataclass, compile-to-``(t, op, arg)`` form, lint rules, JSON
+    decode coercions, validation, and a hypothesis strategy so the
+    differential harness sweeps it automatically.
+
+**Adding a timed event is now one registration here plus (if needed)
+new ``EngineOps`` method bodies on the two adapters** — serialization,
+linting, solo installation, batched compilation, the lint CLI's
+``--registry`` check and the property-test strategies all derive from
+the registry entry.  ``WorkloadCurve`` (request-rate over time,
+mirroring ``PriceCurve``) is the first event landed through this path.
+
+Bit-identity contract: ``apply`` bodies must perform the exact float-op
+sequence every engine shares (see the billing-rate discipline in
+core/sweep.py); the shared ``apply`` *is* that single definition, so
+the three engines cannot drift.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple, Union)
+
+try:                                       # typing.Protocol: py3.8+
+    from typing import Protocol
+except ImportError:                        # pragma: no cover
+    Protocol = object
+
+
+class EngineOps(Protocol):
+    """What an engine must expose for the timeline to drive it.
+
+    The solo adapter is ``spec.TimelineController`` (delegating fleet
+    ops to ``sim.prov``/``sim.ce`` — identical facades on the object
+    and array engines); the batched adapter is ``sweep._LaneOps`` (one
+    lane's slice of the struct-of-arrays state).  ``registry_findings``
+    hasattr-checks each op's ``requires`` against both."""
+
+    budget_capped: bool       # has the budget floor fired?
+    downscale_target: int     # cap applied to targets once fired
+
+    def scale_to(self, n: int) -> None: ...
+    def deprovision_all(self) -> None: ...
+    def set_outage(self, on: bool) -> None: ...
+    def scale_prices(self, factor: float) -> None: ...
+    def set_price_factor(self, provider: Optional[str],
+                         factor: float) -> None: ...
+    def scale_capacity(self, factor: float) -> None: ...
+    def arm_budget_floor(self, fraction: float, target: int) -> None: ...
+    def set_workload_factor(self, factor: float) -> None: ...
+
+
+# -- the event dataclasses -------------------------------------------------
+
+@dataclass(frozen=True)
+class SetTarget:
+    """Scale the global fleet target (staged-ramp step).  While the
+    budget floor has fired, targets are capped at the downscale target —
+    the controller semantics of the paper's staged ramp."""
+    at_h: float
+    target: int
+
+    kind = "set_target"
+
+
+@dataclass(frozen=True)
+class CEOutage:
+    """Total CE backend collapse at ``at_h``: instant fleet-wide
+    deprovision ("minimal financial loss"), then resume at
+    ``resume_target`` once the outage clears."""
+    at_h: float
+    duration_h: float = 2.0
+    resume_target: int = 1000
+
+    kind = "ce_outage"
+
+
+@dataclass(frozen=True)
+class PriceShift:
+    """Uniform market drift at ``at_h``: every provider's $/day is
+    multiplied by ``factor`` from then on (already-billed hours keep
+    their old price).  Uniformity preserves the price-priority fill
+    order, so provisioning decisions stay comparable."""
+    at_h: float
+    factor: float
+
+    kind = "price_shift"
+
+
+@dataclass(frozen=True)
+class BudgetFloor:
+    """(Re)arm the budget tripwire at ``at_h``: once remaining budget
+    crosses ``fraction``, cap the fleet at ``downscale_target`` (the
+    paper's "20% budget left -> resume at only 1k" decision).  A floor
+    that already fired stays fired."""
+    at_h: float
+    fraction: float
+    downscale_target: int
+
+    kind = "budget_floor"
+
+
+@dataclass(frozen=True)
+class CapacityShift:
+    """Capacity weather at ``at_h``: every region's spot capacity is
+    multiplied by ``factor`` (floored at 1 instance).  Shrinking below
+    the live count does not evict running instances — groups simply
+    stop refilling (provider group semantics)."""
+    at_h: float
+    factor: float
+
+    kind = "capacity_shift"
+
+
+@dataclass(frozen=True)
+class PriceCurve:
+    """A piecewise-constant multi-day $/h curve: at each ``(t_h, factor)``
+    breakpoint the price factor is *set* to ``factor`` (absolute, unlike
+    the cumulative ``PriceShift`` multiplier), so a drifting spot market
+    is declared as one curve instead of a chain of compensating shifts.
+    ``provider=None`` drives every provider's rate; naming a provider
+    drives that provider's groups only (per-provider curve factors stack
+    multiplicatively on the uniform ``PriceShift`` scalar).  Already-
+    billed hours keep their old price."""
+    points: Tuple[Tuple[float, float], ...]
+    provider: Optional[str] = None
+
+    kind = "price_curve"
+
+    @property
+    def at_h(self) -> float:
+        """First breakpoint time (lint/sorting anchor)."""
+        return self.points[0][0] if self.points else 0.0
+
+
+@dataclass(frozen=True)
+class WorkloadCurve:
+    """Request-rate over time (the serving-load mirror of PriceCurve):
+    at each ``(t_h, factor)`` breakpoint the campaign's job-arrival
+    factor is *set* to ``factor`` — the CE queue tops up to
+    ``int(min_queue * factor)`` from then on.  Diurnal peaks, flash
+    crowds and regional demand shifts become one declarative curve,
+    interpreted bit-identically by all three engines (``int * float``
+    is the same IEEE product everywhere, and the factor only changes
+    at event time).  Factors below the fleet's drain rate starve
+    pilots — the "what does it cost to serve N users through a
+    spot-market week" question asked of load instead of price."""
+    points: Tuple[Tuple[float, float], ...]
+
+    kind = "workload_curve"
+
+    @property
+    def at_h(self) -> float:
+        """First breakpoint time (lint/sorting anchor)."""
+        return self.points[0][0] if self.points else 0.0
+
+
+# -- registry plumbing -----------------------------------------------------
+
+@dataclass(frozen=True)
+class OpSpec:
+    """One compiled timeline operation.
+
+    ``apply(ops, arg)`` performs the op against an :class:`EngineOps`
+    adapter and returns the provenance-record *body* (no ``"t"`` key —
+    ``apply_op`` stamps it); ``describe(record)`` renders the solo
+    controller's human log line; ``requires`` / ``prov_requires`` are
+    the EngineOps / provisioner-facade members the op depends on (what
+    ``registry_findings`` drift-checks)."""
+    kind: str                              # compiled op tag
+    event: str                             # record "event" field value
+    requires: Tuple[str, ...]              # EngineOps members used
+    apply: Callable[[Any, Any], dict]
+    describe: Callable[[dict], str]
+    prov_requires: Tuple[str, ...] = ()    # provisioner-facade members
+
+
+@dataclass(frozen=True)
+class EventType:
+    """One registered timed-event kind — the single place an event
+    declares everything every layer needs."""
+    kind: str
+    cls: type
+    compile: Callable[[Any], List[tuple]]  # ev -> [(t, op_kind, arg)]
+    ops: Tuple[str, ...]                   # op kinds compile may emit
+    lint: Callable[[Any, str, Optional[set]], List[str]]
+    lint_times: Callable[[Any], List[float]]   # dead-event check times
+    decode: Callable[[dict], dict]         # JSON kwargs coercion
+    validate: Callable[[Any], None]        # raises ValueError
+    strategy: Callable[[Any], Any]         # hypothesis strategies module
+    sample: Callable[[], Any]              # canonical example instance
+    is_curve: bool = False                 # multi-point: exempt from the
+    #                                        duplicate-anchor-time lint
+
+
+REGISTRY: Dict[str, EventType] = {}
+OPS: Dict[str, OpSpec] = {}
+_DESCRIBE: Dict[str, OpSpec] = {}          # record "event" -> op
+
+
+def register_op(op: OpSpec) -> OpSpec:
+    if op.kind in OPS:
+        raise ValueError(f"duplicate op kind {op.kind!r}")
+    OPS[op.kind] = op
+    _DESCRIBE[op.event] = op
+    return op
+
+
+def register_event(et: EventType) -> EventType:
+    if et.kind in REGISTRY:
+        raise ValueError(f"duplicate event kind {et.kind!r}")
+    unknown = set(et.ops) - set(OPS)
+    if unknown:
+        raise ValueError(f"event {et.kind!r} compiles to unregistered "
+                         f"ops {sorted(unknown)}")
+    REGISTRY[et.kind] = et
+    return et
+
+
+def _no_lint(ev, at, known_providers):
+    return []
+
+
+def _identity(d: dict) -> dict:
+    return d
+
+
+def _no_validate(ev):
+    return None
+
+
+def _anchor_times(ev) -> List[float]:
+    return [ev.at_h]
+
+
+def _point_times(ev) -> List[float]:
+    return [t for t, _f in ev.points]
+
+
+def _decode_points(d: dict) -> dict:
+    d = dict(d)
+    d["points"] = tuple((float(t), float(f)) for t, f in d["points"])
+    return d
+
+
+def _validate_points(ev):
+    for p in ev.points:
+        if len(p) != 2:
+            raise ValueError(f"{type(ev).__name__} points must be "
+                             f"(t_h, factor) pairs, got {p!r}")
+
+
+# -- shared hypothesis sub-strategies (each takes the ``st`` module) -------
+
+def _st_times(st):
+    return st.integers(0, 120).map(lambda q: q * 0.25)
+
+
+def _st_factors(st):
+    return st.sampled_from([0.5, 0.8, 1.25, 2.0])
+
+
+def _curve_points(ts, fs) -> Tuple[Tuple[float, float], ...]:
+    # strictly increasing breakpoint times, one factor each
+    ts = sorted(set(ts))
+    return tuple(zip(ts, fs[:len(ts)]))
+
+
+def _st_points(st, factors):
+    return st.builds(_curve_points,
+                     st.lists(_st_times(st), min_size=1, max_size=3),
+                     st.lists(factors, min_size=3, max_size=3))
+
+
+# -- the operations --------------------------------------------------------
+
+def _apply_scale(ops, arg) -> dict:
+    tgt = min(int(arg), int(ops.downscale_target)) \
+        if ops.budget_capped else int(arg)
+    ops.scale_to(tgt)
+    return {"event": "scale", "target": int(tgt)}
+
+
+def _apply_outage_on(ops, arg) -> dict:
+    ops.set_outage(True)
+    ops.deprovision_all()
+    return {"event": "outage_on"}
+
+
+def _apply_outage_off(ops, arg) -> dict:
+    ops.set_outage(False)
+    ops.scale_to(int(arg))
+    return {"event": "outage_off", "target": int(arg)}
+
+
+def _apply_price(ops, arg) -> dict:
+    ops.scale_prices(arg)
+    return {"event": "price", "factor": float(arg)}
+
+
+def _apply_curve(ops, arg) -> dict:
+    provider, f = arg
+    ops.set_price_factor(provider, f)
+    return {"event": "price_curve", "provider": provider,
+            "factor": float(f)}
+
+
+def _apply_capacity(ops, arg) -> dict:
+    ops.scale_capacity(arg)
+    return {"event": "capacity", "factor": float(arg)}
+
+
+def _apply_floor(ops, arg) -> dict:
+    fraction, tgt = arg
+    ops.arm_budget_floor(fraction, tgt)
+    return {"event": "floor", "fraction": float(fraction),
+            "target": int(tgt)}
+
+
+def _apply_workload(ops, arg) -> dict:
+    ops.set_workload_factor(arg)
+    return {"event": "workload", "factor": float(arg)}
+
+
+register_op(OpSpec(
+    kind="scale", event="scale",
+    requires=("scale_to", "budget_capped", "downscale_target"),
+    prov_requires=("scale_to",),
+    apply=_apply_scale,
+    describe=lambda r: f"scale_to({r['target']})"))
+register_op(OpSpec(
+    kind="outage_on", event="outage_on",
+    requires=("set_outage", "deprovision_all"),
+    prov_requires=("deprovision_all",),
+    apply=_apply_outage_on,
+    describe=lambda r: "CE OUTAGE -> deprovision all"))
+register_op(OpSpec(
+    kind="outage_off", event="outage_off",
+    requires=("set_outage", "scale_to"),
+    prov_requires=("scale_to",),
+    apply=_apply_outage_off,
+    describe=lambda r: f"CE recovered -> resume at {r['target']}"))
+register_op(OpSpec(
+    kind="price", event="price",
+    requires=("scale_prices",), prov_requires=("scale_prices",),
+    apply=_apply_price,
+    describe=lambda r: f"price shift x{r['factor']}"))
+register_op(OpSpec(
+    kind="curve", event="price_curve",
+    requires=("set_price_factor",), prov_requires=("set_price_factor",),
+    apply=_apply_curve,
+    describe=lambda r: (
+        f"price curve "
+        f"[{r['provider'] if r['provider'] is not None else 'all'}] "
+        f"-> x{r['factor']}")))
+register_op(OpSpec(
+    kind="capacity", event="capacity",
+    requires=("scale_capacity",), prov_requires=("scale_capacity",),
+    apply=_apply_capacity,
+    describe=lambda r: f"capacity shift x{r['factor']}"))
+register_op(OpSpec(
+    kind="floor", event="floor",
+    requires=("arm_budget_floor",),
+    apply=_apply_floor,
+    describe=lambda r: (f"budget floor armed at {r['fraction']:.0%} "
+                        f"-> {r['target']}")))
+register_op(OpSpec(
+    kind="workload", event="workload",
+    requires=("set_workload_factor",),
+    apply=_apply_workload,
+    describe=lambda r: f"workload curve -> x{r['factor']}"))
+
+
+# -- the event registrations -----------------------------------------------
+
+register_event(EventType(
+    kind=SetTarget.kind, cls=SetTarget,
+    compile=lambda ev: [(ev.at_h, "scale", ev.target)],
+    ops=("scale",),
+    lint=lambda ev, at, kp: (
+        [f"{at}: negative target {ev.target}"] if ev.target < 0 else []),
+    lint_times=_anchor_times, decode=_identity, validate=_no_validate,
+    strategy=lambda st: st.builds(SetTarget, at_h=_st_times(st),
+                                  target=st.integers(0, 600)),
+    sample=lambda: SetTarget(0.0, 100)))
+
+
+def _lint_outage(ev, at, known_providers):
+    out = []
+    if ev.duration_h <= 0:
+        out.append(f"{at}: outage duration must be positive")
+    if ev.resume_target < 0:
+        out.append(f"{at}: negative resume_target {ev.resume_target}")
+    return out
+
+
+register_event(EventType(
+    kind=CEOutage.kind, cls=CEOutage,
+    compile=lambda ev: [(ev.at_h, "outage_on", 0),
+                        (ev.at_h + ev.duration_h, "outage_off",
+                         ev.resume_target)],
+    ops=("outage_on", "outage_off"),
+    lint=_lint_outage,
+    lint_times=_anchor_times, decode=_identity, validate=_no_validate,
+    strategy=lambda st: st.builds(
+        CEOutage, at_h=_st_times(st),
+        duration_h=st.sampled_from([1.0, 2.0, 6.0]),
+        resume_target=st.integers(0, 400)),
+    sample=lambda: CEOutage(10.0, 2.0, 50)))
+
+register_event(EventType(
+    kind=PriceShift.kind, cls=PriceShift,
+    compile=lambda ev: [(ev.at_h, "price", ev.factor)],
+    ops=("price",),
+    lint=lambda ev, at, kp: (
+        [f"{at}: factor must be positive, got {ev.factor}"]
+        if ev.factor <= 0 else []),
+    lint_times=_anchor_times, decode=_identity, validate=_no_validate,
+    strategy=lambda st: st.builds(PriceShift, at_h=_st_times(st),
+                                  factor=_st_factors(st)),
+    sample=lambda: PriceShift(5.0, 1.5)))
+
+
+def _lint_floor(ev, at, known_providers):
+    out = []
+    if not 0.0 <= ev.fraction <= 1.0:
+        out.append(f"{at}: fraction {ev.fraction} outside [0, 1]")
+    if ev.downscale_target < 0:
+        out.append(f"{at}: negative downscale_target "
+                   f"{ev.downscale_target}")
+    return out
+
+
+register_event(EventType(
+    kind=BudgetFloor.kind, cls=BudgetFloor,
+    compile=lambda ev: [(ev.at_h, "floor",
+                         (ev.fraction, ev.downscale_target))],
+    ops=("floor",),
+    lint=_lint_floor,
+    lint_times=_anchor_times, decode=_identity, validate=_no_validate,
+    strategy=lambda st: st.builds(
+        BudgetFloor, at_h=_st_times(st),
+        # ledger-threshold values only: the cap decision is then
+        # charge-order independent
+        fraction=st.sampled_from([0.05, 0.1, 0.2, 0.25, 0.5]),
+        downscale_target=st.integers(0, 300)),
+    sample=lambda: BudgetFloor(3.0, 0.25, 40)))
+
+register_event(EventType(
+    kind=CapacityShift.kind, cls=CapacityShift,
+    compile=lambda ev: [(ev.at_h, "capacity", ev.factor)],
+    ops=("capacity",),
+    lint=lambda ev, at, kp: (
+        [f"{at}: factor must be positive, got {ev.factor}"]
+        if ev.factor <= 0 else []),
+    lint_times=_anchor_times, decode=_identity, validate=_no_validate,
+    strategy=lambda st: st.builds(
+        CapacityShift, at_h=_st_times(st),
+        factor=st.sampled_from([0.25, 0.5, 1.5, 2.0])),
+    sample=lambda: CapacityShift(7.0, 0.5)))
+
+
+def _lint_price_curve(ev, at, known_providers):
+    out = []
+    if not ev.points:
+        out.append(f"{at}: empty curve (no points)")
+    pt = None
+    for t, f in ev.points:
+        if f <= 0:
+            out.append(f"{at}: non-positive price factor {f} at t={t}")
+        if pt is not None and t <= pt:
+            out.append(f"{at}: curve points not strictly "
+                       f"time-sorted ({t} after {pt})")
+        pt = t
+    if ev.provider is not None and known_providers is not None \
+            and ev.provider not in known_providers:
+        out.append(f"{at}: unknown provider {ev.provider!r} "
+                   f"(catalog has {sorted(known_providers)})")
+    return out
+
+
+register_event(EventType(
+    kind=PriceCurve.kind, cls=PriceCurve,
+    # one op per breakpoint, at its own time (the solo controller
+    # installs each point as its own one-shot)
+    compile=lambda ev: [(t, "curve", (ev.provider, f))
+                        for t, f in ev.points],
+    ops=("curve",),
+    lint=_lint_price_curve,
+    lint_times=_point_times, decode=_decode_points,
+    validate=_validate_points,
+    strategy=lambda st: st.one_of(
+        st.builds(PriceCurve, points=_st_points(st, _st_factors(st))),
+        st.builds(PriceCurve, points=_st_points(st, _st_factors(st)),
+                  provider=st.sampled_from(
+                      ["azure", "gcp", "no-such-provider"]))),
+    sample=lambda: PriceCurve(((2.0, 1.1), (4.0, 0.9))),
+    is_curve=True))
+
+
+def _lint_workload_curve(ev, at, known_providers):
+    out = []
+    if not ev.points:
+        out.append(f"{at}: empty curve (no points)")
+    pt = None
+    for t, f in ev.points:
+        if f < 0:
+            out.append(f"{at}: negative request-rate factor {f} at t={t}")
+        if pt is not None and t <= pt:
+            out.append(f"{at}: curve points not strictly "
+                       f"time-sorted ({t} after {pt})")
+        pt = t
+    return out
+
+
+register_event(EventType(
+    kind=WorkloadCurve.kind, cls=WorkloadCurve,
+    compile=lambda ev: [(t, "workload", f) for t, f in ev.points],
+    ops=("workload",),
+    lint=_lint_workload_curve,
+    lint_times=_point_times, decode=_decode_points,
+    validate=_validate_points,
+    strategy=lambda st: st.builds(
+        WorkloadCurve,
+        points=_st_points(st, st.sampled_from([0.0, 0.25, 0.5, 1.0,
+                                               1.5]))),
+    sample=lambda: WorkloadCurve(((2.0, 0.5), (4.0, 1.0))),
+    is_curve=True))
+
+
+Event = Union[SetTarget, CEOutage, PriceShift, BudgetFloor, CapacityShift,
+              PriceCurve, WorkloadCurve]
+EVENT_KINDS: Dict[str, type] = {k: et.cls for k, et in REGISTRY.items()}
+
+
+# -- registry-derived operations (what the engines/CLI/tests call) ---------
+
+def compile_event(ev) -> List[tuple]:
+    """One event's ``(t, op_kind, arg)`` expansion, in declaration
+    order (CEOutage becomes on/off at its declaration point)."""
+    et = REGISTRY.get(getattr(ev, "kind", None))
+    if et is None or type(ev) is not et.cls:
+        raise ValueError(f"unknown timeline event {ev!r}")
+    return et.compile(ev)
+
+
+def compile_timeline(timeline: Sequence) -> List[tuple]:
+    """Flatten an event timeline into stably time-sorted
+    ``(t, op_kind, arg)`` tuples — the same expansion order and
+    tie-breaking (stable by timeline position) as the solo controller's
+    one-shot installation."""
+    evs: List[tuple] = []
+    for ev in timeline:
+        evs.extend(compile_event(ev))
+    evs.sort(key=lambda e: e[0])
+    return evs
+
+
+def apply_op(ops: EngineOps, op_kind: str, arg, now: float) -> dict:
+    """Execute one compiled op against an engine adapter; returns the
+    provenance record (bit-identical across engines)."""
+    body = OPS[op_kind].apply(ops, arg)
+    return {"t": float(now), **body}
+
+
+def apply_budget_cap(ops: EngineOps, now: float) -> dict:
+    """The budget-floor tripwire's deferred cap (scheduled "at now" by
+    the ledger alert, executed at the next tick's event phase): cap the
+    fleet at the armed downscale target.  Shared so the solo controller
+    and every batched lane record the identical provenance."""
+    tgt = int(ops.downscale_target)
+    ops.scale_to(tgt)
+    return {"t": float(now), "event": "budget_floor", "target": tgt}
+
+
+def describe_record(record: dict) -> str:
+    """The solo controller's human log-line body for one provenance
+    record (the ``t=...h`` prefix is the controller's)."""
+    return _DESCRIBE[record["event"]].describe(record)
+
+
+def event_to_dict(ev) -> dict:
+    """JSON form: ``{"kind": ..., **fields}`` (round-trips via
+    :func:`event_from_dict`)."""
+    return {"kind": ev.kind, **asdict(ev)}
+
+
+def event_from_dict(d: Mapping):
+    d = dict(d)
+    kind = d.pop("kind")
+    et = REGISTRY.get(kind)
+    if et is None:
+        raise ValueError(f"unknown timeline event kind {kind!r}")
+    return et.cls(**et.decode(d))
+
+
+def validate_event(ev):
+    """Raise ValueError on unregistered or malformed events (the
+    fail-fast complement of :func:`lint_timeline`)."""
+    et = REGISTRY.get(getattr(ev, "kind", None))
+    if et is None or type(ev) is not et.cls:
+        raise ValueError(f"unknown timeline event {ev!r}")
+    et.validate(ev)
+
+
+def lint_timeline(timeline: Sequence, duration_h: float,
+                  known_providers: Optional[set]) -> List[str]:
+    """Registry-derived static checks over a spec's event timeline:
+    ordering/dead-time/duplicate-time checks plus every event kind's
+    own lint rules.  Returns human-readable findings (empty == clean);
+    never raises."""
+    out: List[str] = []
+    prev_t = None
+    seen_times: Dict[float, int] = {}
+    for i, ev in enumerate(timeline):
+        at = f"timeline[{i}] {type(ev).__name__}"
+        et = REGISTRY.get(getattr(ev, "kind", None))
+        if et is None or type(ev) is not et.cls:
+            out.append(f"{at}: unknown timeline event")
+            continue
+        t0 = ev.at_h
+        if t0 < 0:
+            out.append(f"{at}: negative event time {t0}")
+        if prev_t is not None and t0 < prev_t:
+            out.append(f"{at}: event times not sorted "
+                       f"({t0} after {prev_t})")
+        prev_t = max(t0, prev_t) if prev_t is not None else t0
+        # dead events never execute: anchor for plain events, every
+        # breakpoint for curves
+        for t in et.lint_times(ev):
+            if t >= duration_h:
+                out.append(f"{at}: fires at t={t} h, at/after the "
+                           f"campaign end ({duration_h} h) — never "
+                           "executes")
+        if not et.is_curve:
+            seen_times[t0] = seen_times.get(t0, 0) + 1
+        out.extend(et.lint(ev, at, known_providers))
+    for t, n in seen_times.items():
+        if n > 1:
+            out.append(f"timeline: {n} events share t={t} h — they "
+                       "execute in declaration order; split the times "
+                       "if that overlap is unintended")
+    return out
+
+
+def event_strategies(st) -> List:
+    """One hypothesis strategy per registered event kind (pass the
+    ``hypothesis.strategies`` module) — the differential harness sweeps
+    newly registered events with no hand edits."""
+    return [et.strategy(st) for et in REGISTRY.values()]
+
+
+def registry_findings(engines: Mapping[str, type],
+                      provisioners: Optional[Mapping[str, type]] = None
+                      ) -> List[str]:
+    """The drift guard: every registered event must compile to handled
+    ops, and every op's required members must exist on every engine
+    adapter (and, where the op touches the fleet, on every provisioner
+    facade).  Returns findings (empty == every event is registered for
+    all engines) — surfaced by ``python -m repro.campaigns lint
+    --registry`` and pinned by tests/test_timeline_registry.py."""
+    out: List[str] = []
+    for kind, et in sorted(REGISTRY.items()):
+        for op_kind in et.ops:
+            op = OPS.get(op_kind)
+            if op is None:
+                out.append(f"event {kind!r}: compiled op {op_kind!r} "
+                           "has no registered handler")
+                continue
+            for engine, cls in sorted(engines.items()):
+                missing = sorted(a for a in op.requires
+                                 if not hasattr(cls, a))
+                if missing:
+                    out.append(
+                        f"event {kind!r}: op {op_kind!r} needs EngineOps "
+                        f"member(s) {missing} missing on the {engine} "
+                        f"adapter ({cls.__module__}.{cls.__name__})")
+            for prov, cls in sorted((provisioners or {}).items()):
+                missing = sorted(a for a in op.prov_requires
+                                 if not hasattr(cls, a))
+                if missing:
+                    out.append(
+                        f"event {kind!r}: op {op_kind!r} needs "
+                        f"provisioner member(s) {missing} missing on the "
+                        f"{prov} facade "
+                        f"({cls.__module__}.{cls.__name__})")
+    return out

@@ -114,43 +114,14 @@ except ImportError:                                  # pragma: no cover
     HAVE_HYPOTHESIS = False
 
 if HAVE_HYPOTHESIS:
-    from repro.core.spec import (BudgetFloor, CampaignSpec, CapacityShift,
-                                 CEOutage, GpuSlicing, PriceCurve,
-                                 PriceShift, SetTarget)
-
-    _times = st.integers(0, 120).map(lambda q: q * 0.25)
-    _factors = st.sampled_from([0.5, 0.8, 1.25, 2.0])
-
-    def _curve(ts, fs):
-        # strictly increasing breakpoint times, one factor each
-        ts = sorted(set(ts))
-        return PriceCurve(tuple(zip(ts, fs[:len(ts)])))
-
-    _curves = st.builds(
-        _curve,
-        st.lists(_times, min_size=1, max_size=3),
-        st.lists(_factors, min_size=3, max_size=3))
-    _provider_curves = st.builds(
-        lambda c, p: PriceCurve(c.points, provider=p),
-        _curves, st.sampled_from(["azure", "gcp", "no-such-provider"]))
+    from repro.core.spec import CampaignSpec, GpuSlicing
+    from repro.core.timeline import event_strategies
 
     def event_strategy():
-        """One random timeline event, every kind included."""
-        return st.one_of(
-            st.builds(SetTarget, at_h=_times, target=st.integers(0, 600)),
-            st.builds(CEOutage, at_h=_times,
-                      duration_h=st.sampled_from([1.0, 2.0, 6.0]),
-                      resume_target=st.integers(0, 400)),
-            st.builds(PriceShift, at_h=_times, factor=_factors),
-            st.builds(CapacityShift, at_h=_times,
-                      factor=st.sampled_from([0.25, 0.5, 1.5, 2.0])),
-            st.builds(BudgetFloor, at_h=_times,
-                      # ledger-threshold values only: the cap decision is
-                      # then charge-order independent
-                      fraction=st.sampled_from([0.05, 0.1, 0.2, 0.25,
-                                                0.5]),
-                      downscale_target=st.integers(0, 300)),
-            _curves, _provider_curves)
+        """One random timeline event — every registered kind included,
+        derived from the registry so newly registered events are swept
+        here with zero hand edits."""
+        return st.one_of(*event_strategies(st))
 
     def spec_strategy():
         """A random small CampaignSpec over every spec surface, the new

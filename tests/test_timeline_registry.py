@@ -1,0 +1,247 @@
+"""The one-registry refactor (core/timeline.py) + WorkloadCurve.
+
+Covers the PR-6 tentpole end to end:
+
+  * the drift guard: every registered event has serialization, lint,
+    compile and ``apply`` coverage, and every compiled op's required
+    ``EngineOps`` members exist on all engine adapters and provisioner
+    facades (what ``python -m repro.campaigns lint --registry`` checks),
+  * hypothesis strategies auto-derived from the registry, so the
+    differential harness in tests/engine_equivalence.py sweeps newly
+    registered events — WorkloadCurve included — without hand edits,
+  * ``WorkloadCurve`` semantics: piecewise-constant request-rate factors
+    scale the CE queue top-up level bit-identically in all three
+    engines; starving factors cut busy hours / finished jobs while the
+    fleet (accel hours) keeps running,
+  * the committed golden workload campaign
+    (tests/data/workload_curve.spec.json) pinned bit-for-bit at seed
+    2021, with the batched lane byte-identical to the solo run.
+"""
+import json
+import os
+
+import pytest
+
+from repro.campaigns import _registry_findings
+from repro.core import timeline
+from repro.core.api import run
+from repro.core.scenarios import (WORKLOAD_CURVES, workload_burst,
+                                  workload_curve_scenarios)
+from repro.core.spec import (CampaignSpec, SetTarget, WorkloadCurve,
+                             lint_spec, paper_spec)
+from tests.engine_equivalence import (assert_engines_equivalent,
+                                      assert_traces_equivalent)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "workload_curve.spec.json")
+
+# seed-2021 workload-burst totals (pinned; must never drift)
+WORKLOAD_BURST_2021 = {"cost": 65082.93, "accel_days": 15631.1,
+                       "eflop_hours_fp32": 2.848, "preemptions": 3976,
+                       "jobs_finished": 92601}
+
+
+# -- registry completeness (the drift guard) -------------------------------
+
+def test_registry_covers_every_event_kind():
+    assert set(timeline.EVENT_KINDS) == set(timeline.REGISTRY)
+    for kind, et in timeline.REGISTRY.items():
+        assert et.kind == kind
+        assert et.cls.kind == kind
+        assert timeline.EVENT_KINDS[kind] is et.cls
+
+
+def test_every_event_round_trips_json():
+    """Serialization coverage: each kind's canonical sample survives
+    dict -> JSON text -> dict -> event unchanged, and validates."""
+    for kind, et in timeline.REGISTRY.items():
+        sample = et.sample()
+        timeline.validate_event(sample)
+        d = timeline.event_to_dict(sample)
+        assert d["kind"] == kind
+        back = timeline.event_from_dict(json.loads(json.dumps(d)))
+        assert back == sample, kind
+
+
+def test_every_event_compiles_to_registered_ops():
+    """Compile + apply coverage: each sample expands to (t, op, arg)
+    tuples whose op kinds are declared by the event and handled by a
+    registered OpSpec with a describe renderer."""
+    for kind, et in timeline.REGISTRY.items():
+        compiled = timeline.compile_event(et.sample())
+        assert compiled, kind
+        for t, op_kind, _arg in compiled:
+            assert isinstance(t, float) or isinstance(t, int), kind
+            assert op_kind in et.ops, kind
+        for op_kind in et.ops:
+            op = timeline.OPS[op_kind]
+            assert op.event in timeline._DESCRIBE
+
+
+def test_every_event_has_lint_coverage():
+    """Lint coverage: each kind exposes lint + dead-event check times
+    (the generic timeline lint consumes both)."""
+    for kind, et in timeline.REGISTRY.items():
+        sample = et.sample()
+        assert et.lint(sample, "timeline[0]", None) == [], kind
+        times = et.lint_times(sample)
+        assert times and all(isinstance(t, float) for t in times), kind
+
+
+def test_registry_findings_clean_on_the_real_engines():
+    """Every registered event is implemented by the solo controller,
+    the batched lane adapter, and both provisioner facades — the exact
+    check ``python -m repro.campaigns lint --registry`` runs in CI."""
+    assert _registry_findings() == []
+
+
+def test_registry_findings_flag_an_incomplete_engine():
+    class HalfEngine:
+        budget_capped = False
+        downscale_target = 0
+
+        def scale_to(self, n):
+            pass
+
+    findings = timeline.registry_findings({"half": HalfEngine})
+    assert findings
+    assert any("set_workload_factor" in f for f in findings)
+    assert any("HalfEngine" in f for f in findings)
+
+
+def test_duplicate_registration_rejected():
+    et = timeline.REGISTRY[timeline.SetTarget.kind]
+    with pytest.raises(ValueError, match="duplicate event kind"):
+        timeline.register_event(et)
+    op = timeline.OPS["scale"]
+    with pytest.raises(ValueError, match="duplicate op kind"):
+        timeline.register_op(op)
+
+
+def test_unknown_event_kind_raises():
+    with pytest.raises(ValueError, match="unknown timeline event kind"):
+        timeline.event_from_dict({"kind": "warp-drive", "at_h": 0.0})
+    with pytest.raises(ValueError, match="unknown timeline event"):
+        timeline.compile_event(object())
+
+
+def test_event_strategies_cover_the_registry():
+    st = pytest.importorskip("hypothesis.strategies")
+    import hypothesis
+
+    strategies = timeline.event_strategies(st)
+    assert len(strategies) == len(timeline.REGISTRY)
+    # the differential harness consumes them: its one-event strategy
+    # generates every registered kind, WorkloadCurve included
+    from tests.engine_equivalence import event_strategy
+    kinds = set()
+
+    @hypothesis.settings(max_examples=200, database=None)
+    @hypothesis.given(event_strategy())
+    def collect(ev):
+        kinds.add(type(ev).kind)
+
+    collect()
+    assert kinds == set(timeline.REGISTRY)
+
+
+# -- WorkloadCurve semantics -----------------------------------------------
+
+def _short(name, *events, duration_h=48.0):
+    # min_queue=500: shallow enough that a starving factor actually
+    # drains the pre-existing backlog inside the campaign window
+    return CampaignSpec(name=name, duration_h=duration_h, budget=1e9,
+                        overhead_per_day=0.0, min_queue=500,
+                        timeline=(SetTarget(0.0, 400), *events))
+
+
+def test_workload_curve_starves_the_queue():
+    """A near-zero request-rate factor idles pilots: busy hours and
+    finished jobs drop while the fleet itself keeps running (accel
+    hours and instance cost are untouched)."""
+    base = run(_short("wl-base"), seeds=3)
+    starved = run(_short("wl-starved",
+                         WorkloadCurve(((12.0, 0.001),))), seeds=3)
+    assert starved.accel_hours == base.accel_hours
+    assert starved["cost"] == base["cost"]
+    assert starved.busy_hours < 0.6 * base.busy_hours
+    assert starved["jobs_finished"] < base["jobs_finished"]
+
+
+def test_workload_factor_one_is_a_noop():
+    base = run(_short("wl-base"), seeds=5)
+    unity = run(_short("wl-unity", WorkloadCurve(((6.0, 1.0),))), seeds=5)
+    assert unity.to_dict() == base.to_dict()
+
+
+def test_workload_curve_bit_identical_across_engines():
+    spec = _short("wl-eq", WorkloadCurve(((6.0, 0.02), (18.0, 1.0),
+                                          (30.0, 0.25))),
+                  duration_h=36.0)
+    assert_engines_equivalent(spec, 7)
+    assert_traces_equivalent(spec, 7, engines=("batched", "object"))
+
+
+def test_workload_events_fire_into_the_trace():
+    spec = _short("wl-trace", WorkloadCurve(((6.0, 0.5),)),
+                  duration_h=12.0)
+    res = run(spec, seeds=2, collect="trace")
+    fired = [e for e in res.trace.events
+             if e.kind == "timeline" and e.event == "workload"]
+    assert [(e.t, e.payload["factor"]) for e in fired] == [(6.0, 0.5)]
+
+
+def test_lint_flags_bad_workload_curves():
+    spec = paper_spec(timeline=(SetTarget(0.0, 100),
+                                WorkloadCurve(((10.0, -0.5),
+                                               (900.0, 1.0)))))
+    findings = lint_spec(spec)
+    assert any("negative" in f and "-0.5" in f for f in findings)
+    assert any("t=900.0" in f and "never" in f for f in findings)
+    assert any("empty curve" in f for f in lint_spec(
+        paper_spec(timeline=(WorkloadCurve(()),))))
+
+
+# -- scenario library ------------------------------------------------------
+
+def test_workload_scenarios_are_wellformed():
+    specs = workload_curve_scenarios() + [workload_burst()]
+    assert len({s.name for s in specs}) == len(specs)
+    for s in specs:
+        assert lint_spec(s) == [], s.name
+        s.validate()
+    assert set(WORKLOAD_CURVES) == {"diurnal", "flash-crowd"}
+
+
+# -- the committed golden campaign -----------------------------------------
+
+def test_golden_workload_spec_file_is_current():
+    with open(GOLDEN) as f:
+        spec = CampaignSpec.from_json(f.read())
+    assert spec == workload_burst()
+    assert lint_spec(spec) == []
+
+
+@pytest.fixture(scope="module")
+def golden_result():
+    with open(GOLDEN) as f:
+        spec = CampaignSpec.from_json(f.read())
+    return run(spec, seeds=2021)
+
+
+def test_golden_workload_reproduces_pinned_totals(golden_result):
+    res = golden_result
+    for k, v in WORKLOAD_BURST_2021.items():
+        assert res[k] == v, k
+    # the curve actually fired: three factor changes in the provenance
+    wl = [e for e in res.events_fired if e["event"] == "workload"]
+    assert [(e["t"], e["factor"]) for e in wl] \
+        == [(0.0, 0.05), (120.0, 1.0), (132.0, 0.05)]
+
+
+def test_golden_workload_batched_lane_is_identical(golden_result):
+    with open(GOLDEN) as f:
+        spec = CampaignSpec.from_json(f.read())
+    batched = run(spec, seeds=2021, engine="batched")
+    assert batched.to_dict() == golden_result.to_dict()
+    assert list(batched.events_fired) == list(golden_result.events_fired)
