@@ -28,7 +28,7 @@ import json
 import sys
 from typing import List, Optional
 
-from repro.core.api import run as api_run
+from repro.core.api import ENGINES, run as api_run
 from repro.core.spec import (CampaignResult, CampaignSpec, lint_spec,
                              paper_spec)
 
@@ -98,14 +98,19 @@ def cmd_show(args) -> int:
 
 def _registry_findings() -> List[str]:
     """Registry completeness over the real engine classes: every
-    registered event must compile to ops every engine implements."""
+    registered event must compile to ops every engine implements —
+    including "jax", whose :class:`~repro.core.sweep_jax.JaxLaneOps`
+    consumes the ops through the compiled-timeline segment splitter
+    (per-segment parameter planes) rather than at tick time."""
     from repro.core.fleet import ArrayProvisionerView
     from repro.core.provisioner import MultiCloudProvisioner
     from repro.core.spec import TimelineController
     from repro.core.sweep import _LaneOps
+    from repro.core.sweep_jax import JaxLaneOps
     from repro.core.timeline import registry_findings
     return registry_findings(
-        {"solo": TimelineController, "batched": _LaneOps},
+        {"solo": TimelineController, "batched": _LaneOps,
+         "jax": JaxLaneOps},
         {"object": MultiCloudProvisioner, "array": ArrayProvisionerView})
 
 
@@ -188,8 +193,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     p_run.add_argument("--seeds", default="2021",
                        help="comma-separated seeds (default: 2021)")
     p_run.add_argument("--engine", default="auto",
-                       choices=["auto", "array", "object", "batched",
-                                "sequential"])
+                       choices=sorted(ENGINES))
     p_run.add_argument("--json", default=None,
                        help="write results JSON here")
     p_run.add_argument("--csv", default=None,
@@ -215,8 +219,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     p_trace.add_argument("spec", help="CampaignSpec JSON file")
     p_trace.add_argument("--seed", default=2021, type=int,
                          help="campaign seed (default: 2021)")
+    # trace is a bit-identity surface: the statistical "jax" engine (and
+    # the redundant "sequential" alias) are deliberately absent
     p_trace.add_argument("--engine", default="auto",
-                         choices=["auto", "array", "object", "batched"])
+                         choices=sorted(ENGINES - {"jax", "sequential"}))
     p_trace.add_argument("--out", default=None,
                          help="write the JSONL here (default: stdout)")
     p_trace.set_defaults(fn=cmd_trace)

@@ -16,10 +16,21 @@ CampaignSpec` — solo or sweep — and returns typed results:
   * ``"array"`` / ``"object"``: force solo engines (sweeps loop them
     sequentially — the reference semantics),
   * ``"batched"``: force the lock-step sweep engine,
-  * ``"sequential"``: alias for a sequential solo-array loop.
+  * ``"sequential"``: alias for a sequential solo-array loop,
+  * ``"jax"``: the jit-compiled sweep engine (core/sweep_jax.py) —
+    statistically equivalent, not bit-identical (see below).
 
 Every batched lane is bit-reproducible against its solo run at the same
 (spec, seed) — pinned by tests/test_sweep.py and tests/test_spec.py.
+``engine="jax"`` sits in a separate **statistical-equivalence tier**:
+it replaces per-instance PCG64 draws with per-group threefry Poisson
+totals, so results match the bit-identical engines in distribution
+(mean/p5/p95 bands on cost, GPU-days and jobs — pinned by
+tests/test_sweep_jax.py via
+``engine_equivalence.assert_statistically_equivalent``), never
+byte-for-byte.  The allowed-engine sets below (:data:`SOLO_ENGINES`,
+:data:`SWEEP_ENGINES`, :data:`ENGINES`) are the single source of truth
+for ``run``/``sweep`` validation and the ``campaigns`` CLI choices.
 The deprecated ``Scenario`` shim is accepted anywhere a spec is.
 """
 from __future__ import annotations
@@ -33,9 +44,27 @@ from repro.core.spec import (CampaignResult, CampaignSpec, check_collect,
                              paper_spec, run_solo)
 from repro.core.sweep import SweepResult, run_batched_detailed
 
-__all__ = ["run", "sweep", "paper_spec", "CampaignResult", "SweepResult"]
+__all__ = ["run", "sweep", "paper_spec", "CampaignResult", "SweepResult",
+           "SOLO_ENGINES", "SWEEP_ENGINES", "ENGINES"]
 
-_SOLO_ENGINES = {"array", "object"}
+#: the allowed-engine sets — the one place the names live.  ``run``,
+#: ``sweep`` and the ``campaigns`` CLI ``--engine`` choices all read
+#: these; adding an engine here is the whole registration step.
+SOLO_ENGINES = frozenset({"array", "object"})
+SWEEP_ENGINES = SOLO_ENGINES | {"batched", "sequential", "jax"}
+ENGINES = SWEEP_ENGINES | {"auto"}
+
+_SOLO_ENGINES = SOLO_ENGINES          # backwards-compat alias
+
+
+def _check_engine(engine: str, allowed: frozenset, what: str) -> str:
+    """The shared engine validation (both ``run`` layers used to raise
+    their own, differently-worded errors)."""
+    if engine not in allowed:
+        raise ValueError(
+            f"unknown {what} engine {engine!r}; choose one of "
+            f"{', '.join(sorted(allowed))}")
+    return engine
 
 
 def _as_seed(s) -> int:
@@ -58,11 +87,13 @@ def sweep(specs: Sequence[CampaignSpec], seeds: Sequence[int],
           engine: str = "batched", collect: str = "summary") -> SweepResult:
     """Run every (spec x seed) lane and always return a SweepResult
     (``run()`` delegates here for multi-lane inputs).  ``engine``:
-    "batched" (lock-step array program) or "sequential" / "array" /
+    "batched" (lock-step array program), "jax" (compiled scan —
+    statistical tier, no trace surface) or "sequential" / "array" /
     "object" (solo reference loop).  ``collect="trace"`` additionally
     records one typed ``CampaignTrace`` per lane (``SweepResult.traces``
     / ``trace_for``)."""
     check_collect(collect)
+    _check_engine(engine, SWEEP_ENGINES, "sweep")
     specs = list(specs)
     if not specs:
         raise ValueError("sweep() needs at least one spec")
@@ -72,15 +103,21 @@ def sweep(specs: Sequence[CampaignSpec], seeds: Sequence[int],
     lanes = [(spec.to_spec(), seed) for spec in specs for seed in seeds]
     if engine == "batched":
         detailed = run_batched_detailed(lanes, collect=collect)
-    elif engine in _SOLO_ENGINES | {"sequential"}:
-        eng = engine if engine in _SOLO_ENGINES else None
+    elif engine == "jax":
+        if collect == "trace":
+            raise ValueError(
+                'engine="jax" is statistical — it has no per-instance '
+                'event stream to trace; use collect="summary" or a '
+                "bit-identical engine")
+        from repro.core.sweep_jax import run_jax_detailed
+        detailed = run_jax_detailed(lanes)
+    else:
+        eng = engine if engine in SOLO_ENGINES else None
         detailed = []
         for spec, seed in lanes:
             res, ctl = run_solo(spec, seed, engine=eng, collect=collect)
             detailed.append((res.to_dict(), list(ctl.events_fired),
                              res.trace))
-    else:
-        raise ValueError(f"unknown sweep engine {engine!r}")
     rows = [{"scenario": spec.name, "seed": seed, **res,
              "events_fired": events}
             for (spec, seed), (res, events, _tr) in zip(lanes, detailed)]
@@ -129,14 +166,25 @@ def run(spec_or_specs: Union[CampaignSpec, Sequence[CampaignSpec]],
     specs, single_spec = _coerce_specs(spec_or_specs)
     seed_list, single_seed = _coerce_seeds(seeds)
     solo = single_spec and len(specs) == 1 and len(seed_list) == 1
-    if engine not in {"auto", "batched", "sequential"} | _SOLO_ENGINES:
-        raise ValueError(f"unknown engine {engine!r}")
+    _check_engine(engine, ENGINES, "run")
 
     if solo and engine == "batched":     # forced single-lane batched run
         (res, events, trace), = run_batched_detailed(
             [(specs[0], seed_list[0])], collect=collect)
         return CampaignResult.from_results(
             res, spec=specs[0], seed=seed_list[0], engine="batched",
+            events_fired=tuple(events), trace=trace)
+    if solo and engine == "jax":         # forced single-lane compiled run
+        if collect == "trace":
+            raise ValueError(
+                'engine="jax" is statistical — it has no per-instance '
+                'event stream to trace; use collect="summary" or a '
+                "bit-identical engine")
+        from repro.core.sweep_jax import run_jax_detailed
+        (res, events, trace), = run_jax_detailed(
+            [(specs[0], seed_list[0])])
+        return CampaignResult.from_results(
+            res, spec=specs[0], seed=seed_list[0], engine="jax",
             events_fired=tuple(events), trace=trace)
     if solo:
         eng = None if engine in ("auto", "sequential") else engine

@@ -271,6 +271,24 @@ def curve_sliced_burst(slices: int = 4) -> CampaignSpec:
                        provider=f"azure-t4/{slices}")))
 
 
+def planning_grid(price_scales: Sequence[float] = (0.8, 0.9, 1.0,
+                                                   1.1, 1.25),
+                  floors: Sequence[float] = (0.1, 0.2, 0.3, 0.4),
+                  budgets: Sequence[float] = (40000.0, 58000.0, 80000.0)
+                  ) -> List[CampaignSpec]:
+    """A dense pre-burst planning grid: every (price drift x budget
+    floor x budget) paper variant — 60 specs by default, ~1024 lanes at
+    17 seeds.  Every member keeps the paper catalog and capacity, so the
+    whole grid shares one structural batch key and ``engine="jax"``
+    compiles it into a *single* scan (the batched numpy engine chunks it
+    identically; it just ticks each lane from Python)."""
+    return [paper_spec(
+                name=f"grid-p{int(p * 100):03d}-f{int(f * 100):02d}"
+                     f"-b{int(b / 1000)}k",
+                price_scale=p, budget_floor_fraction=f, budget=b)
+            for p in price_scales for f in floors for b in budgets]
+
+
 def default_suite() -> List[CampaignSpec]:
     """A representative pre-burst planning suite: the paper baseline plus
     one of each what-if family."""

@@ -1,0 +1,693 @@
+"""JAX-compiled Monte-Carlo sweep engine: B campaigns as one lax.scan.
+
+``engine="jax"`` is the fourth engine behind :func:`repro.core.api.run`.
+Where the numpy batched engine (core/sweep.py) mutates dynamic
+per-instance row sets from Python each tick, this engine compiles the
+whole campaign to one jitted ``lax.scan`` over ticks with lane-parallel
+*count-plane* state.  Instances within a (lane, group, progress-step)
+cell are exchangeable — same hazard, same hourly rate, same matcher
+treatment — so the state is how many instances occupy each cell, not
+which: ``idle``/``pilot-dead`` counts per (lane, group), ``busy`` job
+counts per (lane, group, dt-progress-step), the CE queue as per-lane
+checkpoint-level counts, and budgets/counters as lane columns.  That
+makes every per-tick phase a fixed-shape integer reduction, which is
+what lets one compiled scan replace ~1e6 Python-driven row updates and
+makes 1024-lane planning grids routine.  Per-lane randomness is
+``threefry`` (fold the tick index into each lane's key), not PCG64.
+
+The hot per-tick ops — preemption fan-out, the queue->pilot matcher,
+pilot progress sync, the billing/ledger reduction — are the Pallas
+kernels in kernels/campaign_sweep.py (``use_pallas=True``, default on
+TPU); on CPU the engine runs their jnp oracles from kernels/ref.py
+directly (the kernels' interpret mode is pinned equal in
+tests/test_kernels.py).
+
+**The compiled-timeline segment splitter.**  ``lax.scan`` cannot branch
+on Python timeline events mid-trace, so the spec timeline is compiled
+(via the core/timeline.py registry) into *segments*: the union of all
+lanes' event fire ticks splits the campaign into spans of constant
+control parameters, and every per-segment parameter plane (rates, caps,
+outage, floor arming, workload level, scale targets) is precomputed by
+driving a :class:`JaxLaneOps` adapter — a full ``EngineOps``
+implementation over planner state — through the registry's own
+``apply_op`` bodies.  The scan then just gathers ``plane[seg_of_tick]``.
+The one data-dependent event, the budget-floor cap, is handled in-scan:
+each lane carries ``capped`` / ``cap_pending`` flags and its per-group
+target vector, and scale targets come in *uncapped and capped* plane
+pairs (the capped pair built with ``budget_capped=True``, so the
+registry's own ``min(target, downscale)`` logic — and the
+``outage_off`` exemption from it — is reused, not re-implemented).
+
+**Equivalence tier: statistical, not bit-identical.**  The numpy
+batched engine is pinned bit-identical to the solo engines; this engine
+intentionally is not — per-group Poisson preemption totals with a
+proportional systematic split replace per-instance PCG64 Bernoulli
+draws, proportional allocation replaces row-age ordering for event
+kills and pilot-order matching, and simultaneous same-tick scale chains
+apply their net target.  The contract is
+``tests/engine_equivalence.assert_statistically_equivalent``:
+mean/p5/p95 bands on cost, GPU-days and jobs against the batched
+engine over ``scenarios.default_suite`` (see README "Simulation
+engines").  Event provenance is *not* statistical: ``events_fired`` is
+reconstructed post-scan through the same registry records and matches
+the other engines' schema exactly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import timeline as timeline_registry
+from repro.core.spec import CampaignSpec
+from repro.core.sweep import _Lane, _THRESHOLDS, _prepare
+
+__all__ = ["JaxLaneOps", "JaxSweepEngine", "run_jax_detailed", "run_jax"]
+
+
+class JaxLaneOps:
+    """One lane's :class:`~repro.core.timeline.EngineOps` adapter over
+    *planner* state (prices, caps, targets, floor arming) instead of a
+    live fleet.  The segment splitter drives it through the registry's
+    shared ``apply`` bodies to precompute per-segment parameter planes —
+    once with ``budget_capped=False`` and once ``=True`` so the scan can
+    select the right scale target after a lane's floor fires — and the
+    post-scan provenance pass drives it again to reconstruct
+    ``events_fired`` records identical to the other engines'."""
+
+    budget_capped = False
+    downscale_target = 0
+
+    def __init__(self, spec: CampaignSpec, pairs,
+                 budget_capped: bool = False):
+        G = len(pairs)
+        self.budget_capped = bool(budget_capped)
+        self.downscale_target = int(spec.downscale_target)
+        self.floor_fraction = float(spec.budget_floor_fraction)
+        self.rate_base = np.array(
+            [((p.spot_price_per_day if spec.spot
+               else p.ondemand_price_per_day) / 24.0) for p, _ in pairs])
+        self.price_scale = 1.0
+        self.curve = np.ones(G)
+        self.cap = np.array([r.capacity for _, r in pairs], dtype=np.int64)
+        self.outage = False
+        self.min_queue = int(spec.min_queue)
+        self.min_queue_eff = int(spec.min_queue)
+        # net scale target set during the current segment (None: keep)
+        self.scale_n: Optional[int] = None
+        self.g_provider = [p.name for p, _ in pairs]
+        self._prov_groups = {}
+        for g, name in enumerate(self.g_provider):
+            self._prov_groups.setdefault(name, []).append(g)
+
+    def rate_h(self) -> np.ndarray:
+        """Effective $/h per group — the engines' shared expression
+        ``(base * shift scalar) * curve factor``."""
+        return self.rate_base * self.price_scale * self.curve
+
+    # -- EngineOps ---------------------------------------------------------
+    def scale_to(self, n: int):
+        self.scale_n = max(0, int(n))
+
+    def deprovision_all(self):
+        self.scale_n = 0
+
+    def set_outage(self, on: bool):
+        self.outage = bool(on)
+
+    def scale_prices(self, factor: float):
+        self.price_scale *= factor
+
+    def set_price_factor(self, provider, factor: float):
+        if provider is None:
+            self.curve[:] = factor
+        else:
+            gs = self._prov_groups.get(provider)
+            if gs is not None:          # unknown provider: no-op (solo
+                self.curve[gs] = factor  # semantics)
+
+    def scale_capacity(self, factor: float):
+        self.cap = np.maximum(1, (self.cap * factor).astype(np.int64))
+
+    def arm_budget_floor(self, fraction: float, target: int):
+        self.floor_fraction = float(fraction)
+        self.downscale_target = int(target)
+
+    def set_workload_factor(self, factor: float):
+        self.min_queue_eff = int(self.min_queue * factor)
+
+
+# -- the jitted tick scan --------------------------------------------------
+
+def _kernel_ops(use_pallas: bool, consts):
+    """The four hot ops, bound to either the Pallas kernels (TPU) or
+    their jnp oracles (CPU) — identical integer semantics either way
+    (tests/test_kernels.py pins kernel == ref)."""
+    if use_pallas:
+        from repro.kernels import ops as k
+
+        def preempt(cells, kk):
+            return k.campaign_preempt(cells, kk)
+
+        def match(idle, kk):
+            return k.campaign_match(idle, kk)
+
+        def advance(busy, fm):
+            return k.campaign_advance(busy, fm)
+
+        def bill(live, rate):
+            return k.campaign_bill(live, rate, consts["prov_onehot"])
+    else:
+        from repro.kernels import ref as r
+
+        def preempt(cells, kk):
+            return r.campaign_preempt_ref(cells, kk)
+
+        def match(idle, kk):
+            return r.campaign_match_ref(idle, kk)
+
+        def advance(busy, fm):
+            return r.campaign_advance_ref(busy, fm)
+
+        def bill(live, rate):
+            return r.campaign_bill_ref(live, rate, consts["prov_onehot"])
+    return preempt, match, advance, bill
+
+
+def _poisson(u, lam):
+    """Poisson(lam) quantile of the uniform draw ``u``: truncated
+    inverse-CDF for small lam, a rounded normal approximation for large
+    (statistical tier; per-tick per-group lam is O(1) in practice)."""
+    from jax.scipy.special import ndtri
+    K = 24
+    p = jnp.exp(-jnp.minimum(lam, 30.0))
+    cdf = p
+    kk = (u > cdf).astype(jnp.int32)
+    for j in range(1, K):
+        p = p * lam / j
+        cdf = cdf + p
+        kk = kk + (u > cdf).astype(jnp.int32)
+    z = ndtri(jnp.clip(u, 1e-7, 1.0 - 1e-7))
+    k_norm = jnp.round(lam + jnp.sqrt(jnp.maximum(lam, 0.0)) * z)
+    return jnp.where(lam > 8.0,
+                     jnp.maximum(k_norm, 0.0).astype(jnp.int32), kk)
+
+
+@functools.partial(jax.jit, static_argnames=("nat_any", "use_pallas"))
+def _scan_campaigns(planes, consts, xs, *, nat_any, use_pallas):
+    """One jitted lax.scan over all N ticks of B lock-step lanes.
+
+    The tick phases mirror ``BatchedFleetEngine.tick`` (see that
+    module): events, kill-to-target, spawn, preemption, queue top-up,
+    match, NAT drops, advance, billing, overhead, ledger thresholds,
+    accumulation.  Billing charges the interval ending at this tick
+    against the live set at the tick's *start*, which equals the numpy
+    engine's ``live + died - created`` counter identity."""
+    preempt_fn, match_fn, advance_fn, bill_fn = \
+        _kernel_ops(use_pallas, consts)
+
+    prov_onehot = consts["prov_onehot"]           # [G,P] f32
+    pre_rate = consts["pre_rate_g"][None, :]      # [1,G] f32
+    pre_scale = consts["pre_scale_g"][None, :]
+    M_wl = consts["M_wl"]                         # [B,W,L] f32
+    M_jw = consts["M_jw"]                         # [B,L+1,W] f32
+    finmask_rg = consts["finmask_rg"]             # [B*G,W] i32
+    nat_g = consts["nat_g"]                       # [B,G] i32
+    overhead = consts["overhead"]                 # [B]
+    budget = consts["budget"]                     # [B]
+    dt = consts["dt"]                             # scalar f32
+    thresholds = jnp.asarray(_THRESHOLDS, jnp.float32)
+    B, G = nat_g.shape
+    W = M_wl.shape[1]
+    L = M_wl.shape[2]
+    P = prov_onehot.shape[1]
+    keys = jax.vmap(jax.random.PRNGKey)(consts["seeds"])
+
+    def requeue_levels(kb):
+        # busy cells [B,G,W] -> checkpoint-level counts [B,L]
+        return jnp.matmul(kb.astype(jnp.float32), M_wl) \
+            .sum(axis=1).astype(jnp.int32)
+
+    def split_cells(idle, pdead, busy, k):
+        # proportional fan-out of k removals per (lane, group) across
+        # the group's occupancy cells (idle | pilot-dead | busy-at-w)
+        cells = jnp.concatenate(
+            [idle[..., None], pdead[..., None], busy], axis=2)
+        killed = preempt_fn(cells.reshape(B * G, W + 2),
+                            k.reshape(B * G)).reshape(B, G, W + 2)
+        return killed[..., 0], killed[..., 1], killed[..., 2:]
+
+    def step(c, x):
+        i, seg, is_start = x
+        idle, pdead, busy = c["idle"], c["pdead"], c["busy"]
+        cap_g = planes["cap"][seg]                           # [B,G] i32
+        rate_g = planes["rate"][seg]                         # [B,G] f32
+        live0 = idle + pdead + busy.sum(axis=2)              # [B,G] i32
+        live_g = live0
+
+        # 1. events: the deferred budget cap first (solo at(now) order),
+        # then this segment's net scale target (uncapped/capped pair)
+        def greedy(n):                                       # [B] -> [B,G]
+            cume = jnp.cumsum(cap_g, axis=1) - cap_g
+            return jnp.clip(n[:, None] - cume, 0, cap_g)
+
+        apply_cap = c["cap_pending"]
+        target_g = jnp.where(apply_cap[:, None],
+                             greedy(planes["downscale"][seg]),
+                             c["target_g"])
+        cap_tick = jnp.where(apply_cap, i, c["cap_tick"])
+        n_eff = jnp.where(c["capped"], planes["n_cap"][seg],
+                          planes["n_unc"][seg])
+        do_scale = is_start & (n_eff >= 0)
+        target_g = jnp.where(do_scale[:, None],
+                             greedy(jnp.maximum(n_eff, 0)), target_g)
+
+        # 2. kill down to target (event stops); busy kills requeue
+        excess = jnp.clip(live_g - target_g, 0, None)
+        ki, kp, kb = split_cells(idle, pdead, busy, excess)
+        idle, pdead, busy = idle - ki, pdead - kp, busy - kb
+        pre_ct = c["pre_ct"] + kb.sum(axis=(1, 2))
+        lv = c["lv"] + requeue_levels(kb)
+        live_g = live_g - ki - kp - kb.sum(axis=2)
+
+        # 3. spawn to min(target, capacity); fresh pilots arrive idle
+        deficit = jnp.clip(jnp.minimum(target_g, cap_g) - live_g,
+                           0, None)
+        idle = idle + deficit
+        live_g = live_g + deficit
+
+        # 4. preemption sampling: per-lane threefry keyed by the tick,
+        # a Poisson total per (lane, group) from the shared fleet
+        # hazard, fanned out across occupancy cells proportionally
+        subkeys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(keys, i)
+        u = jax.vmap(lambda kk: jax.random.uniform(kk, (G,)))(subkeys)
+        util = live_g.astype(jnp.float32) \
+            / jnp.maximum(1, cap_g).astype(jnp.float32)
+        hazard = pre_rate * (1.0 + (pre_scale - 1.0) * util) * dt
+        k_pre = _poisson(u, live_g.astype(jnp.float32) * hazard)
+        ki, kp, kb = split_cells(idle, pdead, busy, k_pre)
+        idle, pdead, busy = idle - ki, pdead - kp, busy - kb
+        pre_ct = pre_ct + kb.sum(axis=(1, 2))
+        lv = lv + requeue_levels(kb)
+        live_g = live_g - ki - kp - kb.sum(axis=2)
+
+        # 5/6. top the CE queue up to the workload level
+        ring_tot = lv.sum(axis=1)
+        fresh_q = c["fresh_q"] + jnp.clip(
+            planes["minq"][seg] - (ring_tot + c["fresh_q"]), 0, None)
+
+        # 7. match k = min(idle, queued) jobs: the requeued ring drains
+        # first (highest checkpoint level first), then fresh jobs; the
+        # matcher splits k across groups by idle-pilot counts and the
+        # joint (group x queue-slice) pairing is the overlap of the two
+        # cumulative partitions of [0, k)
+        idle_tot = idle.sum(axis=1)
+        k = jnp.minimum(idle_tot, ring_tot + fresh_q)
+        k = jnp.where(planes["outage"][seg], 0, k)
+        take_g = match_fn(idle, k)                           # [B,G]
+        avail = jnp.concatenate([lv[:, ::-1], fresh_q[:, None]], axis=1)
+        cumq = jnp.cumsum(avail, axis=1)
+        take_j = jnp.clip(k[:, None] - (cumq - avail), 0, avail)
+        cA = jnp.cumsum(take_g, axis=1)
+        cB = jnp.cumsum(take_j, axis=1)
+        lo = jnp.maximum((cA - take_g)[:, :, None],
+                         (cB - take_j)[:, None, :])
+        hi = jnp.minimum(cA[:, :, None], cB[:, None, :])
+        joint = jnp.clip(hi - lo, 0, None).astype(jnp.float32)
+        busy = busy + jnp.matmul(joint, M_jw).astype(jnp.int32)
+        idle = idle - take_g
+        lv = lv - take_j[:, :L][:, ::-1]
+        fresh_q = fresh_q - take_j[:, L]
+
+        # 7.5 NAT drops: every busy pilot in a disconnected group
+        # requeues its job (instance stays alive and billed, pilot dead)
+        nat_ct = c["nat_ct"]
+        if nat_any:
+            drop = busy * nat_g[:, :, None]
+            cnt = drop.sum(axis=(1, 2))
+            lv = lv + requeue_levels(drop)
+            nat_ct = nat_ct + cnt
+            pre_ct = pre_ct + cnt
+            busy = busy - drop
+            pdead = pdead + drop.sum(axis=2)
+
+        # 8. advance progress one dt step; finishes release the pilot
+        adv, fin = advance_fn(busy.reshape(B * G, W), finmask_rg)
+        busy = adv.reshape(B, G, W)
+        fin_g = fin.reshape(B, G)
+        fin_ct = c["fin_ct"] + fin_g.sum(axis=1)
+        idle = idle + fin_g
+
+        # 9. bill the interval ending at this tick against the tick's
+        # starting live set, at post-event rates (numpy counter identity)
+        dh = jnp.where(i > 0, dt, 0.0)
+        spent_d, prov_d = bill_fn(live0, rate_g * dh)
+        spent = c["spent"] + spent_d
+        by_prov = c["by_prov"] + prov_d
+
+        # 10. flat infra overhead
+        oh = overhead * dt / 24.0
+        chg = oh > 0
+        spent = spent + jnp.where(chg, oh, 0.0)
+        infra = c["infra"] + jnp.where(chg, oh, 0.0)
+
+        # 11. ledger alert thresholds -> budget-floor tripwire (the cap
+        # itself applies at the next tick's event phase)
+        frac = jnp.maximum(0.0, budget - spent) / budget
+        cross = (frac[:, None] <= thresholds[None, :]) & ~c["fired"]
+        newly = cross.any(axis=1)
+        fired = c["fired"] | cross
+        trigger = newly & (frac <= planes["floor"][seg]) & ~c["capped"]
+        capped = c["capped"] | trigger
+
+        # 12. accumulate GPU-time totals at end-of-tick occupancy
+        busy_g = busy.sum(axis=2).astype(jnp.float32)
+        live_end = (idle + pdead).astype(jnp.float32) + busy_g
+        accel = c["accel"] + live_end.sum(axis=1) * dt
+        busy_h = c["busy_h"] + busy_g.sum(axis=1) * dt
+        busy_prov = c["busy_prov"] + (busy_g @ prov_onehot) * dt
+
+        return {"idle": idle, "pdead": pdead, "busy": busy,
+                "target_g": target_g, "lv": lv, "fresh_q": fresh_q,
+                "spent": spent, "by_prov": by_prov, "infra": infra,
+                "fired": fired, "capped": capped, "cap_pending": trigger,
+                "cap_tick": cap_tick, "pre_ct": pre_ct,
+                "nat_ct": nat_ct, "fin_ct": fin_ct, "accel": accel,
+                "busy_h": busy_h, "busy_prov": busy_prov}, None
+
+    init = {
+        "idle": jnp.zeros((B, G), jnp.int32),
+        "pdead": jnp.zeros((B, G), jnp.int32),
+        "busy": jnp.zeros((B, G, W), jnp.int32),
+        "target_g": jnp.zeros((B, G), jnp.int32),
+        "lv": jnp.zeros((B, L), jnp.int32),
+        "fresh_q": jnp.zeros((B,), jnp.int32),
+        "spent": jnp.zeros((B,), jnp.float32),
+        "by_prov": jnp.zeros((B, P), jnp.float32),
+        "infra": jnp.zeros((B,), jnp.float32),
+        "fired": jnp.zeros((B, len(_THRESHOLDS)), bool),
+        "capped": jnp.zeros((B,), bool),
+        "cap_pending": jnp.zeros((B,), bool),
+        "cap_tick": jnp.full((B,), -1, jnp.int32),
+        "pre_ct": jnp.zeros((B,), jnp.int32),
+        "nat_ct": jnp.zeros((B,), jnp.int32),
+        "fin_ct": jnp.zeros((B,), jnp.int32),
+        "accel": jnp.zeros((B,), jnp.float32),
+        "busy_h": jnp.zeros((B,), jnp.float32),
+        "busy_prov": jnp.zeros((B, P), jnp.float32),
+    }
+    out, _ = jax.lax.scan(step, init, xs)
+
+    # settle the final interval: one more dt at last-segment rates
+    live_final = out["idle"] + out["pdead"] + out["busy"].sum(axis=2)
+    amt = live_final.astype(jnp.float32) * planes["rate"][-1] * dt
+    out["spent"] = out["spent"] + amt.sum(axis=1)
+    out["by_prov"] = out["by_prov"] + amt @ prov_onehot
+    out["live_g"] = live_final
+    return out
+
+
+# -- batch construction ----------------------------------------------------
+
+class JaxSweepEngine:
+    """One lock-step batch of lanes compiled to a single scan (the JAX
+    analogue of ``BatchedFleetEngine`` — same batching key, so the two
+    engines chunk a sweep identically)."""
+
+    def __init__(self, lanes: Sequence[_Lane],
+                 use_pallas: Optional[bool] = None):
+        self.lanes = list(lanes)
+        B = len(self.lanes)
+        ref = self.lanes[0]
+        pairs = ref.pairs
+        G = len(pairs)
+        self.B, self.G = B, G
+        self.dt = float(ref.spec.dt_h)
+        self.duration = float(ref.spec.duration_h)
+        if use_pallas is None:
+            from repro.sharding_ctx import on_tpu
+            use_pallas = on_tpu()
+        self.use_pallas = bool(use_pallas)
+
+        # static per-group config (identical across lanes by batch key)
+        self.g_provider = [p.name for p, _ in pairs]
+        self.providers: List[str] = []
+        for name in self.g_provider:
+            if name not in self.providers:
+                self.providers.append(name)
+        self.Pn = len(self.providers)
+        pi = np.array([self.providers.index(n) for n in self.g_provider])
+        prov_onehot = np.zeros((G, self.Pn), np.float32)
+        prov_onehot[np.arange(G), pi] = 1.0
+        self.provider_tflops = {p.name: p.fp32_tflops for p, _r in pairs}
+        self.homogeneous = all(t is None
+                               for t in self.provider_tflops.values())
+        g_pre_rate = np.array([r.preempt_rate_per_hour for _, r in pairs],
+                              np.float32)
+        g_pre_scale = np.array([r.preempt_scale_at_full for _, r in pairs],
+                               np.float32)
+        g_nat = np.array([p.nat_idle_timeout_s for p, _ in pairs])
+
+        # the same float tick walk as the numpy engines
+        times = []
+        now = 0.0
+        while now < self.duration:
+            times.append(now)
+            now += self.dt
+        self.tick_times = np.array(times)
+        N = len(times)
+        self.N = N
+
+        # compile timelines; segments = union of all lanes' fire ticks
+        self._evs: List[List[tuple]] = []
+        self._fts: List[np.ndarray] = []
+        seg_set = {0}
+        for ln in self.lanes:
+            evs = timeline_registry.compile_timeline(ln.spec.timeline)
+            ft = np.searchsorted(self.tick_times,
+                                 np.array([e[0] for e in evs]), "left") \
+                if evs else np.zeros(0, np.int64)
+            self._evs.append(evs)
+            self._fts.append(ft)
+            seg_set.update(int(t) for t in ft if t < N)
+        seg_ticks = np.array(sorted(seg_set), np.int64)
+        n_seg = len(seg_ticks)
+        seg_of_tick = (np.searchsorted(seg_ticks, np.arange(N), "right")
+                       - 1).astype(np.int32)
+        is_seg_start = np.zeros(N, bool)
+        is_seg_start[seg_ticks] = True
+
+        # drive the EngineOps adapter through every lane's events, once
+        # uncapped and once capped, snapshotting planes per segment
+        rate = np.zeros((n_seg, B, G), np.float32)
+        cap = np.zeros((n_seg, B, G), np.int32)
+        outage = np.zeros((n_seg, B), bool)
+        floor = np.zeros((n_seg, B), np.float32)
+        downscale = np.zeros((n_seg, B), np.int32)
+        minq = np.zeros((n_seg, B), np.int32)
+        n_unc = np.full((n_seg, B), -1, np.int32)
+        n_cap = np.full((n_seg, B), -1, np.int32)
+        for b, ln in enumerate(self.lanes):
+            ops_u = JaxLaneOps(ln.spec, ln.pairs, budget_capped=False)
+            ops_c = JaxLaneOps(ln.spec, ln.pairs, budget_capped=True)
+            by_tick: Dict[int, list] = {}
+            for (t, kind, arg), ft in zip(self._evs[b], self._fts[b]):
+                if ft < N:
+                    by_tick.setdefault(int(ft), []).append((kind, arg))
+            for s, st in enumerate(seg_ticks):
+                ops_u.scale_n = None
+                ops_c.scale_n = None
+                for kind, arg in by_tick.get(int(st), []):
+                    timeline_registry.apply_op(ops_u, kind, arg, 0.0)
+                    timeline_registry.apply_op(ops_c, kind, arg, 0.0)
+                rate[s, b] = ops_u.rate_h()
+                cap[s, b] = ops_u.cap
+                outage[s, b] = ops_u.outage
+                floor[s, b] = ops_u.floor_fraction
+                downscale[s, b] = ops_u.downscale_target
+                minq[s, b] = ops_u.min_queue_eff
+                if ops_u.scale_n is not None:
+                    n_unc[s, b] = ops_u.scale_n
+                if ops_c.scale_n is not None:
+                    n_cap[s, b] = ops_c.scale_n
+        self.planes = {"rate": rate, "cap": cap, "outage": outage,
+                       "floor": floor, "downscale": downscale,
+                       "minq": minq, "n_unc": n_unc, "n_cap": n_cap}
+        self.seg_of_tick = seg_of_tick
+        self.is_seg_start = is_seg_start
+
+        # count-plane geometry: W progress steps (one per dt until the
+        # job wall), L checkpoint levels, and the per-lane maps between
+        # them (requeue level of a step; queue-drain start step)
+        lease = np.array([ln.spec.lease_interval_s for ln in self.lanes])
+        connected = lease[:, None] < g_nat[None, :]          # [B,G]
+        nat_g = (~connected).astype(np.int32)
+        self.nat_any = bool(nat_g.any())
+        wall = np.array([ln.spec.job_wall_h for ln in self.lanes])
+        ckpt = np.array([ln.spec.job_checkpoint_h for ln in self.lanes])
+        self.L = L = max(1, int(np.max(np.floor(wall / ckpt)) + 1))
+        wfin1 = np.maximum(
+            0, np.ceil(wall / self.dt - 1e-9).astype(np.int64) - 1)
+        self.W = W = int(wfin1.max()) + 1
+        finmask = (np.arange(W)[None, :] >= wfin1[:, None]) \
+            .astype(np.int32)                                # [B,W]
+        lvl_of_w = np.minimum(np.floor(
+            np.arange(W)[None, :] * self.dt / ckpt[:, None] + 1e-9)
+            .astype(np.int64), L - 1)
+        M_wl = np.zeros((B, W, L), np.float32)
+        M_wl[np.arange(B)[:, None], np.arange(W)[None, :], lvl_of_w] = 1.0
+        # queue drain order j: levels L-1..0 (highest checkpoint first),
+        # then fresh (j = L) starting at step 0
+        lev_of_j = np.concatenate([np.arange(L - 1, -1, -1), [0]])
+        w0_of_j = np.minimum(np.rint(
+            lev_of_j[None, :] * ckpt[:, None] / self.dt).astype(np.int64),
+            W - 1)
+        w0_of_j[:, L] = 0
+        M_jw = np.zeros((B, L + 1, W), np.float32)
+        M_jw[np.arange(B)[:, None], np.arange(L + 1)[None, :],
+             w0_of_j] = 1.0
+
+        self.consts = {
+            "prov_onehot": prov_onehot,
+            "pre_rate_g": g_pre_rate,
+            "pre_scale_g": g_pre_scale,
+            "nat_g": nat_g,
+            "finmask_rg": np.repeat(finmask, G, axis=0),     # [B*G,W]
+            "M_wl": M_wl,
+            "M_jw": M_jw,
+            "overhead": np.array([ln.spec.overhead_per_day
+                                  for ln in self.lanes], np.float32),
+            "budget": np.array([ln.spec.budget for ln in self.lanes],
+                               np.float32),
+            "dt": np.float32(self.dt),
+            "seeds": np.array([ln.seed for ln in self.lanes], np.uint32),
+        }
+        assert (self.consts["budget"] > 0).all(), \
+            "sweep lanes need a budget"
+        self.out: Optional[dict] = None
+
+    def run(self) -> "JaxSweepEngine":
+        xs = (np.arange(self.N, dtype=np.int32),
+              self.seg_of_tick,
+              self.is_seg_start)
+        out = _scan_campaigns(
+            {k: jnp.asarray(v) for k, v in self.planes.items()},
+            {k: jnp.asarray(v) for k, v in self.consts.items()},
+            tuple(jnp.asarray(v) for v in xs),
+            nat_any=self.nat_any, use_pallas=self.use_pallas)
+        self.out = {k: np.asarray(v) for k, v in out.items()}
+        return self
+
+    # -- per-lane provenance + results ------------------------------------
+    def lane_events(self, b: int) -> List[dict]:
+        """Reconstruct the lane's ``events_fired`` records through the
+        registry's own ``apply_op`` bodies (schema-identical to the solo
+        and batched engines; the budget cap is inserted at the tick the
+        scan applied it)."""
+        ln = self.lanes[b]
+        ops = JaxLaneOps(ln.spec, ln.pairs)
+        cap_tick = int(self.out["cap_tick"][b]) if self.out is not None \
+            else -1
+        by_tick: Dict[int, list] = {}
+        for (t, kind, arg), ft in zip(self._evs[b], self._fts[b]):
+            if ft < self.N:
+                by_tick.setdefault(int(ft), []).append((kind, arg))
+        ticks = sorted(set(by_tick)
+                       | ({cap_tick} if cap_tick >= 0 else set()))
+        recs: List[dict] = []
+        for ft in ticks:
+            now = float(self.tick_times[ft])
+            ops.budget_capped = 0 <= cap_tick <= ft
+            if ft == cap_tick:
+                recs.append(timeline_registry.apply_budget_cap(ops, now))
+            for kind, arg in by_tick.get(ft, []):
+                recs.append(timeline_registry.apply_op(ops, kind, arg,
+                                                       now))
+        return recs
+
+    def lane_results(self, b: int) -> dict:
+        """Summary totals, schema-identical to the other engines'
+        ``results()`` (same keys, grouping and rounding)."""
+        out = self.out
+        assert out is not None, "run() first"
+        sc = self.lanes[b].spec
+        busy_by_prov = {}
+        for pidx, name in enumerate(self.providers):
+            h = float(out["busy_prov"][b, pidx])
+            if h > 0:
+                busy_by_prov[name] = h
+        if self.homogeneous:
+            eflop = float(out["busy_h"][b]) * sc.accel_tflops * 1e12 / 1e18
+        else:
+            eflop = sum(
+                h * (self.provider_tflops.get(name) or sc.accel_tflops)
+                for name, h in busy_by_prov.items()) * 1e12 / 1e18
+        spent = float(out["spent"][b])
+        budget = float(self.consts["budget"][b])
+        ledger_by_prov = {}
+        for pidx, name in enumerate(self.providers):
+            v = float(out["by_prov"][b, pidx])
+            if v > 0:
+                ledger_by_prov[name] = round(v, 2)
+        infra = float(out["infra"][b])
+        if infra > 0:
+            ledger_by_prov["infra"] = round(infra, 2)
+        by_provider: Dict[str, int] = {}
+        for g, name in enumerate(self.g_provider):
+            by_provider[name] = by_provider.get(name, 0) \
+                + int(out["live_g"][b, g])
+        accel = float(out["accel"][b])
+        return {
+            "accel_hours": round(accel, 1),
+            "accel_days": round(accel / 24.0, 1),
+            "busy_hours": round(float(out["busy_h"][b]), 1),
+            "busy_hours_by_provider": {
+                k: round(v, 1) for k, v in sorted(busy_by_prov.items())},
+            "eflop_hours_fp32": round(eflop, 3),
+            "cost": round(spent, 2),
+            "cost_per_accel_day": round(
+                spent / max(accel / 24.0, 1e-9), 2),
+            "preemptions": int(out["pre_ct"][b]),
+            "nat_drops": int(out["nat_ct"][b]),
+            "jobs_finished": int(out["fin_ct"][b]),
+            "budget": {
+                "total_spent": round(spent, 2),
+                "by_provider": dict(sorted(ledger_by_prov.items())),
+                "remaining": round(max(0.0, budget - spent), 2),
+                "remaining_fraction": round(
+                    max(0.0, budget - spent) / budget, 4),
+                "overdraft": round(max(0.0, spent - budget), 2),
+            },
+            "by_provider": by_provider,
+        }
+
+
+def run_jax_detailed(lane_specs: Sequence[Tuple[CampaignSpec, int]],
+                     use_pallas: Optional[bool] = None
+                     ) -> List[Tuple[dict, List[dict], None]]:
+    """Run every (spec, seed) lane on the compiled engine, batching by
+    the same structural key as the numpy engine; returns per-lane
+    ``(results, events_fired, None)`` in input order (the trace slot is
+    always None — ``collect="trace"`` is a bit-identity surface the
+    statistical engine does not implement)."""
+    prepared = [_prepare(sc, seed) for sc, seed in lane_specs]
+    batches: Dict[tuple, List[int]] = {}
+    for i, (key, _lane) in enumerate(prepared):
+        batches.setdefault(key, []).append(i)
+    out: List[Optional[tuple]] = [None] * len(prepared)
+    for idxs in batches.values():
+        eng = JaxSweepEngine([prepared[i][1] for i in idxs],
+                             use_pallas=use_pallas).run()
+        for j, i in enumerate(idxs):
+            out[i] = (eng.lane_results(j), eng.lane_events(j), None)
+    return out
+
+
+def run_jax(lane_specs: Sequence[Tuple[CampaignSpec, int]],
+            use_pallas: Optional[bool] = None) -> List[dict]:
+    """Like :func:`run_jax_detailed`, results only."""
+    return [res for res, _events, _trace in
+            run_jax_detailed(lane_specs, use_pallas=use_pallas)]

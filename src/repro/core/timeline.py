@@ -18,8 +18,12 @@ This module collapses all of it into data:
     ``arm_budget_floor`` / ``set_workload_factor`` plus the
     ``budget_capped`` / ``downscale_target`` cap state).  The solo
     controller (``spec.TimelineController``, driving both the object
-    and array engines through ``sim.prov``/``sim.ce``) and the batched
-    per-lane adapter (``sweep._LaneOps``) implement it.
+    and array engines through ``sim.prov``/``sim.ce``), the batched
+    per-lane adapter (``sweep._LaneOps``) and the compiled engine's
+    planner adapter (``sweep_jax.JaxLaneOps`` — driven ahead of time by
+    the segment splitter to bake per-segment parameter planes, since a
+    jitted scan cannot call back into Python at tick time) implement
+    it.
   * :class:`OpSpec` — one compiled operation: how to apply it against
     ``EngineOps`` (returning the provenance record body), how to
     render the solo log line, and which EngineOps members it requires
@@ -39,7 +43,11 @@ mirroring ``PriceCurve``) is the first event landed through this path.
 Bit-identity contract: ``apply`` bodies must perform the exact float-op
 sequence every engine shares (see the billing-rate discipline in
 core/sweep.py); the shared ``apply`` *is* that single definition, so
-the three engines cannot drift.
+the three engines cannot drift.  The statistical ``engine="jax"`` runs
+the very same bodies — just ahead of time, against ``JaxLaneOps``
+planner state during segment splitting — so its control parameters
+(rates, caps, outages, floor arming) are float-identical even though
+its per-instance randomness is not.
 """
 from __future__ import annotations
 

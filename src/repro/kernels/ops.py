@@ -12,14 +12,19 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.campaign_sweep import (campaign_advance_kernel,
+                                          campaign_bill_kernel,
+                                          campaign_match_kernel,
+                                          campaign_preempt_kernel)
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.mamba_scan import mamba_scan_kernel
 from repro.kernels.mlstm_chunk import mlstm_chunk_kernel
 from repro.kernels.moe_gmm import moe_gmm_kernel
+from repro.sharding_ctx import default_interpret, on_tpu
 
 
 def _on_tpu():
-    return jax.default_backend() == "tpu"
+    return on_tpu()
 
 
 def _pad_to(x, axis, mult):
@@ -106,3 +111,76 @@ def moe_gmm(x, w, *, block_c=128, block_f=128, block_k=128, interpret=None):
     o = moe_gmm_kernel(xp, wp, block_c=bc, block_f=bf, block_k=bk,
                        interpret=interpret)
     return o[:, :C, :F]
+
+
+# -- campaign-sweep tick ops (core/sweep_jax.py) ---------------------------
+# Same contract as the model kernels above: the wrapper owns layout
+# padding (cell axis to a VPU lane multiple, row axis to the row-block)
+# and the interpret-mode fallback; kernels/ref.py holds the jnp oracles
+# the jitted engine runs on CPU.
+
+def _pad2(x, block_r, c_mult=128):
+    x, _ = _pad_to(x, 0, block_r)
+    x, _ = _pad_to(x, 1, c_mult)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def campaign_preempt(counts, k, *, block_r=8, interpret=None):
+    """Preemption fan-out: counts (R,C) i32 occupancy cells per
+    (lane, group) row, k (R,) i32 sampled preemption counts ->
+    killed (R,C) i32 (proportional systematic split)."""
+    interpret = default_interpret(interpret)
+    R, C = counts.shape
+    br = min(block_r, R)
+    kp = _pad_to(k.astype(jnp.int32)[:, None], 0, br)[0]
+    killed = campaign_preempt_kernel(
+        _pad2(counts.astype(jnp.int32), br), kp,
+        block_r=br, interpret=interpret)
+    return killed[:R, :C]
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def campaign_match(idle, k, *, block_r=8, interpret=None):
+    """Queue->pilot matcher core: idle (B,G) i32 idle-pilot counts,
+    k (B,) i32 matched jobs per lane -> take (B,G) i32."""
+    interpret = default_interpret(interpret)
+    B, G = idle.shape
+    br = min(block_r, B)
+    kp = _pad_to(k.astype(jnp.int32)[:, None], 0, br)[0]
+    take = campaign_match_kernel(
+        _pad2(idle.astype(jnp.int32), br), kp,
+        block_r=br, interpret=interpret)
+    return take[:B, :G]
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def campaign_advance(busy, fin_mask, *, block_r=8, interpret=None):
+    """Pilot progress sync: busy (R,W) i32 job counts by progress step,
+    fin_mask (R,W) bool -> (advanced (R,W) i32, finished (R,) i32)."""
+    interpret = default_interpret(interpret)
+    R, W = busy.shape
+    br = min(block_r, R)
+    adv, fin = campaign_advance_kernel(
+        _pad2(busy.astype(jnp.int32), br),
+        _pad2(fin_mask.astype(jnp.int32), br),
+        block_r=br, interpret=interpret)
+    return adv[:R, :W], fin[:R, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def campaign_bill(live, rate, prov_onehot, *, block_r=8, interpret=None):
+    """Billing/ledger reduction: live (B,G) i32 instance counts,
+    rate (B,G) f32, prov_onehot (G,P) f32 -> (spent (B,) f32,
+    by_provider (B,P) f32)."""
+    interpret = default_interpret(interpret)
+    B, G = live.shape
+    P = prov_onehot.shape[1]
+    br = min(block_r, B)
+    oh = _pad_to(_pad_to(prov_onehot.astype(jnp.float32), 0, 128)[0],
+                 1, 128)[0]
+    spent, by_prov = campaign_bill_kernel(
+        _pad2(live.astype(jnp.int32), br),
+        _pad2(rate.astype(jnp.float32), br), oh,
+        block_r=br, interpret=interpret)
+    return spent[:B, 0], by_prov[:B, :P]

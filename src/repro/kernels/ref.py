@@ -82,3 +82,59 @@ def mlstm_ref(q, k, v, logi, logf):
 def moe_gmm_ref(x, w):
     return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
                       w.astype(jnp.float32)).astype(x.dtype)
+
+
+# -- campaign-sweep tick ops (core/sweep_jax.py hot path) ------------------
+# The jitted sweep engine tracks exchangeable instances as count planes
+# (lane x group x progress-step), not per-instance rows; the tick ops are
+# integer allocations and reductions over those planes.  The engine calls
+# these jnp forms directly on CPU and swaps in the Pallas kernels
+# (kernels/campaign_sweep.py) on TPU; test_kernels.py pins kernel == ref.
+
+def campaign_alloc_ref(counts, k):
+    """Proportional integer allocator: counts (R,C) i32 non-negative,
+    k (R,) i32 -> take (R,C) i32 with 0 <= take <= counts and
+    ``take.sum(-1) == min(k, counts.sum(-1))``.  Systematic (cumulative
+    largest-remainder) rounding: exact, deterministic, one cumsum."""
+    tot = counts.sum(axis=-1)
+    kk = jnp.minimum(k, tot)
+    s = kk.astype(jnp.float32) / jnp.maximum(tot, 1).astype(jnp.float32)
+    inc = jnp.cumsum(counts, axis=-1).astype(jnp.float32)
+    exc = inc - counts.astype(jnp.float32)
+    return (jnp.floor(inc * s[:, None] + 1e-3)
+            - jnp.floor(exc * s[:, None] + 1e-3)).astype(jnp.int32)
+
+
+def campaign_preempt_ref(counts, k):
+    """Preemption fan-out: distribute each (lane, group)'s sampled
+    preemption count ``k`` across its instance categories (idle,
+    pilot-dead, busy-at-step-w) proportionally to occupancy.
+    counts (R,C) i32, k (R,) i32 -> killed (R,C) i32."""
+    return campaign_alloc_ref(counts, k)
+
+
+def campaign_match_ref(idle, k):
+    """Queue->pilot matcher core: split each lane's ``k`` matched jobs
+    across groups proportionally to idle-pilot counts.
+    idle (B,G) i32, k (B,) i32 -> take (B,G) i32."""
+    return campaign_alloc_ref(idle, k)
+
+
+def campaign_advance_ref(busy, fin_mask):
+    """Pilot progress sync: busy (R,W) i32 job counts by progress step,
+    fin_mask (R,W) bool (steps whose jobs complete after one more tick)
+    -> (advanced (R,W) i32, finished (R,) i32).  Completing jobs leave;
+    the rest shift one dt step right."""
+    fin = busy * fin_mask.astype(busy.dtype)
+    rest = busy - fin
+    advanced = jnp.concatenate(
+        [jnp.zeros_like(rest[:, :1]), rest[:, :-1]], axis=-1)
+    return advanced, fin.sum(axis=-1)
+
+
+def campaign_bill_ref(live, rate, prov_onehot):
+    """Billing/ledger reduction: live (B,G) i32 instance counts,
+    rate (B,G) f32 ($ owed per instance this interval), prov_onehot
+    (G,P) -> (spent (B,) f32, by_provider (B,P) f32)."""
+    amt = live.astype(jnp.float32) * rate
+    return amt.sum(axis=-1), amt @ prov_onehot

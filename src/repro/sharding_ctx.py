@@ -65,6 +65,20 @@ def shard_map(f, mesh, in_specs, out_specs, check_replication=False):
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                check_rep=check_replication)
 
+def on_tpu() -> bool:
+    """True when the default JAX backend is a TPU — the condition under
+    which Pallas kernels compile natively.  Everywhere else (CPU CI,
+    laptops) callers fall back to ``interpret=True``."""
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret(interpret):
+    """The kernels' shared interpret-mode policy (the ``flash_attention``
+    idiom): an explicit True/False wins; ``None`` means "interpret
+    everywhere but TPU"."""
+    return (not on_tpu()) if interpret is None else bool(interpret)
+
+
 _LOGICAL = {
     "data": ("data",),
     "model": ("model",),

@@ -15,6 +15,14 @@ for a whole (specs x seeds) sweep against the sequential reference loop.
 to the typed event-trace API (core/events.py): at matching (spec, seed)
 every engine must emit a **byte-identical** serialized CampaignTrace.
 
+``assert_statistically_equivalent`` is the *statistical* tier for
+``engine="jax"`` (core/sweep_jax.py): the compiled engine replaces
+per-instance PCG64 draws with per-group threefry Poisson totals, so it
+can never be bit-identical — instead its per-scenario means must sit
+within a relative band of the batched reference and its [p5, p95]
+spread must lie inside the reference band widened by the same margin,
+for cost, GPU-days and jobs over a seed sweep.
+
 Where hypothesis is installed, this module also exports the strategies
 (``spec_strategy`` / ``event_strategy``) that generate random
 CampaignSpec timelines — including the PriceCurve / GpuSlicing surfaces
@@ -78,6 +86,45 @@ def assert_sweep_equivalent(specs, seeds):
         assert_results_match(rb, rs)
         assert rb["events_fired"] == rs["events_fired"]
     return batched
+
+
+#: the statistical-equivalence contract surface (README "Simulation
+#: engines"): metric -> relative tolerance on the per-scenario mean
+#: (and band-widening margin).  ``preemptions`` is deliberately looser:
+#: the compiled engine kills proportionally across occupancy cells
+#: where the row engines kill newest-first, which shifts how many of a
+#: tick's kills land on busy instances without moving cost/throughput.
+STAT_BANDS = {"cost": 0.02, "accel_days": 0.02, "jobs_finished": 0.02,
+              "preemptions": 0.25}
+
+
+def assert_statistically_equivalent(specs, seeds, engine="jax",
+                                    bands=None, reference="batched"):
+    """Run a (specs x seeds) sweep on the statistical ``engine`` and on
+    the bit-identical ``reference``, asserting for every scenario and
+    every metric in ``bands`` (default :data:`STAT_BANDS`) that
+
+      * the means agree within ``rel * |reference mean|``, and
+      * the engine's [p5, p95] seed spread lies inside the reference's
+        band widened by the same margin (shape, not just location).
+
+    Returns ``(engine SweepResult, reference SweepResult)``."""
+    bands = dict(STAT_BANDS if bands is None else bands)
+    metrics = tuple(bands)
+    got = api_sweep(specs, seeds, engine=engine)
+    ref = api_sweep(specs, seeds, engine=reference)
+    gs, rs = got.summary(metrics), ref.summary(metrics)
+    assert set(gs) == set(rs)
+    for scen in sorted(rs):
+        for metric, rel in bands.items():
+            a, b = rs[scen][metric], gs[scen][metric]
+            margin = rel * max(abs(a["mean"]), 1e-9)
+            assert abs(b["mean"] - a["mean"]) <= margin, \
+                (scen, metric, "mean", a, b)
+            assert a["p5"] - margin <= b["p5"] and \
+                b["p95"] <= a["p95"] + margin, \
+                (scen, metric, "band", a, b)
+    return got, ref
 
 
 def serialized_trace(spec, seed, engine: str = "array") -> str:

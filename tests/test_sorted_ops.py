@@ -1,0 +1,137 @@
+"""The batched engine's sorted-row primitives
+(``sweep._sorted_insert`` / ``_sorted_remove``) — the single-pass
+searchsorted merges every hot row mutation (requeue, finish, kill)
+rides on.
+
+Contracts under test:
+
+  * insert: result is sorted and its multiset is exactly
+    ``multiset(a) + multiset(vs)`` — duplicates (within ``vs``, and
+    between ``vs`` and ``a``) included; the empty ``vs`` is a no-op
+    returning ``a`` itself.
+  * remove: for ``vs`` drawn as *distinct values present in* ``a``, the
+    result is sorted and the multiset drops exactly one copy of each —
+    by construction (one searchsorted index per value) a duplicated
+    value in ``a`` loses a single copy, which is precisely how the
+    engine uses it (row ids are unique within a lane).
+
+The deterministic edge cases plus a seeded fuzz sweep always run; the
+hypothesis-driven generalizations activate where hypothesis is
+installed (same degrade-gracefully split as test_spec_properties.py vs
+test_spec.py).
+"""
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from engine_equivalence import HAVE_HYPOTHESIS
+from repro.core.sweep import _sorted_insert, _sorted_remove
+
+
+def _arr(xs):
+    return np.sort(np.asarray(xs, dtype=np.int64))
+
+
+def _check_insert(a, vs):
+    out = _sorted_insert(a, vs)
+    assert out.dtype == a.dtype
+    assert len(out) == len(a) + len(vs)
+    assert (np.diff(out) >= 0).all(), "result must stay sorted"
+    assert Counter(out.tolist()) == \
+        Counter(a.tolist()) + Counter(vs.tolist())
+    return out
+
+
+def _check_remove(a, vs):
+    out = _sorted_remove(a, vs)
+    assert len(out) == len(a) - len(vs)
+    assert (np.diff(out) >= 0).all(), "result must stay sorted"
+    want = Counter(a.tolist())
+    want.subtract(vs.tolist())
+    assert Counter(out.tolist()) == +want
+    return out
+
+
+# -- deterministic edge cases ----------------------------------------------
+
+def test_insert_empty_vs_is_identity():
+    a = _arr([1, 3, 5])
+    assert _sorted_insert(a, np.empty(0, dtype=a.dtype)) is a
+    empty = np.empty(0, dtype=np.int64)
+    assert _check_insert(empty, _arr([2, 2, 9])).tolist() == [2, 2, 9]
+
+
+def test_insert_duplicates_within_vs_and_against_a():
+    a = _arr([1, 2, 2, 5])
+    _check_insert(a, _arr([2, 2]))           # dup of an existing dup
+    _check_insert(a, _arr([0, 0, 6, 6]))     # dups at both boundaries
+    out = _check_insert(a, a.copy())         # self-merge doubles counts
+    assert Counter(out.tolist()) == \
+        {k: 2 * c for k, c in Counter(a.tolist()).items()}
+
+
+def test_remove_empty_vs_is_identity():
+    a = _arr([1, 3, 5])
+    assert _sorted_remove(a, np.empty(0, dtype=a.dtype)) is a
+
+
+def test_remove_one_copy_of_duplicated_value():
+    out = _check_remove(_arr([1, 2, 2, 2, 5]), _arr([2]))
+    assert out.tolist() == [1, 2, 2, 5]
+
+
+def test_remove_everything():
+    a = _arr([4, 7, 9])
+    assert _check_remove(a, a.copy()).tolist() == []
+
+
+def test_remove_inverts_insert():
+    a = _arr([0, 1000, 2000, 3000])
+    vs = _arr([-3, 17, 17, 2500])
+    merged = _check_insert(a, vs)
+    distinct = _arr(sorted(set(vs.tolist())))
+    _check_remove(merged, distinct)
+
+
+def test_seeded_fuzz_sweep():
+    """Poor-man's property test (runs even without hypothesis): 200
+    random (a, vs) pairs through both contracts."""
+    rng = np.random.default_rng(7)
+    for _ in range(200):
+        a = _arr(rng.integers(-50, 50, size=rng.integers(0, 60)))
+        vs = _arr(rng.integers(-50, 50, size=rng.integers(0, 20)))
+        merged = _check_insert(a, vs)
+        if len(merged):
+            uniq = np.unique(merged)
+            take = rng.permutation(len(uniq))[:rng.integers(0, len(uniq) + 1)]
+            _check_remove(merged, _arr(uniq[take]))
+
+
+# -- hypothesis generalizations --------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    ints = st.integers(-50, 50)
+
+    @given(st.lists(ints, max_size=60), st.lists(ints, max_size=20))
+    @settings(max_examples=200, deadline=None)
+    def test_sorted_insert_properties(base, ins):
+        _check_insert(_arr(base), _arr(ins))
+
+    @given(st.data())
+    @settings(max_examples=200, deadline=None)
+    def test_sorted_remove_properties(data):
+        base = data.draw(st.lists(ints, min_size=1, max_size=60))
+        a = _arr(base)
+        # distinct present values — the engine's row ids are unique,
+        # and _sorted_remove drops exactly one copy per value
+        uniq = sorted(set(a.tolist()))
+        vs = _arr(data.draw(st.lists(st.sampled_from(uniq), unique=True,
+                                     max_size=len(uniq))))
+        _check_remove(a, vs)
+else:                                                 # pragma: no cover
+    def test_hypothesis_generalizations_skipped():
+        pytest.skip("hypothesis not installed; deterministic tier ran")
