@@ -48,6 +48,10 @@ def _print_solo(res: CampaignResult):
     print(f"  fp32 EFLOP-h    {res.eflop_hours_fp32:>13.3f}")
     print(f"  preemptions     {res.preemptions:>13,}")
     print(f"  jobs finished   {res.jobs_finished:>13,}")
+    if res.spec is not None and res.spec.dataplane is not None:
+        print(f"  egress          ${res.egress_usd:>12,.2f}")
+        print(f"  stage-in hours  {res.stagein_hours:>13,.1f}")
+        print(f"  cache hit frac  {res.cache_hit_fraction:>13.4f}")
     if res.spec is not None and res.spec.name == "paper":
         print("  paper-claim comparison:")
         for claim, row in res.compare_paper().items():
@@ -150,16 +154,25 @@ def cmd_lint(args) -> int:
 
 def cmd_trace(args) -> int:
     """Run one (spec, seed) campaign with ``collect="trace"`` and write
-    the typed event stream as JSONL (stdout or ``--out``)."""
+    the typed event stream as JSONL (stdout or ``--out``; a ``.gz``
+    suffix gzips transparently — stage-in events make big-fleet traces
+    long)."""
     spec = _load_spec(args.spec)
     res = api_run(spec, seeds=args.seed, engine=args.engine,
                   collect="trace")
     text = res.trace.to_jsonl()
     if args.out:
-        # newline="\n": the trace bytes are canonical (sha256-pinned);
-        # platform CRLF translation must not touch them
-        with open(args.out, "w", newline="\n") as f:
-            f.write(text)
+        if args.out.endswith(".gz"):
+            import gzip
+            # mtime=0: byte-reproducible archives of the canonical
+            # (sha256-pinned) trace bytes
+            with gzip.GzipFile(args.out, "wb", mtime=0) as f:
+                f.write(text.encode("utf-8"))
+        else:
+            # newline="\n": the trace bytes are canonical; platform
+            # CRLF translation must not touch them
+            with open(args.out, "w", newline="\n") as f:
+                f.write(text)
         print(f"# wrote {args.out}", file=sys.stderr)
     else:
         sys.stdout.write(text)
@@ -233,7 +246,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     p_paper.set_defaults(fn=cmd_paper)
 
     args = ap.parse_args(argv)
-    return args.fn(args)
+    try:
+        return args.fn(args)
+    except ValueError as e:
+        # the api layer's engine/collect errors (e.g. the statistical
+        # jax engine has no trace surface) already say what to do —
+        # surface them as one friendly line, not a traceback
+        print(f"error: {e}", file=sys.stderr)
+        return 2
 
 
 if __name__ == "__main__":

@@ -45,7 +45,7 @@ from repro.core.spec import (CampaignResult, CampaignSpec, check_collect,
 from repro.core.sweep import SweepResult, run_batched_detailed
 
 __all__ = ["run", "sweep", "paper_spec", "CampaignResult", "SweepResult",
-           "SOLO_ENGINES", "SWEEP_ENGINES", "ENGINES"]
+           "SOLO_ENGINES", "SWEEP_ENGINES", "ENGINES", "TRACE_ENGINES"]
 
 #: the allowed-engine sets — the one place the names live.  ``run``,
 #: ``sweep`` and the ``campaigns`` CLI ``--engine`` choices all read
@@ -54,7 +54,21 @@ SOLO_ENGINES = frozenset({"array", "object"})
 SWEEP_ENGINES = SOLO_ENGINES | {"batched", "sequential", "jax"}
 ENGINES = SWEEP_ENGINES | {"auto"}
 
+#: engines with a per-instance trace surface (``collect="trace"``):
+#: every bit-identical engine; the statistical jax tier is excluded
+TRACE_ENGINES = frozenset(SWEEP_ENGINES - {"jax"})
+
 _SOLO_ENGINES = SOLO_ENGINES          # backwards-compat alias
+
+
+def _no_trace_error() -> ValueError:
+    """The one error both ``run`` and ``sweep`` raise for
+    ``engine="jax", collect="trace"`` — it names the engines that DO
+    have a trace surface so the fix is in the message."""
+    return ValueError(
+        'engine="jax" is statistical — it has no per-instance event '
+        'stream to trace; use collect="summary", or pick a '
+        "trace-capable engine: " + ", ".join(sorted(TRACE_ENGINES)))
 
 
 def _check_engine(engine: str, allowed: frozenset, what: str) -> str:
@@ -105,10 +119,7 @@ def sweep(specs: Sequence[CampaignSpec], seeds: Sequence[int],
         detailed = run_batched_detailed(lanes, collect=collect)
     elif engine == "jax":
         if collect == "trace":
-            raise ValueError(
-                'engine="jax" is statistical — it has no per-instance '
-                'event stream to trace; use collect="summary" or a '
-                "bit-identical engine")
+            raise _no_trace_error()
         from repro.core.sweep_jax import run_jax_detailed
         detailed = run_jax_detailed(lanes)
     else:
@@ -176,10 +187,7 @@ def run(spec_or_specs: Union[CampaignSpec, Sequence[CampaignSpec]],
             events_fired=tuple(events), trace=trace)
     if solo and engine == "jax":         # forced single-lane compiled run
         if collect == "trace":
-            raise ValueError(
-                'engine="jax" is statistical — it has no per-instance '
-                'event stream to trace; use collect="summary" or a '
-                "bit-identical engine")
+            raise _no_trace_error()
         from repro.core.sweep_jax import run_jax_detailed
         (res, events, trace), = run_jax_detailed(
             [(specs[0], seed_list[0])])

@@ -1,0 +1,281 @@
+"""Data-plane model: per-provider origins, stage-in, cache tiers, egress.
+
+The source paper treated jobs as pure compute, but the follow-on IceCube
+work (arXiv 2308.07999) shows GPU workflows are gated by XRootD data
+origins — stage-in latency, cache hit rates and origin availability
+decide real goodput — while HEPCloud (arXiv 1710.00100) shows egress
+charges are a first-order line item in any cloud cost answer.  This
+module makes those surfaces first-class campaign inputs:
+
+  * :class:`DataOrigin` — the origin serving one provider's regions:
+    WAN bandwidth (Gbit/s), per-GB egress price, and an optional
+    regional cache (hit rate + cache-tier bandwidth),
+  * :class:`DataPlane` — the frozen spec surface: the provider ->
+    origin map carried by ``CampaignSpec.dataplane``,
+  * the shared stage math (:func:`stage_ticks`, :func:`cache_hit`,
+    :func:`stage_decision`) — ONE float/int expression per quantity, so
+    the solo-object, solo-array and batched engines stage and bill
+    bit-identically (the same contract the ``((price/24) * shift) *
+    curve`` billing rate already follows),
+  * :class:`DataPlaneRuntime` — one campaign's mutable data-plane
+    state: per-provider origin outage flags, cumulative degrade
+    factors, cache-flush epochs, the per-tick egress miss counter the
+    bill phase drains into the budget ledger, and the campaign totals
+    behind the ``egress_usd`` / ``stagein_hours`` /
+    ``cache_hit_fraction`` result columns.
+
+Semantics (identical in every bit-exact engine):
+
+  * a matched pilot first completes a **stage-in** of
+    ``job_input_gb`` at the effective bandwidth — cache hits stream
+    from the cache tier, misses from the origin (scaled by any
+    ``OriginDegrade`` factors) — rounded up to whole ticks; the job
+    makes no progress until the stage-in finishes, and a preempted or
+    NAT-dropped pilot abandons the transfer (a re-match restarts it),
+  * cache hits are deterministic per pilot: the k-th stage-in of a
+    pilot hits iff ``floor((k+1)*r) > floor(k*r)`` — a rotation whose
+    long-run hit frequency converges to ``r`` with error <= 1/k, with
+    no RNG consumed (traces stay byte-identical with and without a
+    recorder attached).  ``CacheFlush`` bumps the provider's epoch,
+    lazily resetting every pilot's rotation,
+  * each cache **miss** moves ``job_input_gb`` out of the origin's
+    cloud: the bill phase charges ``gb * egress_usd_per_gb`` to the
+    ledger next to the GPU-hour charges and emits one
+    ``EgressBilled`` trace event per (tick, provider),
+  * ``OriginOutage`` gates **new** matches for the affected provider's
+    pilots (in-flight stage-ins keep streaming); other providers keep
+    matching.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Mapping, Optional, Tuple, Union
+
+__all__ = ["DataOrigin", "DataPlane", "stage_ticks", "cache_hit",
+           "stage_decision", "DataPlaneRuntime"]
+
+
+@dataclass(frozen=True)
+class DataOrigin:
+    """The data origin serving one provider's regions.
+
+    ``bandwidth_gbps`` is the origin's WAN bandwidth in Gbit/s per
+    pilot transfer; ``egress_usd_per_gb`` the provider's per-GB egress
+    price for cache misses; ``cache_hit_rate`` in [0, 1] the fraction
+    of stage-ins served by the regional cache (0 disables the cache);
+    ``cache_bandwidth_gbps`` the cache tier's bandwidth (falls back to
+    the origin bandwidth when 0 — a cache that only saves egress)."""
+    bandwidth_gbps: float
+    egress_usd_per_gb: float = 0.0
+    cache_hit_rate: float = 0.0
+    cache_bandwidth_gbps: float = 0.0
+
+
+@dataclass(frozen=True)
+class DataPlane:
+    """The frozen spec surface: provider name -> :class:`DataOrigin`.
+
+    Accepts a mapping or an iterable of (name, origin) pairs and
+    normalizes to a name-sorted tuple so equal planes compare and
+    serialize identically."""
+    origins: Tuple[Tuple[str, DataOrigin], ...] = ()
+
+    def __post_init__(self):
+        items = (self.origins.items()
+                 if isinstance(self.origins, Mapping) else self.origins)
+        norm = []
+        for name, origin in items:
+            if isinstance(origin, Mapping):
+                origin = DataOrigin(**origin)
+            norm.append((str(name), origin))
+        norm.sort(key=lambda kv: kv[0])
+        object.__setattr__(self, "origins", tuple(norm))
+
+    def origin_for(self, provider: str) -> Optional[DataOrigin]:
+        """The origin serving ``provider`` (sliced pools like
+        ``azure/4`` inherit their base provider's origin), or None."""
+        base = provider.split("/", 1)[0]
+        for name, origin in self.origins:
+            if name == provider or name == base:
+                return origin
+        return None
+
+    def providers(self) -> Tuple[str, ...]:
+        return tuple(name for name, _ in self.origins)
+
+    # -- serialization -----------------------------------------------------
+    def to_dict(self) -> dict:
+        from dataclasses import asdict
+        return {"origins": {name: asdict(o) for name, o in self.origins}}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "DataPlane":
+        d = dict(d)
+        origins = d.pop("origins", {})
+        if d:
+            raise ValueError(f"unknown DataPlane fields {sorted(d)}")
+        items = origins.items() if isinstance(origins, Mapping) else origins
+        return cls(tuple((name, DataOrigin(**dict(o)))
+                         for name, o in items))
+
+
+# -- the shared stage math (one expression, every engine) ------------------
+
+def stage_ticks(size_gb: float, gbps: float, dt_h: float) -> int:
+    """Whole ticks to stage ``size_gb`` at ``gbps``: transfer hours =
+    GB * 8 bits / (Gbit/s) / 3600, rounded up to ticks (>= 1 for any
+    positive transfer — a job never starts the tick it matched)."""
+    if size_gb <= 0.0 or gbps <= 0.0 or dt_h <= 0.0:
+        return 0
+    hours = size_gb * 8.0 / gbps / 3600.0
+    return max(1, int(math.ceil(hours / dt_h - 1e-9)))
+
+
+def cache_hit(k: int, rate: float) -> bool:
+    """Deterministic cache-hit rotation: the k-th (0-based) stage-in of
+    a pilot hits iff the integer part of ``k * rate`` advances — hit
+    frequency converges to ``rate`` with error <= 1/k, RNG-free."""
+    if rate <= 0.0:
+        return False
+    if rate >= 1.0:
+        return True
+    return int((k + 1) * rate) > int(k * rate)
+
+
+def stage_decision(origin: DataOrigin, degrade: float, size_gb: float,
+                   dt_h: float, k: int) -> Tuple[int, bool]:
+    """The k-th stage-in of one pilot against ``origin`` under the
+    cumulative ``degrade`` bandwidth factor -> (ticks, cache_hit)."""
+    hit = cache_hit(k, origin.cache_hit_rate)
+    if hit:
+        gbps = origin.cache_bandwidth_gbps \
+            if origin.cache_bandwidth_gbps > 0.0 else origin.bandwidth_gbps
+    else:
+        gbps = origin.bandwidth_gbps * degrade
+    return stage_ticks(size_gb, gbps, dt_h), hit
+
+
+# -- one campaign's mutable data-plane state -------------------------------
+
+class DataPlaneRuntime:
+    """Per-campaign (per-lane) data-plane bookkeeping, engine-shared.
+
+    Engines call :meth:`decide` at match time (stage length + cache-hit
+    provenance + egress miss metering) and :meth:`bill` in their bill
+    phase (drains the per-tick miss counter into the ledger, in sorted
+    provider order, after the GPU-hour charges).  The ``OriginOutage``
+    / ``OriginDegrade`` / ``CacheFlush`` timeline ops land on
+    :meth:`set_outage` / :meth:`degrade_origin` / :meth:`flush_cache`.
+    All state is plain Python ints/floats: identical across engines."""
+
+    __slots__ = ("plane", "size_gb", "dt_h", "down", "degrade", "epoch",
+                 "pending", "hits", "misses", "staged_ticks",
+                 "egress_usd")
+
+    def __init__(self, plane: Optional[DataPlane], job_input_gb: float,
+                 dt_h: float):
+        self.plane = plane if plane is not None else DataPlane()
+        self.size_gb = float(job_input_gb)
+        self.dt_h = float(dt_h)
+        self.down: Dict[str, bool] = {}
+        self.degrade: Dict[str, float] = {}
+        self.epoch: Dict[str, int] = {}
+        self.pending: Dict[str, int] = {}     # provider -> misses this tick
+        self.hits = 0
+        self.misses = 0
+        self.staged_ticks = 0
+        self.egress_usd = 0.0
+
+    @property
+    def active(self) -> bool:
+        """Whether any data-plane behavior is possible at all."""
+        return bool(self.plane.origins)
+
+    @property
+    def staging(self) -> bool:
+        """Whether matches actually stage data (origins declared AND a
+        positive job input size) — zero-input campaigns skip the stage
+        machinery entirely, in every engine."""
+        return self.size_gb > 0.0 and bool(self.plane.origins)
+
+    # -- match-time hooks --------------------------------------------------
+    def eligible(self, provider: str) -> bool:
+        """Whether ``provider`` pilots may take NEW jobs (its origin is
+        not in outage; providers without a declared origin always are)."""
+        return not self.down.get(self._base(provider), False)
+
+    def decide(self, provider: str, k: int) -> Tuple[int, bool]:
+        """Stage decision for the k-th stage-in of a ``provider`` pilot:
+        (ticks, cache_hit); meters a miss into the pending egress
+        counter.  Providers without a declared origin stage nothing."""
+        base = self._base(provider)
+        origin = self.plane.origin_for(base)
+        if origin is None:
+            return 0, False
+        ticks, hit = stage_decision(origin, self.degrade.get(base, 1.0),
+                                    self.size_gb, self.dt_h, k)
+        if hit:
+            self.hits += 1
+        else:
+            self.misses += 1
+            if self.size_gb > 0.0:
+                self.pending[base] = self.pending.get(base, 0) + 1
+        return ticks, hit
+
+    def current_epoch(self, provider: str) -> int:
+        return self.epoch.get(self._base(provider), 0)
+
+    # -- bill-phase hook ---------------------------------------------------
+    def bill(self, ledger, now: float, recorder=None) -> float:
+        """Charge this tick's cache-miss egress to the ledger (sorted
+        provider order — deterministic and engine-identical) and emit
+        one EgressBilled trace event per provider; returns the $."""
+        total = 0.0
+        for base in sorted(self.pending):
+            count = self.pending[base]
+            if count <= 0:
+                continue
+            origin = self.plane.origin_for(base)
+            # gb = size * int count, usd = gb * price: the exact scalar
+            # float ops every engine shares (trace values byte-identical)
+            gb = self.size_gb * count
+            usd = gb * origin.egress_usd_per_gb
+            if usd > 0.0 and ledger is not None:
+                ledger.charge(base, usd, now, note="egress")
+            if recorder is not None:
+                recorder.egress_billed(now, base, gb, usd)
+            self.egress_usd += usd
+            total += usd
+        self.pending.clear()
+        return total
+
+    # -- timeline ops ------------------------------------------------------
+    def set_outage(self, provider: str, on: bool):
+        self.down[self._base(provider)] = bool(on)
+
+    def degrade_origin(self, provider: str, factor: float):
+        base = self._base(provider)
+        self.degrade[base] = self.degrade.get(base, 1.0) * float(factor)
+
+    def flush_cache(self, provider: str):
+        base = self._base(provider)
+        self.epoch[base] = self.epoch.get(base, 0) + 1
+
+    # -- results -----------------------------------------------------------
+    def results(self) -> dict:
+        """The three data-plane result columns (0-defaults when the
+        campaign has no data plane), rounded like their $/hour peers."""
+        attempts = self.hits + self.misses
+        return {
+            "egress_usd": round(self.egress_usd, 2),
+            "stagein_hours": round(self.staged_ticks * self.dt_h, 1),
+            "cache_hit_fraction": round(self.hits / attempts, 4)
+            if attempts else 0.0,
+        }
+
+    @staticmethod
+    def _base(provider: str) -> str:
+        """Sliced pools (``azure/4``) share their base provider's
+        origin, outage state and egress meter."""
+        return provider.split("/", 1)[0]

@@ -105,6 +105,44 @@ class NatDrop:
 
 
 @dataclass(frozen=True)
+class StageInStarted:
+    """A matched pilot began staging its job's input: ``gb`` at the
+    origin (``cache_hit=False``, billable egress) or the regional cache
+    tier (``cache_hit=True``) — the data-plane provenance behind the
+    ``cache_hit_fraction`` result column."""
+    t: float
+    pilot: int
+    gb: float
+    cache_hit: bool
+    provider: str
+
+    kind = "stagein"
+
+
+@dataclass(frozen=True)
+class StageInFinished:
+    """The pilot's stage-in completed; its job starts progressing this
+    tick."""
+    t: float
+    pilot: int
+
+    kind = "stagein_done"
+
+
+@dataclass(frozen=True)
+class EgressBilled:
+    """One tick's cache-miss egress for one provider, charged to the
+    budget ledger next to the GPU-hour billing (``usd = gb *
+    egress_usd_per_gb``, the engine-shared float contract)."""
+    t: float
+    provider: str
+    gb: float
+    usd: float
+
+    kind = "egress"
+
+
+@dataclass(frozen=True)
 class JobFinished:
     """A job completed its wall hours at ``t`` (``attempts`` counts
     matches, i.e. 1 + re-queues survived)."""
@@ -141,19 +179,23 @@ class TimelineEventFired:
 
 
 TraceEvent = Union[InstanceLaunched, InstanceStopped, InstancePreempted,
-                   PilotRegistered, NatDrop, JobFinished, PriceChanged,
-                   TimelineEventFired]
+                   PilotRegistered, NatDrop, StageInStarted,
+                   StageInFinished, EgressBilled, JobFinished,
+                   PriceChanged, TimelineEventFired]
 
 TRACE_EVENT_KINDS: Dict[str, type] = {
     cls.kind: cls for cls in (InstanceLaunched, InstanceStopped,
                               InstancePreempted, PilotRegistered, NatDrop,
+                              StageInStarted, StageInFinished, EgressBilled,
                               JobFinished, PriceChanged, TimelineEventFired)}
 
 # canonical intra-tick order == the engines' tick phase order; entity ids
-# (unique per kind per campaign) break ties, so the sort is total and
-# engine-iteration-order independent
+# (unique per kind per campaign — pilot ids for stage events, provider
+# names for egress, which only compare within their own rank) break
+# ties, so the sort is total and engine-iteration-order independent
 _KIND_RANK = {"timeline": 0, "price": 0, "launch": 1, "stop": 2,
-              "pilot": 3, "preempt": 4, "nat_drop": 5, "job_done": 6}
+              "pilot": 3, "preempt": 4, "nat_drop": 5, "stagein": 6,
+              "stagein_done": 7, "egress": 8, "job_done": 9}
 
 
 def event_to_dict(ev: TraceEvent) -> dict:
@@ -214,6 +256,24 @@ class TraceRecorder:
         t, p = float(t), int(pilot)
         self._raw.append((t, _KIND_RANK[NatDrop.kind], p,
                           NatDrop(t, p, int(instance), provider)))
+
+    def stagein_started(self, t, pilot, gb, cache_hit, provider):
+        t, p = float(t), int(pilot)
+        self._raw.append((t, _KIND_RANK[StageInStarted.kind], p,
+                          StageInStarted(t, p, float(gb), bool(cache_hit),
+                                         provider)))
+
+    def stagein_finished(self, t, pilot):
+        t, p = float(t), int(pilot)
+        self._raw.append((t, _KIND_RANK[StageInFinished.kind], p,
+                          StageInFinished(t, p)))
+
+    def egress_billed(self, t, provider, gb, usd):
+        t = float(t)
+        # provider names are the entity key: unique per tick within the
+        # egress rank, so the canonical sort stays total
+        self._raw.append((t, _KIND_RANK[EgressBilled.kind], provider,
+                          EgressBilled(t, provider, float(gb), float(usd))))
 
     def job_finished(self, t, job, attempts):
         t, j = float(t), int(job)

@@ -79,13 +79,17 @@ class ArrayFleetEngine:
                  ledger: Optional[BudgetLedger], rng: np.random.Generator,
                  *, lease_interval_s: float = 120.0, spot: bool = True,
                  job_wall_h: float = 4.0, job_checkpoint_h: float = 1.0,
-                 accept_policy: str = "icecube", recorder=None):
+                 accept_policy: str = "icecube", recorder=None,
+                 dataplane=None):
         self.catalog = catalog
         self.ledger = ledger
         self.rng = rng
         # optional events.TraceRecorder; consumes no RNG, so attaching it
         # never changes the campaign
         self.recorder = recorder
+        # optional dataplane.DataPlaneRuntime: stage-in lengths, origin
+        # outage gating and egress metering (None = pure compute)
+        self.dataplane = dataplane
         self.lease_interval_s = lease_interval_s
         self._spot = spot
         self.job_wall_h = job_wall_h
@@ -137,6 +141,12 @@ class ArrayFleetEngine:
         self.i_pilot = np.zeros(cap, dtype=np.int8)
         self.i_pilot_order = np.zeros(cap, dtype=np.int64)
         self.i_job = np.full(cap, -1, dtype=np.int64)
+        # data-plane stage-in state per instance row: ticks left on the
+        # current transfer, the pilot's cache-hit rotation counter, and
+        # the CacheFlush epoch that counter belongs to
+        self.i_stage = np.zeros(cap, dtype=np.int64)
+        self.i_stage_k = np.zeros(cap, dtype=np.int64)
+        self.i_stage_epoch = np.zeros(cap, dtype=np.int64)
         self._pilot_seq = 0
 
         # -- job SoA + queue ----------------------------------------------
@@ -225,6 +235,9 @@ class ArrayFleetEngine:
         self.i_pilot = g(self.i_pilot)
         self.i_pilot_order = g(self.i_pilot_order)
         self.i_job = g(self.i_job, -1)
+        self.i_stage = g(self.i_stage)
+        self.i_stage_k = g(self.i_stage_k)
+        self.i_stage_epoch = g(self.i_stage_epoch)
 
     def _grow_jobs(self, extra: int):
         need = self.jn + extra
@@ -288,6 +301,9 @@ class ArrayFleetEngine:
         self.i_pilot[s] = _NO_PILOT
         self.i_pilot_order[s] = 0
         self.i_job[s] = -1
+        self.i_stage[s] = 0
+        self.i_stage_k[s] = 0
+        self.i_stage_epoch[s] = 0
         self.n += k
         if self.recorder is not None:
             pname = self.g_provider[gi].name
@@ -362,6 +378,7 @@ class ArrayFleetEngine:
         for j in jrows:
             self.queue.appendleft(int(j))
         self.i_job[rows] = -1
+        self.i_stage[rows] = 0   # an abandoned transfer restarts on re-match
         return int(has_job.sum())
 
     def sync_pilots(self, now: float):
@@ -459,8 +476,15 @@ class ArrayFleetEngine:
     def match(self, now: float) -> int:
         if self.outage:
             return 0
-        idle = np.nonzero((self.i_pilot[:self.n] == _PILOT_LIVE)
-                          & (self.i_job[:self.n] < 0))[0]
+        dp = self.dataplane
+        idle_mask = ((self.i_pilot[:self.n] == _PILOT_LIVE)
+                     & (self.i_job[:self.n] < 0))
+        if dp is not None and dp.active:
+            # origin outage gates NEW matches for affected providers
+            elig_g = np.array([dp.eligible(p.name)
+                               for p in self.g_provider])
+            idle_mask &= elig_g[self.i_group[:self.n]]
+        idle = np.nonzero(idle_mask)[0]
         k = min(len(idle), len(self.queue))
         if k <= 0:
             return 0
@@ -470,6 +494,21 @@ class ArrayFleetEngine:
                            dtype=np.int64, count=k)
         self.i_job[idle] = jobs
         self.j_attempts[jobs] += 1
+        if dp is not None and dp.staging:
+            for r in idle:
+                gi = int(self.i_group[r])
+                pname = self.g_provider[gi].name
+                epoch = dp.current_epoch(pname)
+                if self.i_stage_epoch[r] != epoch:  # CacheFlush reset
+                    self.i_stage_epoch[r] = epoch
+                    self.i_stage_k[r] = 0
+                ticks, hit = dp.decide(pname, int(self.i_stage_k[r]))
+                self.i_stage_k[r] += 1
+                self.i_stage[r] = ticks
+                if ticks > 0 and self.recorder is not None:
+                    self.recorder.stagein_started(
+                        now, self.i_pilot_order[r] + 1, dp.size_gb, hit,
+                        pname)
         return k
 
     def advance(self, dt: float, now: float):
@@ -492,6 +531,21 @@ class ArrayFleetEngine:
             self.preemption_events += self._requeue(rows)
             self.i_pilot[rows] = _PILOT_DEAD
             busy &= ~dropped
+        # stage-in burns the tick before any job progress
+        staging = busy & (self.i_stage[:self.n] > 0)
+        if staging.any():
+            srows = np.nonzero(staging)[0]
+            self.i_stage[srows] -= 1
+            if self.dataplane is not None:
+                self.dataplane.staged_ticks += len(srows)
+            done_stage = srows[self.i_stage[srows] == 0]
+            if len(done_stage) and self.recorder is not None:
+                order = np.argsort(self.i_pilot_order[done_stage],
+                                   kind="stable")
+                for r in done_stage[order]:
+                    self.recorder.stagein_finished(
+                        now, self.i_pilot_order[r] + 1)
+            busy &= ~staging
         # job progress
         rows = np.nonzero(busy)[0]
         if len(rows):
@@ -552,7 +606,8 @@ class ArrayFleetEngine:
             self.i_last_charged[rows]]))
         keep = np.nonzero(~dead)[0]
         for name in ("i_group", "i_id", "i_start", "i_end", "i_preempted",
-                     "i_last_charged", "i_pilot", "i_pilot_order", "i_job"):
+                     "i_last_charged", "i_pilot", "i_pilot_order", "i_job",
+                     "i_stage", "i_stage_k", "i_stage_epoch"):
             arr = getattr(self, name)
             arr[:len(keep)] = arr[keep]
             setattr(self, name, arr)

@@ -50,6 +50,12 @@ class Pilot:
     last_renew: float = 0.0
     job: Optional[Job] = None
     dead: bool = False
+    # data-plane stage-in state: whole ticks left on the current
+    # transfer, this pilot's cache-hit rotation counter, and the
+    # CacheFlush epoch the counter belongs to (core/dataplane.py)
+    stage_left: int = 0
+    stage_k: int = 0
+    stage_epoch: int = 0
 
     @property
     def connected(self) -> bool:
@@ -70,12 +76,16 @@ class ComputeElement:
     jobs')."""
 
     def __init__(self, accept_policy: str = "icecube",
-                 lease_interval_s: float = 120.0, recorder=None):
+                 lease_interval_s: float = 120.0, recorder=None,
+                 dataplane=None):
         self.accept_policy = accept_policy
         self.lease_interval_s = lease_interval_s
         # optional events.TraceRecorder; RNG-free, attaching it never
         # changes the campaign
         self.recorder = recorder
+        # optional dataplane.DataPlaneRuntime: stage-in lengths, origin
+        # outage gating and egress metering (None = pure compute)
+        self.dataplane = dataplane
         self.queue: collections.deque = collections.deque()
         self.pilots: Dict[int, Pilot] = {}
         self.finished: List[Job] = []
@@ -127,21 +137,38 @@ class ComputeElement:
             self.queue.appendleft(j)
             self.preemption_events += 1
         p.job = None
+        p.stage_left = 0       # an abandoned transfer restarts on re-match
 
     # -- matchmaking / progress -------------------------------------------
     def match(self, now_h: float) -> int:
         """Assign queued jobs to idle connected pilots. Returns #matches."""
         if self.outage:
             return 0
+        dp = self.dataplane
+        gate = dp is not None and dp.active
         n = 0
         for p in self.pilots.values():
             if not self.queue:
                 break
-            if p.idle:               # matching works; the NAT drop hits later
-                job = self.queue.popleft()
-                job.attempts += 1
-                p.job = job
-                n += 1
+            if not p.idle:
+                continue
+            if gate and not dp.eligible(p.provider):
+                continue         # origin outage: no NEW matches here
+            job = self.queue.popleft()
+            job.attempts += 1
+            p.job = job
+            n += 1
+            if dp is not None and dp.staging:
+                epoch = dp.current_epoch(p.provider)
+                if p.stage_epoch != epoch:   # CacheFlush: rotation resets
+                    p.stage_epoch = epoch
+                    p.stage_k = 0
+                ticks, hit = dp.decide(p.provider, p.stage_k)
+                p.stage_k += 1
+                p.stage_left = ticks
+                if ticks > 0 and self.recorder is not None:
+                    self.recorder.stagein_started(now_h, p.id, dp.size_gb,
+                                                  hit, p.provider)
         return n
 
     def advance(self, dt_h: float, now_h: float):
@@ -156,6 +183,14 @@ class ComputeElement:
                     self.recorder.nat_drop(now_h, p.id, p.instance_id,
                                            p.provider)
                 self.pilot_lost(p.id, now_h)
+                continue
+            if p.job is not None and p.stage_left > 0:
+                # stage-in burns the tick; the job starts after it
+                p.stage_left -= 1
+                if self.dataplane is not None:
+                    self.dataplane.staged_ticks += 1
+                if p.stage_left == 0 and self.recorder is not None:
+                    self.recorder.stagein_finished(now_h, p.id)
                 continue
             if p.job is not None:
                 j = p.job

@@ -28,9 +28,10 @@ from repro.core.campaign import (OUTAGE_AT_H, OUTAGE_DURATION_H, PAPER_RAMP,
                                  POST_OUTAGE_TARGET, RampStage, _timeline)
 from repro.core.provider import T4_FP32_TFLOPS, ProviderSpec
 from repro.core.simulator import SimConfig
-from repro.core.spec import (CampaignSpec, CEOutage, GpuSlicing,
-                             PAPER_RAMP_EVENTS, PAPER_TIMELINE, PriceCurve,
-                             WorkloadCurve,
+from repro.core.spec import (CacheFlush, CampaignSpec, CEOutage, DataOrigin,
+                             DataPlane, GpuSlicing, OriginDegrade,
+                             OriginOutage, PAPER_RAMP_EVENTS, PAPER_TIMELINE,
+                             PriceCurve, WorkloadCurve,
                              build_catalog as _spec_build_catalog,
                              paper_spec, run_solo)
 
@@ -271,6 +272,93 @@ def curve_sliced_burst(slices: int = 4) -> CampaignSpec:
                        provider=f"azure-t4/{slices}")))
 
 
+# named data-plane layouts for the paper's t4 catalog (azure/gcp/aws).
+# The paper treated jobs as pure compute; the follow-on IceCube data-
+# federation work (arXiv 2308.07999) and HEPCloud's egress accounting
+# (arXiv 1710.00100) make stage-in bandwidth, cache tiers and per-GB
+# egress first-order campaign inputs — these origin maps price them.
+DATA_PLANES: Dict[str, DataPlane] = {
+    # one well-connected origin per cloud, regional caches on the two
+    # majority providers; azure (the paper's favored pool) pays the
+    # steepest per-GB egress on misses
+    "federated": DataPlane({
+        "azure": DataOrigin(bandwidth_gbps=4.0, egress_usd_per_gb=0.087,
+                            cache_hit_rate=0.7,
+                            cache_bandwidth_gbps=16.0),
+        "gcp": DataOrigin(bandwidth_gbps=3.0, egress_usd_per_gb=0.12,
+                          cache_hit_rate=0.5, cache_bandwidth_gbps=12.0),
+        "aws": DataOrigin(bandwidth_gbps=3.0, egress_usd_per_gb=0.09),
+    }),
+    # cache-less worst case: every stage-in streams from the origin
+    # and pays egress — the upper bound on the data bill
+    "no-cache": DataPlane({
+        "azure": DataOrigin(bandwidth_gbps=4.0, egress_usd_per_gb=0.087),
+        "gcp": DataOrigin(bandwidth_gbps=3.0, egress_usd_per_gb=0.12),
+        "aws": DataOrigin(bandwidth_gbps=3.0, egress_usd_per_gb=0.09),
+    }),
+}
+
+
+def data_heavy_mix(sizes_gb: Sequence[float] = (2.0, 25.0, 100.0),
+                   plane: str = "federated") -> List[CampaignSpec]:
+    """The paper burst with per-job input data: the same campaign at
+    photon-table (~2 GB), typical-simulation (~25 GB) and raw-readout
+    (~100 GB) stage-in sizes — how fast does goodput become
+    bandwidth-bound, and what does the egress line item grow to?"""
+    return [paper_spec(name=f"data{int(s):03d}gb", job_input_gb=s,
+                       dataplane=DATA_PLANES[plane])
+            for s in sizes_gb]
+
+
+def origin_outage_grid(times_h: Sequence[float] = (60.0, 252.0),
+                       durations_h: Sequence[float] = (6.0, 24.0),
+                       provider: str = "azure",
+                       size_gb: float = 25.0) -> List[CampaignSpec]:
+    """What if the favored provider's data origin — not the CE — went
+    dark?  Pilots stay up and billed but take no new jobs until the
+    origin recovers (the data-plane mirror of :func:`outage_grid`)."""
+    return [paper_spec(
+                name=f"origin-{provider}-t{int(t)}-d{int(d)}",
+                job_input_gb=size_gb,
+                dataplane=DATA_PLANES["federated"],
+                timeline=_sorted_timeline(*PAPER_RAMP_EVENTS,
+                                          OriginOutage(t, d, provider)))
+            for t in times_h for d in durations_h]
+
+
+def egress_cost_scenarios(size_gb: float = 25.0) -> List[CampaignSpec]:
+    """The egress-bill optimization question: the same data-heavy burst
+    with and without regional caches, plus a mid-burst cache flush on
+    the favored provider — what do the cache tiers actually save, and
+    what does re-warming after a flush cost?"""
+    flush = paper_spec(
+        name="egress-flushed", job_input_gb=size_gb,
+        dataplane=DATA_PLANES["federated"],
+        timeline=_sorted_timeline(*PAPER_TIMELINE,
+                                  CacheFlush(180.0, "azure")))
+    return [paper_spec(name="egress-cached", job_input_gb=size_gb,
+                       dataplane=DATA_PLANES["federated"]),
+            paper_spec(name="egress-nocache", job_input_gb=size_gb,
+                       dataplane=DATA_PLANES["no-cache"]),
+            flush]
+
+
+def dataplane_burst() -> CampaignSpec:
+    """The full data-plane surface in one campaign — the DataPlane
+    golden (tests/data/dataplane.spec.json, pinned at seed 2021): the
+    paper burst staging 25 GB per job through the federated origin map
+    while the azure origin suffers a mid-burst outage, the aws WAN
+    degrades for the back half, and the azure cache is flushed cold
+    late in the window."""
+    return paper_spec(
+        name="dataplane-burst", job_input_gb=25.0,
+        dataplane=DATA_PLANES["federated"],
+        timeline=_sorted_timeline(*PAPER_TIMELINE,
+                                  OriginOutage(98.0, 12.0, "azure"),
+                                  OriginDegrade(168.0, 0.5, "aws"),
+                                  CacheFlush(250.0, "azure")))
+
+
 def planning_grid(price_scales: Sequence[float] = (0.8, 0.9, 1.0,
                                                    1.1, 1.25),
                   floors: Sequence[float] = (0.1, 0.2, 0.3, 0.4),
@@ -301,4 +389,7 @@ def default_suite() -> List[CampaignSpec]:
             *price_perturbations((0.8, 1.25)),
             *price_curve_scenarios(("drift-up", "azure-squeeze")),
             *workload_curve_scenarios(),
-            *gpu_slicing_variants((4,))]
+            *gpu_slicing_variants((4,)),
+            *data_heavy_mix((25.0,)),
+            *origin_outage_grid((60.0,), (6.0,)),
+            *egress_cost_scenarios()]

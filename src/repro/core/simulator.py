@@ -29,6 +29,7 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.core.budget import BudgetLedger
+from repro.core.dataplane import DataPlane, DataPlaneRuntime
 from repro.core.overlay import ComputeElement, Job
 from repro.core.provider import T4_FP32_TFLOPS, ProviderSpec
 from repro.core.provisioner import MultiCloudProvisioner
@@ -48,6 +49,8 @@ class SimConfig:
     min_queue: int = 4000               # CE queue top-up level per tick
     engine: str = "array"               # "array" (vectorized) | "object"
     spot: bool = True                   # spot (default) vs on-demand pricing
+    job_input_gb: float = 0.0           # staged in before a job starts ...
+    dataplane: Optional[DataPlane] = None  # ... against these origins
 
     @classmethod
     def from_spec(cls, spec, seed: int,
@@ -70,6 +73,8 @@ class SimConfig:
                    accel_tflops=spec.accel_tflops,
                    overhead_per_day=spec.overhead_per_day,
                    min_queue=spec.min_queue, spot=spec.spot,
+                   job_input_gb=getattr(spec, "job_input_gb", 0.0),
+                   dataplane=getattr(spec, "dataplane", None),
                    engine=engine or cls.engine)
 
 
@@ -93,13 +98,20 @@ class CloudSimulator:
         self.engine_kind = engine or cfg.engine
         # recorder: optional events.TraceRecorder collecting the typed
         # instance/pilot/job event stream (spec.run_solo(collect="trace"))
+        self.recorder = recorder
+        # always constructed (empty plane when the spec has none) so the
+        # OriginOutage/OriginDegrade/CacheFlush timeline ops land
+        # identically — as no-ops — on dataplane-less campaigns too
+        self.dataplane = DataPlaneRuntime(cfg.dataplane, cfg.job_input_gb,
+                                          cfg.dt_h)
         if self.engine_kind == "array":
             from repro.core.fleet import ArrayFleetEngine
             self.fleet = ArrayFleetEngine(
                 catalog, self.ledger, self.rng,
                 lease_interval_s=cfg.lease_interval_s, spot=cfg.spot,
                 job_wall_h=cfg.job_wall_h,
-                job_checkpoint_h=cfg.job_checkpoint_h, recorder=recorder)
+                job_checkpoint_h=cfg.job_checkpoint_h, recorder=recorder,
+                dataplane=self.dataplane)
             self.prov = self.fleet.prov
             self.ce = self.fleet.ce
         elif self.engine_kind == "object":
@@ -108,7 +120,8 @@ class CloudSimulator:
                                               spot=cfg.spot,
                                               recorder=recorder)
             self.ce = ComputeElement(lease_interval_s=cfg.lease_interval_s,
-                                     recorder=recorder)
+                                     recorder=recorder,
+                                     dataplane=self.dataplane)
         else:
             raise ValueError(f"unknown engine {self.engine_kind!r}")
         self.now = 0.0
@@ -217,6 +230,9 @@ class CloudSimulator:
             running = self.prov.total_running()
             busy = self.ce.stats()["pilots_busy"]
             busy_by_prov = self.ce.busy_by_provider()
+        # cache-miss egress lands right after the GPU-hour charges and
+        # before the overhead line — the engine-shared billing order
+        self.dataplane.bill(self.ledger, self.now, self.recorder)
         if self.cfg.overhead_per_day > 0:
             self.ledger.charge("infra", self.cfg.overhead_per_day * dt / 24.0,
                                self.now, note="CE VM, storage, egress")
@@ -276,4 +292,5 @@ class CloudSimulator:
             "jobs_finished": len(self.ce.finished),
             "budget": self.ledger.report(),
             "by_provider": self.prov.running_by_provider(),
+            **self.dataplane.results(),
         }

@@ -41,6 +41,9 @@ from dataclasses import asdict, dataclass, field, fields, replace
 from typing import Dict, List, Mapping, Optional, Tuple
 
 from repro.core import timeline as timeline_registry
+# the data-plane surface (PR 8): per-provider origins, stage-in, cache
+# tiers, egress billing — re-exported because specs import them as spec.*
+from repro.core.dataplane import DataOrigin, DataPlane  # noqa: F401
 from repro.core.events import CampaignTrace, TraceRecorder, build_trace
 from repro.core.provider import (T4_FP32_TFLOPS, ProviderSpec, RegionSpec,
                                  heterogeneous_catalog, slice_provider,
@@ -51,7 +54,8 @@ from repro.core.simulator import CloudSimulator, SimConfig
 # re-exported here because specs, goldens and tests import them as
 # spec.* since PR 3
 from repro.core.timeline import (EVENT_KINDS, BudgetFloor,  # noqa: F401
-                                 CapacityShift, CEOutage, Event,
+                                 CacheFlush, CapacityShift, CEOutage,
+                                 Event, OriginDegrade, OriginOutage,
                                  PriceCurve, PriceShift, SetTarget,
                                  WorkloadCurve, event_from_dict,
                                  event_to_dict, lint_timeline,
@@ -125,6 +129,11 @@ class CampaignSpec:
     # whole-GPU accounting, the paper's mode)
     gpu_slicing: Optional[GpuSlicing] = None
     timeline: Tuple[Event, ...] = PAPER_TIMELINE
+    # data plane (PR 8): per-job input size staged in before compute
+    # starts, against the per-provider origins declared below (None =
+    # pure-compute jobs, the paper's mode)
+    job_input_gb: float = 0.0
+    dataplane: Optional[DataPlane] = None
 
     def to_spec(self) -> "CampaignSpec":
         """Duck-typed coercion hook shared with the Scenario shim."""
@@ -145,6 +154,22 @@ class CampaignSpec:
                     f"got {self.gpu_slicing!r}")
             if self.gpu_slicing.slices < 1:
                 raise ValueError("gpu_slicing.slices must be >= 1")
+        if self.job_input_gb < 0:
+            raise ValueError("job_input_gb must be >= 0")
+        if self.dataplane is not None:
+            if not isinstance(self.dataplane, DataPlane):
+                raise ValueError(
+                    f"dataplane must be a DataPlane, got {self.dataplane!r}")
+            for name, o in self.dataplane.origins:
+                if o.bandwidth_gbps <= 0:
+                    raise ValueError(
+                        f"origin {name!r} needs a positive bandwidth_gbps")
+                if o.egress_usd_per_gb < 0 or o.cache_bandwidth_gbps < 0:
+                    raise ValueError(
+                        f"origin {name!r} has a negative price/bandwidth")
+                if not 0.0 <= o.cache_hit_rate <= 1.0:
+                    raise ValueError(
+                        f"origin {name!r} cache_hit_rate outside [0, 1]")
         for ev in self.timeline:
             validate_event(ev)
         return self
@@ -166,6 +191,14 @@ class CampaignSpec:
                      else p.nat_idle_timeout_s} for p in v]
             elif f.name == "gpu_slicing":
                 d[f.name] = None if v is None else asdict(v)
+            elif f.name == "dataplane":
+                # omitted at default so pre-data-plane goldens stay
+                # byte-identical
+                if v is not None:
+                    d[f.name] = v.to_dict()
+            elif f.name == "job_input_gb":
+                if v != 0.0:
+                    d[f.name] = v
             else:
                 d[f.name] = v
         return d
@@ -188,6 +221,9 @@ class CampaignSpec:
         if d.get("timeline") is not None:
             d["timeline"] = tuple(event_from_dict(ev)
                                   for ev in d["timeline"])
+        if d.get("dataplane") is not None and not isinstance(
+                d["dataplane"], DataPlane):
+            d["dataplane"] = DataPlane.from_dict(d["dataplane"])
         if d.get("gpu_slicing") is not None:
             g = dict(d["gpu_slicing"])
             if g.get("providers") is not None:
@@ -360,6 +396,40 @@ def lint_spec(spec: CampaignSpec) -> List[str]:
                 if base is not None and name not in base:
                     out.append(f"gpu_slicing names unknown provider "
                                f"{name!r}")
+    if spec.job_input_gb < 0:
+        out.append(f"negative job_input_gb {spec.job_input_gb}")
+    dp = spec.dataplane
+    if dp is not None:
+        for name, o in dp.origins:
+            if o.bandwidth_gbps <= 0:
+                out.append(f"origin {name!r} bandwidth_gbps must be "
+                           f"positive, got {o.bandwidth_gbps}")
+            if o.egress_usd_per_gb < 0:
+                out.append(f"origin {name!r} has a negative "
+                           f"egress_usd_per_gb")
+            if o.cache_bandwidth_gbps < 0:
+                out.append(f"origin {name!r} has a negative "
+                           f"cache_bandwidth_gbps")
+            if not 0.0 <= o.cache_hit_rate <= 1.0:
+                out.append(f"origin {name!r} cache_hit_rate "
+                           f"{o.cache_hit_rate} outside [0, 1]")
+            if known_providers is not None:
+                bases = {p.split("/", 1)[0] for p in known_providers}
+                if name not in known_providers and name not in bases:
+                    out.append(f"dataplane names unknown provider "
+                               f"{name!r}")
+        if spec.job_input_gb == 0.0 and not any(
+                o.egress_usd_per_gb > 0 for _, o in dp.origins):
+            out.append("dataplane declared but job_input_gb is 0 and no "
+                       "origin charges egress: the data plane is inert")
+    else:
+        dead = sorted({type(ev).kind for ev in spec.timeline
+                       if type(ev).kind in ("origin_outage",
+                                            "origin_degrade",
+                                            "cache_flush")})
+        for kind in dead:
+            out.append(f"timeline has {kind!r} events but the spec "
+                       "declares no dataplane: they will never matter")
     # per-event rules are registry-derived: every registered kind
     # declares its own lint in core/timeline.py
     out.extend(lint_timeline(spec.timeline, spec.duration_h,
@@ -439,6 +509,15 @@ class TimelineController:
     def set_workload_factor(self, factor: float):
         self.sim.workload_factor = factor
 
+    def set_origin_outage(self, provider: str, on: bool):
+        self.sim.dataplane.set_outage(provider, on)
+
+    def degrade_origin(self, provider: str, factor: float):
+        self.sim.dataplane.degrade_origin(provider, factor)
+
+    def flush_cache(self, provider: str):
+        self.sim.dataplane.flush_cache(provider)
+
     # -- the budget tripwire ----------------------------------------------
     def _on_budget_alert(self, frac, remaining, rate_per_day):
         self.log.append(
@@ -510,7 +589,8 @@ class BudgetReport:
 _RESULT_KEYS = ("accel_hours", "accel_days", "busy_hours",
                 "busy_hours_by_provider", "eflop_hours_fp32", "cost",
                 "cost_per_accel_day", "preemptions", "nat_drops",
-                "jobs_finished", "budget", "by_provider")
+                "jobs_finished", "egress_usd", "stagein_hours",
+                "cache_hit_fraction", "budget", "by_provider")
 
 
 @dataclass(frozen=True)
@@ -528,6 +608,9 @@ class CampaignResult(MappingABC):
     preemptions: int
     nat_drops: int
     jobs_finished: int
+    egress_usd: float
+    stagein_hours: float
+    cache_hit_fraction: float
     budget: BudgetReport
     by_provider: Mapping[str, int]
     # provenance (not part of the legacy results mapping)

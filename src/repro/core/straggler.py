@@ -39,10 +39,16 @@ class SpeculativeScheduler:
 
 @dataclass
 class StragglerMonitor:
-    """Per-pod step-time EWMA for synchronous training."""
+    """Per-pod step-time EWMA for synchronous training.
+
+    ``min_pods`` is the eviction floor: shrinking below it would stall
+    the whole SPMD job, so :meth:`stragglers` proposes at most
+    ``active - min_pods`` evictions (slowest first) and :meth:`evict`
+    refuses (returns False) rather than cross the floor."""
     evict_factor: float = 1.5
     ewma_alpha: float = 0.2
     min_steps: int = 10
+    min_pods: int = 1
     times: Dict[str, float] = field(default_factory=dict)   # pod -> ewma
     counts: Dict[str, int] = field(default_factory=dict)
     evicted: List[str] = field(default_factory=list)
@@ -52,6 +58,9 @@ class StragglerMonitor:
         self.times[pod_id] = step_s if prev is None else \
             (1 - self.ewma_alpha) * prev + self.ewma_alpha * step_s
         self.counts[pod_id] = self.counts.get(pod_id, 0) + 1
+
+    def active_pods(self) -> List[str]:
+        return [p for p in self.times if p not in self.evicted]
 
     def fleet_median(self) -> Optional[float]:
         vals = [v for k, v in self.times.items() if k not in self.evicted]
@@ -67,8 +76,18 @@ class StragglerMonitor:
                 continue
             if t > self.evict_factor * med:
                 out.append(pod)
-        return out
+        # never propose shrinking below the floor: slowest first, at
+        # most (active - min_pods) of them
+        room = max(0, len(self.active_pods()) - self.min_pods)
+        out.sort(key=lambda p: self.times[p], reverse=True)
+        return out[:room]
 
-    def evict(self, pod_id: str):
-        if pod_id not in self.evicted:
-            self.evicted.append(pod_id)
+    def evict(self, pod_id: str) -> bool:
+        """Evict ``pod_id`` unless already evicted, unknown, or the
+        active fleet is at the ``min_pods`` floor; True if evicted."""
+        if pod_id in self.evicted or pod_id not in self.times:
+            return False
+        if len(self.active_pods()) <= self.min_pods:
+            return False
+        self.evicted.append(pod_id)
+        return True

@@ -173,6 +173,26 @@ class _LaneOps:
         # product + truncation the solo sim computes per tick
         eng.lane_min_queue_eff[b] = int(eng.lane_min_queue[b] * factor)
 
+    # -- data-plane ops (spec.OriginOutage/OriginDegrade/CacheFlush);
+    #    keyed by base provider, exactly like DataPlaneRuntime ----------
+    def set_origin_outage(self, provider: str, on: bool):
+        eng, b = self.eng, self.b
+        gs = eng._dp_groups_by_base.get(str(provider).split("/", 1)[0])
+        if gs is not None:
+            eng.stage_elig_lg[b * eng.G + gs] = not bool(on)
+
+    def degrade_origin(self, provider: str, factor: float):
+        eng, b = self.eng, self.b
+        gs = eng._dp_groups_by_base.get(str(provider).split("/", 1)[0])
+        if gs is not None:
+            eng.dp_degrade_lg[b * eng.G + gs] *= float(factor)
+
+    def flush_cache(self, provider: str):
+        eng, b = self.eng, self.b
+        gs = eng._dp_groups_by_base.get(str(provider).split("/", 1)[0])
+        if gs is not None:
+            eng.dp_epoch_lg[b * eng.G + gs] += 1
+
 
 def _prepare(sc, seed: int) -> Tuple[tuple, _Lane]:
     sc = sc.to_spec().validate()      # CampaignSpec or Scenario shim
@@ -184,7 +204,11 @@ def _prepare(sc, seed: int) -> Tuple[tuple, _Lane]:
     key = (sc.dt_h, sc.duration_h, tuple(
         (p.name, r.name, r.capacity, r.preempt_rate_per_hour,
          r.preempt_scale_at_full, p.nat_idle_timeout_s, p.fp32_tflops)
-        for p, r in pairs))
+        for p, r in pairs),
+        # stage geometry must be lane-identical: ticks-per-transfer and
+        # the per-group origin config are batch-level constants (the
+        # per-lane outage/degrade/epoch *state* still varies freely)
+        getattr(sc, "job_input_gb", 0.0), getattr(sc, "dataplane", None))
     return key, _Lane(sc, seed, pairs)
 
 
@@ -277,6 +301,51 @@ class BatchedFleetEngine:
                             if n == name], dtype=np.int64)
             for name in self.providers}
 
+        # -- data plane (config is batch-identical by key; outage /
+        #    degrade / epoch state varies per lane) ----------------------
+        dp = getattr(ref.spec, "dataplane", None)
+        self.dp_size = float(getattr(ref.spec, "job_input_gb", 0.0))
+        self.dp_active = dp is not None and bool(dp.origins)
+        self.dp_staging = self.dp_active and self.dp_size > 0.0
+        base_g = [n.split("/", 1)[0] for n in self.g_provider]
+        origins_g = [dp.origin_for(n) if dp is not None else None
+                     for n in self.g_provider]
+        self.dp_has_g = np.array([o is not None for o in origins_g])
+        self.dp_rate_g = np.array([o.cache_hit_rate if o else 0.0
+                                   for o in origins_g])
+        self.dp_bw_g = np.array([o.bandwidth_gbps if o else 0.0
+                                 for o in origins_g])
+        self.dp_cbw_g = np.array([o.cache_bandwidth_gbps if o else 0.0
+                                  for o in origins_g])
+        # egress meters by BASE provider (sliced pools share their base's
+        # origin), drained in sorted-name order like DataPlaneRuntime.bill
+        self.dp_base_names = sorted(
+            {base_g[g] for g in range(G) if origins_g[g] is not None})
+        nb = max(1, len(self.dp_base_names))
+        self.dp_price_base = np.array(
+            [dp.origin_for(nm).egress_usd_per_gb
+             for nm in self.dp_base_names]) if self.dp_base_names \
+            else np.zeros(0)
+        self.dp_baseidx_g = np.array(
+            [self.dp_base_names.index(base_g[g])
+             if origins_g[g] is not None else -1 for g in range(G)],
+            dtype=np.int64)
+        self._dp_groups_by_base = {}
+        for g, bg in enumerate(base_g):
+            self._dp_groups_by_base.setdefault(bg, []).append(g)
+        self._dp_groups_by_base = {k: np.array(v, dtype=np.int64)
+                                   for k, v in
+                                   self._dp_groups_by_base.items()}
+        self.stage_elig_lg = np.ones(self.LG, dtype=bool)
+        self.dp_degrade_lg = np.ones(self.LG)
+        self.dp_epoch_lg = np.zeros(self.LG, dtype=np.int64)
+        self.dp_pending = np.zeros((B, nb), dtype=np.int64)
+        self.dp_spent_by_base = np.zeros((B, nb))
+        self.dp_egress_usd = np.zeros(B)
+        self.dp_hits = np.zeros(B, dtype=np.int64)
+        self.dp_misses = np.zeros(B, dtype=np.int64)
+        self.staged_l = np.zeros(B, dtype=np.int64)
+
         # -- per-lane RNG/counters/state ---------------------------------
         self.rngs = [np.random.default_rng(ln.seed) for ln in self.lanes]
         self.inst_ctr = np.zeros(B, dtype=np.int64)
@@ -342,6 +411,12 @@ class BatchedFleetEngine:
         self.i_wall = np.zeros(cap)
         self.i_jid = np.zeros(cap, dtype=np.int64)
         self.alive = np.zeros(cap, dtype=bool)
+        # data-plane stage-in state per row: ticks left on the current
+        # transfer, the pilot's cache-hit rotation counter, and the
+        # CacheFlush epoch that counter belongs to
+        self.i_stage = np.zeros(cap, dtype=np.int64)
+        self.i_stage_k = np.zeros(cap, dtype=np.int64)
+        self.i_stage_epoch = np.zeros(cap, dtype=np.int64)
 
         # -- incremental hot-loop state -----------------------------------
         # live instance count per (lane, group); the single source the
@@ -386,7 +461,10 @@ class BatchedFleetEngine:
                 exact = False
                 break
             t_probe = nxt
-        self.scheduled_completion = exact and not self.nat_possible
+        # stage-in delays a matched job's start, so completion ticks are
+        # no longer known at match time — staging batches take the walk
+        self.scheduled_completion = exact and not self.nat_possible \
+            and not self.dp_staging
         self._tick_idx = 0
         self._fin_buckets: Dict[int, list] = {}
 
@@ -425,7 +503,8 @@ class BatchedFleetEngine:
                            ("i_pilot", 0), ("i_pilot_order", 0),
                            ("i_job", -1), ("i_done", 0), ("i_done0", 0),
                            ("i_match_t", 0), ("i_gen", 0), ("i_wall", 0),
-                           ("i_jid", 0), ("alive", False)):
+                           ("i_jid", 0), ("alive", False), ("i_stage", 0),
+                           ("i_stage_k", 0), ("i_stage_epoch", 0)):
             a = getattr(self, name)
             out = np.full(new, fill, dtype=a.dtype)
             out[:self.n] = a[:self.n]
@@ -482,6 +561,9 @@ class BatchedFleetEngine:
         self.i_pilot[s] = _NO_PILOT
         self.i_pilot_order[s] = 0
         self.i_job[s] = -1
+        self.i_stage[s] = 0
+        self.i_stage_k[s] = 0
+        self.i_stage_epoch[s] = 0
         self.alive[s] = True
         rows = np.arange(self.n, self.n + total,
                          dtype=np.int32)
@@ -626,6 +708,7 @@ class BatchedFleetEngine:
             self._busy_cand = _sorted_remove(self._busy_cand,
                                              np.sort(rows))
         self.j_done[jr] = checkpoint_floor(prog, self.j_ckpt[jr])
+        self.i_stage[rows] = 0   # an abandoned transfer restarts on re-match
         self._busy_lg -= np.bincount(self.i_lg[rows], minlength=self.LG)
         counts = np.bincount(lanes, minlength=self.B)
         rank = segment_ranks(lanes, counts)
@@ -792,6 +875,17 @@ class BatchedFleetEngine:
         key |= self.i_pilot_order[rows].astype(np.int64)
         order = np.argsort(key, kind="stable")
         rows, lanes = rows[order], lanes[order]
+        hold = None
+        if self.dp_active:
+            # origin outage gates NEW matches; gated pilots stay in the
+            # idle set (the solo engines skip them in pilot order)
+            em = self.stage_elig_lg[self.i_lg[rows]]
+            if not em.all():
+                hold = rows[~em]
+                rows, lanes = rows[em], lanes[em]
+                if not len(rows):
+                    self._idle_cand = hold
+                    return
         counts = np.bincount(lanes, minlength=self.B)
         k = np.minimum(counts, self.q_len + self.fresh_q)
         k[self.outage] = 0
@@ -825,14 +919,67 @@ class BatchedFleetEngine:
         self.fresh_matched += k2
         self.fresh_q -= k2
         self._busy_lg += np.bincount(self.i_lg[mrows], minlength=self.LG)
-        self._idle_cand = rows[~sel]
+        self._idle_cand = rows[~sel] if hold is None \
+            else np.concatenate([rows[~sel], hold])
         self.i_match_t[mrows] = now
+        if self.dp_staging and len(mrows):
+            self._stage_matches(mrows, now)
         if self.scheduled_completion:
             self._schedule_finish(mrows)
         else:
             self.i_done[mrows] = self.i_done0[mrows]
             self._busy_cand = _sorted_insert(self._busy_cand,
                                              np.sort(mrows))
+
+    def _stage_matches(self, mrows: np.ndarray, now: float):
+        """Vectorized ``DataPlaneRuntime.decide`` for this tick's
+        matches: per-pilot cache-hit rotation, stage length in whole
+        ticks, and per-(lane, base) egress-miss metering — the same
+        scalar float expressions as core/dataplane.py, elementwise."""
+        lgm = self.i_lg[mrows]
+        g = lgm % self.G
+        has = self.dp_has_g[g]          # groups without an origin: no-op
+        if not has.any():
+            return
+        rws = mrows[has]
+        lgs = lgm[has]
+        gs = g[has]
+        bs = lgs // self.G
+        ep = self.dp_epoch_lg[lgs]
+        reset = self.i_stage_epoch[rws] != ep     # CacheFlush: k resets
+        if reset.any():
+            self.i_stage_k[rws[reset]] = 0
+            self.i_stage_epoch[rws[reset]] = ep[reset]
+        k = self.i_stage_k[rws].astype(np.float64)
+        r = self.dp_rate_g[gs]
+        # int((k+1)*r) > int(k*r) with k, r >= 0: floor == trunc
+        hit = np.floor((k + 1.0) * r) > np.floor(k * r)
+        self.i_stage_k[rws] += 1
+        gbps = np.where(hit,
+                        np.where(self.dp_cbw_g[gs] > 0.0,
+                                 self.dp_cbw_g[gs], self.dp_bw_g[gs]),
+                        self.dp_bw_g[gs] * self.dp_degrade_lg[lgs])
+        # stage_ticks(): 0 when gbps <= 0 (a fully-degraded origin)
+        hours = self.dp_size * 8.0 / np.where(gbps > 0.0, gbps, 1.0) \
+            / 3600.0
+        ticks = np.where(
+            gbps > 0.0,
+            np.maximum(1, np.ceil(hours / self.dt - 1e-9)
+                       .astype(np.int64)), 0)
+        self.i_stage[rws] = ticks
+        self.dp_hits += np.bincount(bs[hit], minlength=self.B)
+        miss = ~hit
+        self.dp_misses += np.bincount(bs[miss], minlength=self.B)
+        np.add.at(self.dp_pending,
+                  (bs[miss], self.dp_baseidx_g[gs[miss]]), 1)
+        if self.recorders is not None:
+            hitl = hit.tolist()
+            tickl = ticks.tolist()
+            for j, row in enumerate(rws.tolist()):
+                if tickl[j] > 0:      # zero-tick stages are not events
+                    self.recorders[int(bs[j])].stagein_started(
+                        now, self.i_pilot_order[row] + 1, self.dp_size,
+                        hitl[j], self.g_provider[int(gs[j])])
 
     def _schedule_finish(self, mrows: np.ndarray):
         """Bucket matched rows by their (known) completion tick.  The
@@ -918,12 +1065,35 @@ class BatchedFleetEngine:
             return
         if len(rows) != int(self._busy_lg.sum()):     # cheap invariant
             raise AssertionError("busy-count bookkeeping diverged")
-        done = self.i_done[rows] + dt
-        self.i_done[rows] = done
-        fin = done >= self.i_wall[rows]
+        prows = rows
+        if self.dp_staging:
+            # stage-in burns the tick; the job progresses from the next
+            staging = self.i_stage[rows] > 0
+            if staging.any():
+                srows = rows[staging]
+                self.i_stage[srows] -= 1
+                self.staged_l += np.bincount(
+                    self.i_lg[srows] // self.G, minlength=self.B)
+                if self.recorders is not None:
+                    done_s = srows[self.i_stage[srows] == 0]
+                    if len(done_s):
+                        lanes = self.i_lg[done_s] // self.G
+                        order = np.lexsort(
+                            (self.i_pilot_order[done_s], lanes))
+                        for row in done_s[order].tolist():
+                            b = int(self.i_lg[row]) // self.G
+                            self.recorders[b].stagein_finished(
+                                now, self.i_pilot_order[row] + 1)
+                prows = rows[~staging]
+                if not len(prows):
+                    return
+        done = self.i_done[prows] + dt
+        self.i_done[prows] = done
+        fin = done >= self.i_wall[prows]
         if fin.any():
-            self._finish_rows(rows[fin], now)
-            self._busy_cand = rows[~fin]       # compress keeps sort
+            self._finish_rows(prows[fin], now)
+            # staging rows must stay busy: remove only the finished rows
+            self._busy_cand = _sorted_remove(rows, prows[fin])
 
     def _bill(self, now: float):
         """Lock-step billing: every billable row accrued the same scalar
@@ -937,6 +1107,26 @@ class BatchedFleetEngine:
             amt_bg = (counts * dh * self.rate_h_lg).reshape(self.B, self.G)
             self.by_provider[:, :self.Pn] += amt_bg @ self.prov_onehot
             self.spent += amt_bg.sum(axis=1)
+        if self.dp_active and self.dp_pending.any():
+            # drain this tick's cache-miss egress right after the
+            # GPU-hour charges, per base provider in sorted-name order —
+            # the solo DataPlaneRuntime.bill contract, vectorized
+            for j, base in enumerate(self.dp_base_names):
+                cnt = self.dp_pending[:, j]
+                if not cnt.any():
+                    continue
+                gb = self.dp_size * cnt
+                usd = gb * self.dp_price_base[j]
+                self.dp_egress_usd += usd
+                chg = usd > 0.0
+                if chg.any():
+                    self.spent += np.where(chg, usd, 0.0)
+                    self.dp_spent_by_base[:, j] += np.where(chg, usd, 0.0)
+                if self.recorders is not None:
+                    for b in np.nonzero(cnt > 0)[0].tolist():
+                        self.recorders[b].egress_billed(
+                            now, base, float(gb[b]), float(usd[b]))
+            self.dp_pending[:] = 0
         self._billed_to = now
         self._died_lg[:] = 0
         self._created_lg[:] = 0
@@ -964,7 +1154,7 @@ class BatchedFleetEngine:
         for name in ("i_lg", "i_id", "i_start", "i_end", "i_preempted",
                      "i_pilot", "i_pilot_order", "i_job", "i_done",
                      "i_done0", "i_match_t", "i_gen", "i_wall", "i_jid",
-                     "alive"):
+                     "alive", "i_stage", "i_stage_k", "i_stage_epoch"):
             arr = getattr(self, name)
             arr[:len(keep)] = arr[keep]
         self.n = len(keep)
@@ -1112,11 +1302,18 @@ class BatchedFleetEngine:
                 for name, h in busy_by_prov.items()) * 1e12 / 1e18
         spent = float(self.spent[b])
         budget = float(self.lane_budget[b])
-        ledger_by_prov = {}
+        raw_by_prov: Dict[str, float] = {}
         for pidx, name in enumerate(self.providers + ["infra"]):
             v = float(self.by_provider[b, pidx])
             if v > 0:
-                ledger_by_prov[name] = round(v, 2)
+                raw_by_prov[name] = v
+        # egress lands under the BASE provider name, merged before
+        # rounding — matching the solo ledger's per-provider totals
+        for j, base in enumerate(self.dp_base_names):
+            e = float(self.dp_spent_by_base[b, j])
+            if e > 0:
+                raw_by_prov[base] = raw_by_prov.get(base, 0.0) + e
+        ledger_by_prov = {k: round(v, 2) for k, v in raw_by_prov.items()}
         running = self.live_lg.reshape(self.B, self.G)[b]
         by_provider: Dict[str, int] = {}
         for g, name in enumerate(self.g_provider):
@@ -1135,6 +1332,12 @@ class BatchedFleetEngine:
             "preemptions": int(self.preemptions[b]),
             "nat_drops": int(self.nat_drops[b]),
             "jobs_finished": int(self.finished[b]),
+            "egress_usd": round(float(self.dp_egress_usd[b]), 2),
+            "stagein_hours": round(int(self.staged_l[b]) * self.dt, 1),
+            "cache_hit_fraction": round(
+                int(self.dp_hits[b])
+                / (int(self.dp_hits[b]) + int(self.dp_misses[b])), 4)
+            if int(self.dp_hits[b]) + int(self.dp_misses[b]) else 0.0,
             "budget": {
                 "total_spent": round(spent, 2),
                 "by_provider": dict(sorted(ledger_by_prov.items())),

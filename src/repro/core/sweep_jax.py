@@ -102,6 +102,19 @@ class JaxLaneOps:
         self._prov_groups = {}
         for g, name in enumerate(self.g_provider):
             self._prov_groups.setdefault(name, []).append(g)
+        # data-plane planner state (spec.dataplane): per-group origin
+        # up/down for match gating and the cumulative miss-bandwidth
+        # degrade factor the per-segment stage lengths are derived from
+        self.origin_up = np.ones(G, dtype=bool)
+        self.dp_degrade = np.ones(G)
+        self.flush_edge = np.zeros(G, dtype=bool)
+        self._dp_groups_by_base = {}
+        for g, name in enumerate(self.g_provider):
+            self._dp_groups_by_base.setdefault(
+                name.split("/", 1)[0], []).append(g)
+        self._dp_groups_by_base = {
+            k: np.array(v, dtype=np.int64)
+            for k, v in self._dp_groups_by_base.items()}
 
     def rate_h(self) -> np.ndarray:
         """Effective $/h per group — the engines' shared expression
@@ -138,6 +151,28 @@ class JaxLaneOps:
 
     def set_workload_factor(self, factor: float):
         self.min_queue_eff = int(self.min_queue * factor)
+
+    # -- data-plane ops (spec.OriginOutage/OriginDegrade/CacheFlush).
+    #    Outage and degrade become per-segment parameter planes; a
+    #    CacheFlush becomes a per-segment edge flag the scan folds into
+    #    the first-stage-miss ("virgin") pool: the row engines' lazy
+    #    epoch reset makes every live pilot's NEXT stage-in a forced
+    #    miss, which the mixture model reproduces by marking the whole
+    #    live population of the flushed provider's groups virgin.
+    def set_origin_outage(self, provider: str, on: bool):
+        gs = self._dp_groups_by_base.get(str(provider).split("/", 1)[0])
+        if gs is not None:
+            self.origin_up[gs] = not bool(on)
+
+    def degrade_origin(self, provider: str, factor: float):
+        gs = self._dp_groups_by_base.get(str(provider).split("/", 1)[0])
+        if gs is not None:
+            self.dp_degrade[gs] *= float(factor)
+
+    def flush_cache(self, provider: str):
+        gs = self._dp_groups_by_base.get(str(provider).split("/", 1)[0])
+        if gs is not None:
+            self.flush_edge[gs] = True
 
 
 # -- the jitted tick scan --------------------------------------------------
@@ -196,8 +231,10 @@ def _poisson(u, lam):
                      jnp.maximum(k_norm, 0.0).astype(jnp.int32), kk)
 
 
-@functools.partial(jax.jit, static_argnames=("nat_any", "use_pallas"))
-def _scan_campaigns(planes, consts, xs, *, nat_any, use_pallas):
+@functools.partial(jax.jit, static_argnames=("nat_any", "use_pallas",
+                                             "dp_gating", "dp_staging"))
+def _scan_campaigns(planes, consts, xs, *, nat_any, use_pallas,
+                    dp_gating=False, dp_staging=False):
     """One jitted lax.scan over all N ticks of B lock-step lanes.
 
     The tick phases mirror ``BatchedFleetEngine.tick`` (see that
@@ -247,6 +284,14 @@ def _scan_campaigns(planes, consts, xs, *, nat_any, use_pallas):
         rate_g = planes["rate"][seg]                         # [B,G] f32
         live0 = idle + pdead + busy.sum(axis=2)              # [B,G] i32
         live_g = live0
+        virgin = c["virgin"]
+        if dp_staging:
+            # a CacheFlush edge marks the flushed provider's whole live
+            # population virgin: the lazy epoch reset in the row engines
+            # forces every pilot's next stage-in to miss
+            virgin = jnp.where(
+                jnp.logical_and(is_start, planes["dp_flush"][seg]),
+                live0.astype(jnp.float32), virgin)
 
         # 1. events: the deferred budget cap first (solo at(now) order),
         # then this segment's net scale target (uncapped/capped pair)
@@ -272,12 +317,18 @@ def _scan_campaigns(planes, consts, xs, *, nat_any, use_pallas):
         pre_ct = c["pre_ct"] + kb.sum(axis=(1, 2))
         lv = c["lv"] + requeue_levels(kb)
         live_g = live_g - ki - kp - kb.sum(axis=2)
+        if dp_staging:                     # kills hit virgins pro rata
+            virgin = virgin * live_g.astype(jnp.float32) \
+                / jnp.maximum(1.0, live0.astype(jnp.float32))
 
         # 3. spawn to min(target, capacity); fresh pilots arrive idle
         deficit = jnp.clip(jnp.minimum(target_g, cap_g) - live_g,
                            0, None)
         idle = idle + deficit
         live_g = live_g + deficit
+        if dp_staging:                     # fresh pilots stage cold
+            virgin = virgin + deficit.astype(jnp.float32)
+            live_sp = live_g
 
         # 4. preemption sampling: per-lane threefry keyed by the tick,
         # a Poisson total per (lane, group) from the shared fleet
@@ -293,6 +344,9 @@ def _scan_campaigns(planes, consts, xs, *, nat_any, use_pallas):
         pre_ct = pre_ct + kb.sum(axis=(1, 2))
         lv = lv + requeue_levels(kb)
         live_g = live_g - ki - kp - kb.sum(axis=2)
+        if dp_staging:
+            virgin = virgin * live_g.astype(jnp.float32) \
+                / jnp.maximum(1.0, live_sp.astype(jnp.float32))
 
         # 5/6. top the CE queue up to the workload level
         ring_tot = lv.sum(axis=1)
@@ -303,11 +357,17 @@ def _scan_campaigns(planes, consts, xs, *, nat_any, use_pallas):
         # first (highest checkpoint level first), then fresh jobs; the
         # matcher splits k across groups by idle-pilot counts and the
         # joint (group x queue-slice) pairing is the overlap of the two
-        # cumulative partitions of [0, k)
-        idle_tot = idle.sum(axis=1)
+        # cumulative partitions of [0, k).  Origin outages remove the
+        # gated groups' idle pilots from the matcher's input (they stay
+        # idle and billed, exactly like the row engines' skip).
+        if dp_gating:
+            idle_m = idle * planes["origin_up"][seg]
+        else:
+            idle_m = idle
+        idle_tot = idle_m.sum(axis=1)
         k = jnp.minimum(idle_tot, ring_tot + fresh_q)
         k = jnp.where(planes["outage"][seg], 0, k)
-        take_g = match_fn(idle, k)                           # [B,G]
+        take_g = match_fn(idle_m, k)                         # [B,G]
         avail = jnp.concatenate([lv[:, ::-1], fresh_q[:, None]], axis=1)
         cumq = jnp.cumsum(avail, axis=1)
         take_j = jnp.clip(k[:, None] - (cumq - avail), 0, avail)
@@ -317,7 +377,50 @@ def _scan_campaigns(planes, consts, xs, *, nat_any, use_pallas):
                          (cB - take_j)[:, None, :])
         hi = jnp.minimum(cA[:, :, None], cB[:, None, :])
         joint = jnp.clip(hi - lo, 0, None).astype(jnp.float32)
-        busy = busy + jnp.matmul(joint, M_jw).astype(jnp.int32)
+        if dp_staging:
+            # stage-in as a count-axis front extension: a matched job
+            # enters at S_max + w0 - S and reaches its old entry step
+            # after S staging ticks.  The hit/miss split is the
+            # deterministic per-(lane, group) fractional accumulator —
+            # the mixture analogue of the row engines' per-pilot
+            # rotation (long-run hit frequency exactly r, no RNG).
+            # Each virgin (freshly spawned or freshly flushed) pilot
+            # restarts its rotation at k=0, losing the fractional hit
+            # credit a mid-rotation pilot carries — expected deficit
+            # E[frac(n*r)] per reset (dp_loss_g) — charged the tick the
+            # virgin first matches.
+            take_f = take_g.astype(jnp.float32)
+            first_f = jnp.minimum(take_f, virgin)
+            virgin = virgin - first_f
+            acc = c["hit_acc"] + take_f * consts["dp_r_g"][None, :] \
+                - first_f * consts["dp_loss_g"][None, :]
+            th_f = jnp.clip(jnp.floor(acc), 0.0, take_f)
+            hit_acc = acc - th_f
+            cumj = jnp.cumsum(joint, axis=2)
+            hit_j = jnp.clip(th_f[:, :, None] - (cumj - joint),
+                             0.0, joint)
+            miss_j = joint - hit_j
+            inc = (hit_j[..., None] * consts["E_hit"]).sum(axis=2) \
+                + (miss_j[..., None] * planes["E_miss"][seg]).sum(axis=2)
+            busy = busy + inc.astype(jnp.int32)
+            has = consts["dp_has_g"][None, :]
+            miss_f = (take_f - th_f) * has
+            hits = c["hits"] + (th_f * has).sum(axis=1)
+            misses = c["misses"] + miss_f.sum(axis=1)
+            stage_t = c["stage_t"] \
+                + (th_f * consts["S_hit_g"][None, :]
+                   + (take_f - th_f)
+                   * planes["S_miss"][seg].astype(jnp.float32)) \
+                .sum(axis=1)
+            # cache-miss egress: usd/miss is precomputed (gb * price);
+            # charged the tick the job matched, next to the GPU hours
+            eg_g = (take_f - th_f) * consts["dp_usd_miss_g"][None, :]
+            egress_g = c["egress_g"] + eg_g
+        else:
+            busy = busy + jnp.matmul(joint, M_jw).astype(jnp.int32)
+            hit_acc, hits, misses = c["hit_acc"], c["hits"], c["misses"]
+            stage_t, egress_g = c["stage_t"], c["egress_g"]
+            eg_g = jnp.zeros_like(egress_g)
         idle = idle - take_g
         lv = lv - take_j[:, :L][:, ::-1]
         fresh_q = fresh_q - take_j[:, L]
@@ -345,7 +448,7 @@ def _scan_campaigns(planes, consts, xs, *, nat_any, use_pallas):
         # starting live set, at post-event rates (numpy counter identity)
         dh = jnp.where(i > 0, dt, 0.0)
         spent_d, prov_d = bill_fn(live0, rate_g * dh)
-        spent = c["spent"] + spent_d
+        spent = c["spent"] + spent_d + eg_g.sum(axis=1)
         by_prov = c["by_prov"] + prov_d
 
         # 10. flat infra overhead
@@ -376,7 +479,10 @@ def _scan_campaigns(planes, consts, xs, *, nat_any, use_pallas):
                 "fired": fired, "capped": capped, "cap_pending": trigger,
                 "cap_tick": cap_tick, "pre_ct": pre_ct,
                 "nat_ct": nat_ct, "fin_ct": fin_ct, "accel": accel,
-                "busy_h": busy_h, "busy_prov": busy_prov}, None
+                "busy_h": busy_h, "busy_prov": busy_prov,
+                "hit_acc": hit_acc, "hits": hits, "misses": misses,
+                "stage_t": stage_t, "egress_g": egress_g,
+                "virgin": virgin}, None
 
     init = {
         "idle": jnp.zeros((B, G), jnp.int32),
@@ -398,6 +504,12 @@ def _scan_campaigns(planes, consts, xs, *, nat_any, use_pallas):
         "accel": jnp.zeros((B,), jnp.float32),
         "busy_h": jnp.zeros((B,), jnp.float32),
         "busy_prov": jnp.zeros((B, P), jnp.float32),
+        "hit_acc": jnp.zeros((B, G), jnp.float32),
+        "virgin": jnp.zeros((B, G), jnp.float32),
+        "hits": jnp.zeros((B,), jnp.float32),
+        "misses": jnp.zeros((B,), jnp.float32),
+        "stage_t": jnp.zeros((B,), jnp.float32),
+        "egress_g": jnp.zeros((B, G), jnp.float32),
     }
     out, _ = jax.lax.scan(step, init, xs)
 
@@ -490,6 +602,9 @@ class JaxSweepEngine:
         minq = np.zeros((n_seg, B), np.int32)
         n_unc = np.full((n_seg, B), -1, np.int32)
         n_cap = np.full((n_seg, B), -1, np.int32)
+        origin_up = np.ones((n_seg, B, G), bool)
+        dp_degrade_sbg = np.ones((n_seg, B, G))
+        dp_flush_sbg = np.zeros((n_seg, B, G), bool)
         for b, ln in enumerate(self.lanes):
             ops_u = JaxLaneOps(ln.spec, ln.pairs, budget_capped=False)
             ops_c = JaxLaneOps(ln.spec, ln.pairs, budget_capped=True)
@@ -500,6 +615,7 @@ class JaxSweepEngine:
             for s, st in enumerate(seg_ticks):
                 ops_u.scale_n = None
                 ops_c.scale_n = None
+                ops_u.flush_edge[:] = False
                 for kind, arg in by_tick.get(int(st), []):
                     timeline_registry.apply_op(ops_u, kind, arg, 0.0)
                     timeline_registry.apply_op(ops_c, kind, arg, 0.0)
@@ -509,6 +625,9 @@ class JaxSweepEngine:
                 floor[s, b] = ops_u.floor_fraction
                 downscale[s, b] = ops_u.downscale_target
                 minq[s, b] = ops_u.min_queue_eff
+                origin_up[s, b] = ops_u.origin_up
+                dp_degrade_sbg[s, b] = ops_u.dp_degrade
+                dp_flush_sbg[s, b] = ops_u.flush_edge
                 if ops_u.scale_n is not None:
                     n_unc[s, b] = ops_u.scale_n
                 if ops_c.scale_n is not None:
@@ -550,6 +669,91 @@ class JaxSweepEngine:
         M_jw[np.arange(B)[:, None], np.arange(L + 1)[None, :],
              w0_of_j] = 1.0
 
+        # -- data plane: stage-in as a count-axis front extension.  A
+        # matched job enters at ext position S_max + w0 - S and reaches
+        # its old entry step after exactly S staging ticks (finish
+        # thresholds shift by S_max, so stage + progress duration is
+        # exact per job).  Killed staging cells requeue at the level of
+        # their position past S_max — a statistical approximation (their
+        # true pre-stage checkpoint level is not tracked per cell).
+        dp = getattr(ref.spec, "dataplane", None)
+        dp_size = float(getattr(ref.spec, "job_input_gb", 0.0))
+        origins_g = [dp.origin_for(n) if dp is not None else None
+                     for n in self.g_provider]
+        self.dp_active = dp is not None and bool(dp.origins)
+        self.dp_staging = self.dp_active and dp_size > 0.0
+        self.dp_base_g = [n.split("/", 1)[0] for n in self.g_provider]
+        dp_has_g = np.array([o is not None for o in origins_g],
+                            np.float32)
+        r_g = np.array([o.cache_hit_rate if o else 0.0
+                        for o in origins_g], np.float32)
+        usd_miss_g = np.array(
+            [dp_size * o.egress_usd_per_gb if o else 0.0
+             for o in origins_g], np.float32)
+        if self.dp_staging:
+            def _ticks(gbps):
+                # vectorized dataplane.stage_ticks (0 where gbps <= 0)
+                gbps = np.asarray(gbps, np.float64)
+                hours = dp_size * 8.0 / np.where(gbps > 0.0, gbps, 1.0) \
+                    / 3600.0
+                t = np.maximum(1, np.ceil(hours / self.dt - 1e-9)
+                               .astype(np.int64))
+                return np.where(gbps > 0.0, t, 0)
+
+            bw_g = np.array([o.bandwidth_gbps if o else 0.0
+                             for o in origins_g])
+            hbw_g = np.array(
+                [(o.cache_bandwidth_gbps if o.cache_bandwidth_gbps > 0.0
+                  else o.bandwidth_gbps) if o else 0.0
+                 for o in origins_g])
+            S_hit = _ticks(hbw_g)                            # [G]
+            S_miss = _ticks(bw_g[None, None, :] * dp_degrade_sbg) \
+                .astype(np.int32)                            # [S,B,G]
+            S_max = int(max(S_hit.max(), S_miss.max()))
+            W_ext = W + S_max
+            finmask = (np.arange(W_ext)[None, :]
+                       >= S_max + wfin1[:, None]).astype(np.int32)
+            lvl_of_ext = np.minimum(np.floor(np.clip(
+                np.arange(W_ext)[None, :] - S_max, 0, None)
+                * self.dt / ckpt[:, None] + 1e-9)
+                .astype(np.int64), L - 1)
+            M_wl = np.zeros((B, W_ext, L), np.float32)
+            M_wl[np.arange(B)[:, None], np.arange(W_ext)[None, :],
+                 lvl_of_ext] = 1.0
+            bi = np.arange(B)[:, None, None]
+            gi = np.arange(G)[None, :, None]
+            ji = np.arange(L + 1)[None, None, :]
+            pos_hit = S_max + w0_of_j[:, None, :] \
+                - S_hit[None, :, None]                       # [B,G,L+1]
+            E_hit = np.zeros((B, G, L + 1, W_ext), np.float32)
+            E_hit[bi, gi, ji, pos_hit] = 1.0
+            E_miss = np.zeros((n_seg, B, G, L + 1, W_ext), np.float32)
+            for s in range(n_seg):
+                pos_miss = S_max + w0_of_j[:, None, :] \
+                    - S_miss[s][:, :, None]
+                E_miss[s][bi, gi, ji, pos_miss] = 1.0
+            self.planes["S_miss"] = S_miss
+            self.planes["E_miss"] = E_miss
+            self.planes["dp_flush"] = dp_flush_sbg
+            # expected hit-credit loss when a pilot's rotation resets:
+            # over n stage-ins the rotation yields floor(n*r) hits, a
+            # deficit of frac(n*r) vs the accumulator's exact n*r —
+            # averaged over lifetimes (numerically, any float r)
+            n_ = np.arange(1, 201)[:, None]
+            loss_g = np.where(
+                r_g > 0.0,
+                np.modf(n_ * r_g[None, :].astype(np.float64))[0].mean(0),
+                0.0).astype(np.float32)
+            self._dp_consts = {"dp_r_g": r_g, "dp_has_g": dp_has_g,
+                               "dp_usd_miss_g": usd_miss_g,
+                               "dp_loss_g": loss_g,
+                               "S_hit_g": S_hit.astype(np.float32),
+                               "E_hit": E_hit}
+        else:
+            self._dp_consts = {}
+        if self.dp_active:
+            self.planes["origin_up"] = origin_up
+
         self.consts = {
             "prov_onehot": prov_onehot,
             "pre_rate_g": g_pre_rate,
@@ -564,6 +768,7 @@ class JaxSweepEngine:
                                np.float32),
             "dt": np.float32(self.dt),
             "seeds": np.array([ln.seed for ln in self.lanes], np.uint32),
+            **self._dp_consts,
         }
         assert (self.consts["budget"] > 0).all(), \
             "sweep lanes need a budget"
@@ -577,7 +782,8 @@ class JaxSweepEngine:
             {k: jnp.asarray(v) for k, v in self.planes.items()},
             {k: jnp.asarray(v) for k, v in self.consts.items()},
             tuple(jnp.asarray(v) for v in xs),
-            nat_any=self.nat_any, use_pallas=self.use_pallas)
+            nat_any=self.nat_any, use_pallas=self.use_pallas,
+            dp_gating=self.dp_active, dp_staging=self.dp_staging)
         self.out = {k: np.asarray(v) for k, v in out.items()}
         return self
 
@@ -627,11 +833,18 @@ class JaxSweepEngine:
                 for name, h in busy_by_prov.items()) * 1e12 / 1e18
         spent = float(out["spent"][b])
         budget = float(self.consts["budget"][b])
-        ledger_by_prov = {}
+        raw_by_prov: Dict[str, float] = {}
         for pidx, name in enumerate(self.providers):
             v = float(out["by_prov"][b, pidx])
             if v > 0:
-                ledger_by_prov[name] = round(v, 2)
+                raw_by_prov[name] = v
+        # egress lands under the BASE provider name, merged before
+        # rounding (same grouping as the other engines' ledgers)
+        for g, base in enumerate(self.dp_base_g):
+            e = float(out["egress_g"][b, g])
+            if e > 0:
+                raw_by_prov[base] = raw_by_prov.get(base, 0.0) + e
+        ledger_by_prov = {k: round(v, 2) for k, v in raw_by_prov.items()}
         infra = float(out["infra"][b])
         if infra > 0:
             ledger_by_prov["infra"] = round(infra, 2)
@@ -653,6 +866,12 @@ class JaxSweepEngine:
             "preemptions": int(out["pre_ct"][b]),
             "nat_drops": int(out["nat_ct"][b]),
             "jobs_finished": int(out["fin_ct"][b]),
+            "egress_usd": round(float(out["egress_g"][b].sum()), 2),
+            "stagein_hours": round(float(out["stage_t"][b]) * self.dt, 1),
+            "cache_hit_fraction": round(
+                float(out["hits"][b])
+                / (float(out["hits"][b]) + float(out["misses"][b])), 4)
+            if float(out["hits"][b]) + float(out["misses"][b]) else 0.0,
             "budget": {
                 "total_spent": round(spent, 2),
                 "by_provider": dict(sorted(ledger_by_prov.items())),

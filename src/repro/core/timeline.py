@@ -82,6 +82,9 @@ class EngineOps(Protocol):
     def scale_capacity(self, factor: float) -> None: ...
     def arm_budget_floor(self, fraction: float, target: int) -> None: ...
     def set_workload_factor(self, factor: float) -> None: ...
+    def set_origin_outage(self, provider: str, on: bool) -> None: ...
+    def degrade_origin(self, provider: str, factor: float) -> None: ...
+    def flush_cache(self, provider: str) -> None: ...
 
 
 # -- the event dataclasses -------------------------------------------------
@@ -187,6 +190,44 @@ class WorkloadCurve:
     def at_h(self) -> float:
         """First breakpoint time (lint/sorting anchor)."""
         return self.points[0][0] if self.points else 0.0
+
+
+@dataclass(frozen=True)
+class OriginOutage:
+    """The ``provider``'s data origin goes dark at ``at_h`` for
+    ``duration_h``: its pilots take no NEW jobs (a job cannot stage in)
+    while in-flight transfers keep streaming; other providers' pilots
+    keep matching.  The data-plane mirror of :class:`CEOutage` — the
+    fleet itself stays up and billed."""
+    at_h: float
+    duration_h: float = 2.0
+    provider: str = "azure"
+
+    kind = "origin_outage"
+
+
+@dataclass(frozen=True)
+class OriginDegrade:
+    """WAN weather: from ``at_h`` on, the ``provider`` origin's miss
+    bandwidth is multiplied by ``factor`` (cumulative, like
+    :class:`PriceShift`).  Cache hits keep streaming at the cache
+    tier's bandwidth; in-flight stage-ins keep their locked rate."""
+    at_h: float
+    factor: float = 0.5
+    provider: str = "azure"
+
+    kind = "origin_degrade"
+
+
+@dataclass(frozen=True)
+class CacheFlush:
+    """The ``provider``'s regional cache is flushed at ``at_h``: every
+    pilot's deterministic hit rotation restarts (the first post-flush
+    stage-ins re-miss and re-pay egress until the cache re-warms)."""
+    at_h: float
+    provider: str = "azure"
+
+    kind = "cache_flush"
 
 
 # -- registry plumbing -----------------------------------------------------
@@ -405,6 +446,52 @@ register_op(OpSpec(
     describe=lambda r: f"workload curve -> x{r['factor']}"))
 
 
+def _apply_origin_on(ops, arg) -> dict:
+    ops.set_origin_outage(arg, True)
+    return {"event": "origin_outage_on", "provider": str(arg)}
+
+
+def _apply_origin_off(ops, arg) -> dict:
+    ops.set_origin_outage(arg, False)
+    return {"event": "origin_outage_off", "provider": str(arg)}
+
+
+def _apply_origin_degrade(ops, arg) -> dict:
+    provider, f = arg
+    ops.degrade_origin(provider, f)
+    return {"event": "origin_degrade", "provider": str(provider),
+            "factor": float(f)}
+
+
+def _apply_cache_flush(ops, arg) -> dict:
+    ops.flush_cache(arg)
+    return {"event": "cache_flush", "provider": str(arg)}
+
+
+register_op(OpSpec(
+    kind="origin_on", event="origin_outage_on",
+    requires=("set_origin_outage",),
+    apply=_apply_origin_on,
+    describe=lambda r: f"ORIGIN OUTAGE [{r['provider']}] -> "
+                       "no new stage-ins"))
+register_op(OpSpec(
+    kind="origin_off", event="origin_outage_off",
+    requires=("set_origin_outage",),
+    apply=_apply_origin_off,
+    describe=lambda r: f"origin recovered [{r['provider']}]"))
+register_op(OpSpec(
+    kind="origin_degrade", event="origin_degrade",
+    requires=("degrade_origin",),
+    apply=_apply_origin_degrade,
+    describe=lambda r: (f"origin degrade [{r['provider']}] "
+                        f"x{r['factor']}")))
+register_op(OpSpec(
+    kind="cache_flush", event="cache_flush",
+    requires=("flush_cache",),
+    apply=_apply_cache_flush,
+    describe=lambda r: f"cache flush [{r['provider']}]"))
+
+
 # -- the event registrations -----------------------------------------------
 
 register_event(EventType(
@@ -562,8 +649,79 @@ register_event(EventType(
     is_curve=True))
 
 
+def _lint_origin_provider(provider, at, known_providers) -> List[str]:
+    """Unknown-provider check shared by the data-plane events: the
+    name must match a catalog provider directly or as the base of a
+    sliced pool (``azure`` covers ``azure/4``)."""
+    if known_providers is None:
+        return []
+    bases = {p.split("/", 1)[0] for p in known_providers}
+    if provider in known_providers or provider in bases:
+        return []
+    return [f"{at}: unknown provider {provider!r} "
+            f"(catalog has {sorted(known_providers)})"]
+
+
+def _lint_origin_outage(ev, at, known_providers):
+    out = []
+    if ev.duration_h <= 0:
+        out.append(f"{at}: outage duration must be positive")
+    out.extend(_lint_origin_provider(ev.provider, at, known_providers))
+    return out
+
+
+def _lint_origin_degrade(ev, at, known_providers):
+    out = []
+    if ev.factor <= 0:
+        out.append(f"{at}: factor must be positive, got {ev.factor}")
+    out.extend(_lint_origin_provider(ev.provider, at, known_providers))
+    return out
+
+
+_ST_ORIGIN_PROVIDERS = ("azure", "gcp", "aws")
+
+register_event(EventType(
+    kind=OriginOutage.kind, cls=OriginOutage,
+    compile=lambda ev: [(ev.at_h, "origin_on", ev.provider),
+                        (ev.at_h + ev.duration_h, "origin_off",
+                         ev.provider)],
+    ops=("origin_on", "origin_off"),
+    lint=_lint_origin_outage,
+    lint_times=_anchor_times, decode=_identity, validate=_no_validate,
+    strategy=lambda st: st.builds(
+        OriginOutage, at_h=_st_times(st),
+        duration_h=st.sampled_from([1.0, 2.0, 6.0]),
+        provider=st.sampled_from(_ST_ORIGIN_PROVIDERS)),
+    sample=lambda: OriginOutage(8.0, 2.0, "azure")))
+
+register_event(EventType(
+    kind=OriginDegrade.kind, cls=OriginDegrade,
+    compile=lambda ev: [(ev.at_h, "origin_degrade",
+                         (ev.provider, ev.factor))],
+    ops=("origin_degrade",),
+    lint=_lint_origin_degrade,
+    lint_times=_anchor_times, decode=_identity, validate=_no_validate,
+    strategy=lambda st: st.builds(
+        OriginDegrade, at_h=_st_times(st),
+        factor=st.sampled_from([0.25, 0.5, 2.0]),
+        provider=st.sampled_from(_ST_ORIGIN_PROVIDERS)),
+    sample=lambda: OriginDegrade(6.0, 0.5, "azure")))
+
+register_event(EventType(
+    kind=CacheFlush.kind, cls=CacheFlush,
+    compile=lambda ev: [(ev.at_h, "cache_flush", ev.provider)],
+    ops=("cache_flush",),
+    lint=lambda ev, at, kp: _lint_origin_provider(ev.provider, at, kp),
+    lint_times=_anchor_times, decode=_identity, validate=_no_validate,
+    strategy=lambda st: st.builds(
+        CacheFlush, at_h=_st_times(st),
+        provider=st.sampled_from(_ST_ORIGIN_PROVIDERS)),
+    sample=lambda: CacheFlush(4.0, "azure")))
+
+
 Event = Union[SetTarget, CEOutage, PriceShift, BudgetFloor, CapacityShift,
-              PriceCurve, WorkloadCurve]
+              PriceCurve, WorkloadCurve, OriginOutage, OriginDegrade,
+              CacheFlush]
 EVENT_KINDS: Dict[str, type] = {k: et.cls for k, et in REGISTRY.items()}
 
 

@@ -95,7 +95,7 @@ def assert_sweep_equivalent(specs, seeds):
 #: where the row engines kill newest-first, which shifts how many of a
 #: tick's kills land on busy instances without moving cost/throughput.
 STAT_BANDS = {"cost": 0.02, "accel_days": 0.02, "jobs_finished": 0.02,
-              "preemptions": 0.25}
+              "preemptions": 0.25, "egress_usd": 0.05}
 
 
 def assert_statistically_equivalent(specs, seeds, engine="jax",
@@ -161,6 +161,7 @@ except ImportError:                                  # pragma: no cover
     HAVE_HYPOTHESIS = False
 
 if HAVE_HYPOTHESIS:
+    from repro.core.dataplane import DataOrigin, DataPlane
     from repro.core.spec import CampaignSpec, GpuSlicing
     from repro.core.timeline import event_strategies
 
@@ -170,9 +171,23 @@ if HAVE_HYPOTHESIS:
         here with zero hand edits."""
         return st.one_of(*event_strategies(st))
 
+    def dataplane_strategy():
+        """A random DataPlane over the t4 catalog's base providers —
+        origins with and without caches or egress pricing."""
+        origin = st.builds(
+            DataOrigin,
+            bandwidth_gbps=st.sampled_from([0.5, 2.0, 8.0]),
+            egress_usd_per_gb=st.sampled_from([0.0, 0.05, 0.12]),
+            cache_hit_rate=st.sampled_from([0.0, 0.5, 0.9]),
+            cache_bandwidth_gbps=st.sampled_from([0.0, 16.0]))
+        return st.dictionaries(
+            st.sampled_from(["azure", "gcp", "aws"]), origin,
+            min_size=1, max_size=3).map(DataPlane)
+
     def spec_strategy():
         """A random small CampaignSpec over every spec surface, the new
-        PriceCurve timeline events and GpuSlicing field included."""
+        PriceCurve timeline events, GpuSlicing and DataPlane fields
+        included."""
         return st.builds(
             CampaignSpec,
             name=st.sampled_from(["a", "b"]),
@@ -194,4 +209,6 @@ if HAVE_HYPOTHESIS:
                           slices=st.sampled_from([2, 4, 7]),
                           price_factor=st.sampled_from([1.0, 1.1]),
                           tflops_factor=st.sampled_from([0.9, 1.0]))),
+            job_input_gb=st.sampled_from([0.0, 2.0, 25.0]),
+            dataplane=st.one_of(st.none(), dataplane_strategy()),
             timeline=st.lists(event_strategy(), max_size=5).map(tuple))

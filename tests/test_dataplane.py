@@ -1,0 +1,321 @@
+"""The data-plane subsystem (core/dataplane.py) end to end.
+
+Covers the PR-8 tentpole:
+
+  * the shared stage math (``stage_ticks`` / ``cache_hit`` /
+    ``stage_decision``) — the ONE-expression contract every bit-exact
+    engine reuses,
+  * the frozen ``DataPlane`` spec surface: normalization, base-provider
+    lookup for sliced pools, serialization round trips, and the
+    ``CampaignSpec`` omit-at-default rule that keeps the three
+    pre-data-plane goldens byte-identical,
+  * ``DataPlaneRuntime`` semantics: outage gating, cumulative degrade,
+    cache-flush epochs, per-tick egress metering drained by the bill
+    phase in sorted provider order,
+  * lint findings for inert or dangling data-plane declarations,
+  * engine equivalence: byte-identical traces and results across the
+    solo-array, solo-object and batched engines on a campaign using
+    every data-plane surface; the compiled jax engine statistically
+    equivalent with ``egress_usd`` inside its band,
+  * the committed golden data-plane campaign
+    (tests/data/dataplane.spec.json) pinned bit-for-bit at seed 2021.
+"""
+import json
+import os
+
+import pytest
+
+from repro.core.dataplane import (DataOrigin, DataPlane, DataPlaneRuntime,
+                                  cache_hit, stage_decision, stage_ticks)
+from repro.core.api import run
+from repro.core.scenarios import (DATA_PLANES, data_heavy_mix,
+                                  dataplane_burst, default_suite,
+                                  egress_cost_scenarios, origin_outage_grid)
+from repro.core.spec import (CacheFlush, CampaignSpec, OriginDegrade,
+                             OriginOutage, SetTarget, lint_spec, paper_spec)
+from tests.engine_equivalence import (STAT_BANDS, assert_engines_equivalent,
+                                      assert_statistically_equivalent,
+                                      assert_traces_equivalent)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "dataplane.spec.json")
+
+# seed-2021 dataplane-burst totals (pinned; must never drift)
+DATAPLANE_BURST_2021 = {"cost": 98360.63, "accel_days": 13188.0,
+                        "eflop_hours_fp32": 2.336, "preemptions": 2557,
+                        "jobs_finished": 70734, "egress_usd": 54226.65,
+                        "stagein_hours": 18570.0,
+                        "cache_hit_fraction": 0.6709}
+
+FEDERATED = DATA_PLANES["federated"]
+
+
+def _dp_spec(**kw):
+    """A short campaign exercising every data-plane surface on the t4
+    catalog (whose providers carry the azure/gcp/aws base names the
+    origin maps bind to)."""
+    dp = DataPlane({
+        "azure": DataOrigin(bandwidth_gbps=2.0, egress_usd_per_gb=0.09,
+                            cache_hit_rate=0.6, cache_bandwidth_gbps=8.0),
+        "aws": DataOrigin(bandwidth_gbps=1.0, egress_usd_per_gb=0.05),
+    })
+    base = dict(name="dp-short", catalog="t4", duration_h=30.0, dt_h=0.05,
+                budget=4000.0, job_wall_h=1.0, min_queue=500,
+                job_input_gb=25.0, dataplane=dp,
+                timeline=(SetTarget(at_h=0.0, target=120),
+                          OriginOutage(at_h=6.0, duration_h=3.0,
+                                       provider="azure"),
+                          OriginDegrade(at_h=12.0, factor=0.5,
+                                        provider="aws"),
+                          CacheFlush(at_h=18.0, provider="azure")))
+    base.update(kw)
+    return CampaignSpec(**base)
+
+
+# -- the shared stage math -------------------------------------------------
+
+def test_stage_ticks_rounds_up_to_whole_ticks():
+    # 100 GB at 1 Gbit/s = 800/3600 h = 0.2222 h -> 5 ticks of 0.05 h
+    assert stage_ticks(100.0, 1.0, 0.05) == 5
+    # any positive transfer costs at least one tick
+    assert stage_ticks(0.001, 100.0, 0.1) == 1
+    # exact multiples don't round up an extra tick
+    assert stage_ticks(45.0, 1.0, 0.05) == 2      # 0.1 h exactly
+    # degenerate inputs stage nothing
+    assert stage_ticks(0.0, 1.0, 0.05) == 0
+    assert stage_ticks(25.0, 0.0, 0.05) == 0
+    assert stage_ticks(25.0, 1.0, 0.0) == 0
+
+
+def test_cache_hit_rotation_is_deterministic_and_converges():
+    assert not any(cache_hit(k, 0.0) for k in range(10))
+    assert all(cache_hit(k, 1.0) for k in range(10))
+    # long-run frequency is exactly the rate (floor-rotation property)
+    for rate in (0.25, 0.5, 0.6, 0.9):
+        hits = sum(cache_hit(k, rate) for k in range(1000))
+        assert hits == int(round(1000 * rate)), rate
+    # and the sequence is a fixed rotation, not RNG
+    assert [cache_hit(k, 0.5) for k in range(4)] == [False, True] * 2
+
+
+def test_stage_decision_picks_cache_or_degraded_origin_bandwidth():
+    origin = DataOrigin(bandwidth_gbps=1.0, cache_hit_rate=0.5,
+                        cache_bandwidth_gbps=8.0)
+    miss = stage_decision(origin, 1.0, 100.0, 0.05, k=0)
+    hit = stage_decision(origin, 1.0, 100.0, 0.05, k=1)
+    assert miss == (5, False)                     # origin at 1 Gbit/s
+    assert hit == (1, True)                       # cache at 8 Gbit/s
+    # degrade only slows misses; a halved origin doubles the ticks
+    assert stage_decision(origin, 0.5, 100.0, 0.05, k=0) == (9, False)
+    assert stage_decision(origin, 0.5, 100.0, 0.05, k=1) == (1, True)
+    # a cache with no bandwidth of its own still skips the degrade
+    eg_only = DataOrigin(bandwidth_gbps=1.0, cache_hit_rate=1.0)
+    assert stage_decision(eg_only, 0.5, 100.0, 0.05, k=0) == (5, True)
+
+
+# -- the frozen spec surface -----------------------------------------------
+
+def test_dataplane_normalizes_and_resolves_base_providers():
+    a = DataPlane({"gcp": DataOrigin(1.0), "azure": DataOrigin(2.0)})
+    b = DataPlane((("azure", DataOrigin(2.0)), ("gcp", DataOrigin(1.0))))
+    assert a == b
+    assert a.providers() == ("azure", "gcp")
+    assert a.origin_for("azure/4") == DataOrigin(2.0)   # sliced pool
+    assert a.origin_for("azure-v100") is None           # not a base match
+    assert a.origin_for("aws") is None
+
+
+def test_dataplane_serialization_round_trips():
+    d = FEDERATED.to_dict()
+    assert DataPlane.from_dict(json.loads(json.dumps(d))) == FEDERATED
+    with pytest.raises(ValueError):
+        DataPlane.from_dict({"origins": {}, "bogus": 1})
+
+
+def test_spec_omits_dataplane_fields_at_defaults():
+    """The omit-at-default rule: pre-data-plane specs serialize to the
+    exact same dict as before PR 8 (the three committed goldens stay
+    byte-identical)."""
+    d = paper_spec().to_dict()
+    assert "dataplane" not in d
+    assert "job_input_gb" not in d
+    full = dataplane_burst().to_dict()
+    assert full["job_input_gb"] == 25.0
+    assert set(full["dataplane"]["origins"]) == {"azure", "gcp", "aws"}
+    assert CampaignSpec.from_dict(full) == dataplane_burst()
+
+
+def test_spec_validate_rejects_bad_origins():
+    with pytest.raises(ValueError):
+        paper_spec(job_input_gb=-1.0).validate()
+    with pytest.raises(ValueError):
+        paper_spec(dataplane=DataPlane(
+            {"azure": DataOrigin(bandwidth_gbps=0.0)})).validate()
+    with pytest.raises(ValueError):
+        paper_spec(dataplane=DataPlane(
+            {"azure": DataOrigin(1.0, cache_hit_rate=1.5)})).validate()
+
+
+def test_lint_flags_inert_and_dangling_dataplanes():
+    inert = paper_spec(dataplane=DataPlane({"azure": DataOrigin(1.0)}))
+    assert any("inert" in f for f in lint_spec(inert))
+    dangling = paper_spec(timeline=(SetTarget(0.0, 100),
+                                    OriginOutage(6.0, 2.0, "azure")))
+    assert any("never matter" in f for f in lint_spec(dangling))
+    unknown = paper_spec(job_input_gb=5.0, dataplane=DataPlane(
+        {"ibm": DataOrigin(1.0)}))
+    assert any("unknown provider" in f for f in lint_spec(unknown))
+    assert lint_spec(dataplane_burst()) == []
+
+
+# -- runtime semantics ------------------------------------------------------
+
+class _Ledger:
+    def __init__(self):
+        self.charges = []
+
+    def charge(self, provider, amount, t, note=""):
+        self.charges.append((provider, amount, t, note))
+
+
+def test_runtime_meters_misses_and_bills_in_sorted_order():
+    dp = DataPlaneRuntime(FEDERATED, job_input_gb=10.0, dt_h=0.1)
+    assert dp.active and dp.staging
+    # gcp origin: r=0.5 -> k=0 misses, k=1 hits; sliced pools share the
+    # base provider's meter
+    assert dp.decide("gcp", 0)[1] is False
+    assert dp.decide("gcp/4", 1)[1] is True
+    assert dp.decide("aws", 0)[1] is False        # no cache: always miss
+    led = _Ledger()
+    total = dp.bill(led, now=1.0)
+    # aws 10 GB * 0.09 + gcp 10 GB * 0.12, charged aws first (sorted)
+    assert [c[0] for c in led.charges] == ["aws", "gcp"]
+    assert total == pytest.approx(10.0 * 0.09 + 10.0 * 0.12)
+    assert dp.pending == {}                       # drained
+    assert dp.bill(led, now=2.0) == 0.0           # idempotent when empty
+    assert dp.results()["cache_hit_fraction"] == pytest.approx(1 / 3, 4)
+
+
+def test_runtime_outage_degrade_and_flush():
+    dp = DataPlaneRuntime(FEDERATED, job_input_gb=10.0, dt_h=0.1)
+    assert dp.eligible("azure") and dp.eligible("azure/2")
+    dp.set_outage("azure", True)
+    assert not dp.eligible("azure") and not dp.eligible("azure/2")
+    assert dp.eligible("gcp")                     # others unaffected
+    dp.set_outage("azure", False)
+    assert dp.eligible("azure")
+    dp.degrade_origin("aws", 0.5)
+    dp.degrade_origin("aws", 0.5)                 # cumulative: 0.25
+    assert dp.degrade["aws"] == pytest.approx(0.25)
+    assert dp.current_epoch("azure") == 0
+    dp.flush_cache("azure/4")                     # base-provider epoch
+    assert dp.current_epoch("azure") == 1
+
+
+def test_runtime_without_a_plane_is_inert():
+    dp = DataPlaneRuntime(None, job_input_gb=25.0, dt_h=0.1)
+    assert not dp.active and not dp.staging
+    assert dp.eligible("azure")
+    assert dp.decide("azure", 0) == (0, False)
+    assert dp.bill(_Ledger(), 0.0) == 0.0
+    assert dp.results() == {"egress_usd": 0.0, "stagein_hours": 0.0,
+                            "cache_hit_fraction": 0.0}
+
+
+# -- engine equivalence -----------------------------------------------------
+
+def test_dataplane_engines_bit_identical():
+    """Results AND canonical trace bytes identical across the
+    solo-array reference, the solo-object engine and the batched
+    engine on a campaign using outage + degrade + flush + caches."""
+    spec = _dp_spec()
+    res = assert_engines_equivalent(spec, 2021,
+                                    engines=("object", "batched"))
+    assert res.egress_usd > 0 and res.stagein_hours > 0
+    assert 0.0 < res.cache_hit_fraction < 1.0
+    jsonl = assert_traces_equivalent(spec, 2021,
+                                     engines=("object", "batched"))
+    kinds = [json.loads(l)["kind"] for l in jsonl.splitlines()]
+    for kind in ("stagein", "stagein_done", "egress", "job_done"):
+        assert kind in kinds, kind
+
+
+def test_dataplane_timeline_events_fire_into_the_trace():
+    res = run(_dp_spec(), seeds=2021, collect="trace")
+    fired = [(e.event, e.payload.get("provider")) for e in res.trace.events
+             if e.kind == "timeline" and "origin" in e.event
+             or e.kind == "timeline" and e.event == "cache_flush"]
+    assert fired == [("origin_outage_on", "azure"),
+                     ("origin_outage_off", "azure"),
+                     ("origin_degrade", "aws"),
+                     ("cache_flush", "azure")]
+
+
+def test_gate_only_and_zero_input_specs_stay_identical():
+    """origins declared but job_input_gb=0: outage gating only, still
+    bit-identical; egress accrues nothing."""
+    spec = _dp_spec(name="dp-gate", job_input_gb=0.0, duration_h=20.0,
+                    dt_h=0.1)
+    res = assert_engines_equivalent(spec, 7, engines=("object", "batched"))
+    assert_traces_equivalent(spec, 7, engines=("object", "batched"))
+    assert res.egress_usd == 0.0 and res.stagein_hours == 0.0
+
+
+def test_jax_dataplane_statistically_equivalent():
+    """The compiled engine's staged-occupancy mixture stays inside the
+    statistical bands — egress dollars included (STAT_BANDS gained
+    ``egress_usd`` in PR 8)."""
+    pytest.importorskip("jax")
+    assert "egress_usd" in STAT_BANDS
+    spec = paper_spec(name="dp-jax", duration_h=168.0, job_input_gb=25.0,
+                      dataplane=FEDERATED)
+    assert_statistically_equivalent([spec], list(range(6)))
+
+
+# -- scenario library -------------------------------------------------------
+
+def test_dataplane_scenarios_are_wellformed():
+    specs = (data_heavy_mix() + origin_outage_grid()
+             + egress_cost_scenarios() + [dataplane_burst()])
+    assert len({s.name for s in specs}) == len(specs)
+    for s in specs:
+        assert lint_spec(s) == [], s.name
+        s.validate()
+    suite = {s.name for s in default_suite()}
+    assert {"data025gb", "origin-azure-t60-d6", "egress-cached",
+            "egress-nocache", "egress-flushed"} <= suite
+
+
+# -- the committed golden campaign -----------------------------------------
+
+def test_golden_dataplane_spec_file_is_current():
+    with open(GOLDEN) as f:
+        spec = CampaignSpec.from_json(f.read())
+    assert spec == dataplane_burst()
+    assert lint_spec(spec) == []
+
+
+@pytest.fixture(scope="module")
+def golden_result():
+    with open(GOLDEN) as f:
+        spec = CampaignSpec.from_json(f.read())
+    return run(spec, seeds=2021)
+
+
+def test_golden_dataplane_reproduces_pinned_totals(golden_result):
+    res = golden_result
+    for k, v in DATAPLANE_BURST_2021.items():
+        assert res[k] == v, k
+    # the data-plane events actually fired
+    fired = [e["event"] for e in res.events_fired]
+    for ev in ("origin_outage_on", "origin_outage_off", "origin_degrade",
+               "cache_flush"):
+        assert ev in fired, ev
+
+
+def test_golden_dataplane_batched_lane_is_identical(golden_result):
+    with open(GOLDEN) as f:
+        spec = CampaignSpec.from_json(f.read())
+    batched = run(spec, seeds=2021, engine="batched")
+    assert batched.to_dict() == golden_result.to_dict()
+    assert list(batched.events_fired) == list(golden_result.events_fired)

@@ -23,12 +23,13 @@ import os
 import pytest
 
 from repro.core.api import run, sweep as api_sweep
-from repro.core.events import (CampaignTrace, InstanceLaunched,
-                               InstancePreempted, InstanceStopped,
-                               JobFinished, NatDrop, PilotRegistered,
-                               PriceChanged, TimelineEventFired,
-                               TRACE_EVENT_KINDS, _KIND_RANK,
-                               event_from_dict, event_to_dict)
+from repro.core.events import (CampaignTrace, EgressBilled,
+                               InstanceLaunched, InstancePreempted,
+                               InstanceStopped, JobFinished, NatDrop,
+                               PilotRegistered, PriceChanged,
+                               StageInFinished, StageInStarted,
+                               TimelineEventFired, TRACE_EVENT_KINDS,
+                               _KIND_RANK, event_from_dict, event_to_dict)
 from repro.core.simulator import SimConfig
 from repro.core.spec import (CampaignSpec, CEOutage, PriceCurve,
                              PriceShift, SetTarget, paper_spec, run_solo)
@@ -81,6 +82,9 @@ def test_every_event_kind_roundtrips_through_dicts():
         PriceChanged(6.0, 1.2),
         PriceChanged(6.0, 0.9, provider="azure", absolute=True),
         TimelineEventFired(0.0, "scale", {"target": 2000}),
+        StageInStarted(0.5, 1, 25.0, False, "azure"),
+        StageInFinished(0.75, 1),
+        EgressBilled(1.0, "azure", 250.0, 21.75),
     ]
     assert {type(e).kind for e in events} == set(TRACE_EVENT_KINDS)
     for ev in events:

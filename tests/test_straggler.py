@@ -1,0 +1,93 @@
+"""core/straggler.py — speculative re-execution + the per-pod EWMA
+eviction policy (previously an untested island module).
+
+Covers the PR-8 satellite checklist: EWMA update math, the eviction
+threshold against the fleet median, and the no-evict-below-``min_pods``
+guard that keeps a synchronous SPMD job from evicting itself to death.
+"""
+import pytest
+
+from repro.core.straggler import SpeculativeScheduler, StragglerMonitor
+
+
+# -- speculative re-execution ----------------------------------------------
+
+def test_speculation_waits_for_min_samples_then_uses_the_median():
+    s = SpeculativeScheduler(spec_factor=2.0, min_samples=3)
+    s.record_completion(1.0)
+    s.record_completion(1.0)
+    assert not s.should_speculate(100.0)          # not enough samples
+    s.record_completion(3.0)                      # median now 1.0
+    assert not s.should_speculate(2.0)            # == 2x median: not over
+    assert s.should_speculate(2.5)
+    assert s.speculated == 1
+
+
+# -- EWMA update -----------------------------------------------------------
+
+def test_ewma_seeds_with_first_sample_then_blends():
+    m = StragglerMonitor(ewma_alpha=0.2)
+    m.record("pod0", 10.0)
+    assert m.times["pod0"] == 10.0                # first sample seeds
+    m.record("pod0", 20.0)
+    assert m.times["pod0"] == pytest.approx(0.8 * 10.0 + 0.2 * 20.0)
+    m.record("pod0", 20.0)
+    assert m.times["pod0"] == pytest.approx(0.8 * 12.0 + 0.2 * 20.0)
+    assert m.counts["pod0"] == 3
+
+
+def test_fleet_median_ignores_evicted_pods():
+    m = StragglerMonitor(min_pods=1)
+    for pod, t in (("a", 1.0), ("b", 2.0), ("c", 9.0)):
+        m.record(pod, t)
+    assert m.fleet_median() == 2.0
+    assert m.evict("c")
+    assert m.fleet_median() == 1.5
+    assert m.active_pods() == ["a", "b"]
+
+
+# -- eviction threshold ----------------------------------------------------
+
+def _warm(m, pods, steps=10):
+    for pod, t in pods.items():
+        for _ in range(steps):
+            m.record(pod, t)
+
+
+def test_stragglers_flags_pods_over_factor_times_median():
+    m = StragglerMonitor(evict_factor=1.5, min_steps=10, min_pods=1)
+    _warm(m, {"a": 1.0, "b": 1.0, "c": 1.0, "slow": 2.0})
+    # median 1.0; only "slow" exceeds 1.5x
+    assert m.stragglers() == ["slow"]
+    # at exactly the threshold nothing is flagged
+    m2 = StragglerMonitor(evict_factor=2.0, min_pods=1)
+    _warm(m2, {"a": 1.0, "b": 1.0, "edge": 2.0})
+    assert m2.stragglers() == []
+
+
+def test_stragglers_respects_min_steps_warmup():
+    m = StragglerMonitor(min_steps=10, min_pods=1)
+    _warm(m, {"a": 1.0, "b": 1.0})
+    m.record("noisy", 50.0)                       # one bad sample only
+    assert m.stragglers() == []                   # still warming up
+    _warm(m, {"noisy": 50.0}, steps=9)            # now 10 samples
+    assert m.stragglers() == ["noisy"]
+
+
+# -- the min_pods floor ----------------------------------------------------
+
+def test_no_evict_below_min_pods():
+    m = StragglerMonitor(evict_factor=1.2, min_steps=1, min_pods=2)
+    _warm(m, {"a": 1.0, "slow1": 10.0, "slow2": 20.0}, steps=2)
+    # both slow pods are over threshold but only ONE eviction fits
+    # above the floor — the slowest is proposed first
+    assert m.stragglers() == ["slow2"]
+    assert m.evict("slow2")
+    # fleet is at the floor now: nothing proposed, evictions refused
+    assert m.stragglers() == []
+    assert not m.evict("slow1")
+    assert m.active_pods() == ["a", "slow1"]
+    # double-evict and unknown pods are refused too
+    assert not m.evict("slow2")
+    assert not m.evict("ghost")
+    assert m.evicted == ["slow2"]
