@@ -1,0 +1,177 @@
+"""Cost-vs-goodput Pareto frontiers over campaign sweeps.
+
+The HEPCloud cost-optimization question (arXiv 1710.00100) is "which
+point on the cost/throughput frontier should we buy?" — and the
+repo's sweep engines make the candidate set cheap to generate
+(``scenarios.pareto_grid()`` composes the price-curve × GPU-slicing ×
+data-plane axes into one grid).  This module turns a
+:class:`~repro.core.sweep.SweepResult` into the answer:
+
+    result = api.run(scenarios.pareto_grid(), seeds=[2021, 2022])
+    front = pareto.frontier(result)            # cost vs accel_days
+    print(front.table())
+
+:func:`frontier` aggregates rows per scenario (mean over seeds),
+computes the exact non-dominated set under (minimize cost, maximize
+value), and returns every candidate with its frontier membership —
+dominated points matter in the report (they are what you should NOT
+buy).  ``cost`` is the ledger total, which already includes metered
+egress — never add ``egress_usd`` on top.  The value axis is any
+numeric row metric (``accel_days``, ``jobs_finished``, ...); when the
+sweep carried per-lane traces, :func:`goodput_rows` augments rows with
+a measured ``goodput_fraction`` by replaying each trace into the
+elastic pod-pool model (:func:`repro.core.elastic.drive_pool`), so the
+frontier can be drawn against *delivered* training goodput rather than
+raw GPU-days.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+__all__ = ["ParetoPoint", "ParetoFrontier", "frontier", "goodput_rows"]
+
+
+@dataclass(frozen=True)
+class ParetoPoint:
+    """One aggregated sweep candidate on the (cost, value) plane."""
+    scenario: str
+    cost: float
+    value: float
+    seeds: int
+    on_frontier: bool
+
+    def to_dict(self) -> dict:
+        return {"scenario": self.scenario, "cost": self.cost,
+                "value": self.value, "seeds": self.seeds,
+                "on_frontier": self.on_frontier}
+
+
+@dataclass(frozen=True)
+class ParetoFrontier:
+    """All candidates plus their non-dominated subset (sorted by
+    cost).  ``points`` keeps every candidate — the dominated ones are
+    the answer to "what should we not buy"."""
+    x: str
+    y: str
+    points: Tuple[ParetoPoint, ...]
+
+    @property
+    def frontier(self) -> Tuple[ParetoPoint, ...]:
+        return tuple(p for p in self.points if p.on_frontier)
+
+    @property
+    def dominated(self) -> Tuple[ParetoPoint, ...]:
+        return tuple(p for p in self.points if not p.on_frontier)
+
+    def to_dict(self) -> dict:
+        return {"kind": "pareto_frontier", "x": self.x, "y": self.y,
+                "points": [p.to_dict() for p in self.points]}
+
+    def table(self) -> str:
+        """Markdown-ish frontier report, cheapest candidate first;
+        frontier members are starred."""
+        rows = [f"| {'':1s} | {'scenario':24s} | {self.x:>12s} "
+                f"| {self.y:>14s} |",
+                "|---|" + "-" * 26 + "|" + "-" * 14 + "|"
+                + "-" * 16 + "|"]
+        for p in self.points:
+            star = "*" if p.on_frontier else " "
+            rows.append(f"| {star} | {p.scenario:24s} "
+                        f"| {p.cost:>12,.2f} | {p.value:>14,.3f} |")
+        return "\n".join(rows)
+
+
+def _aggregate(rows: Sequence[dict], x: str, y: str
+               ) -> List[Tuple[str, float, float, int]]:
+    """Per-scenario (mean x, mean y, n seeds) in first-seen order."""
+    order: List[str] = []
+    acc: Dict[str, List[Tuple[float, float]]] = {}
+    for row in rows:
+        name = row.get("scenario", "?")
+        for axis in (x, y):
+            if axis not in row:
+                have = sorted(k for k, v in row.items()
+                              if isinstance(v, (int, float))
+                              and not isinstance(v, bool))
+                raise ValueError(
+                    f"row for scenario {name!r} has no {axis!r} metric "
+                    f"(numeric metrics: {', '.join(have)})")
+        if name not in acc:
+            order.append(name)
+            acc[name] = []
+        acc[name].append((float(row[x]), float(row[y])))
+    out = []
+    for name in order:
+        pts = acc[name]
+        n = len(pts)
+        out.append((name, sum(p[0] for p in pts) / n,
+                    sum(p[1] for p in pts) / n, n))
+    return out
+
+
+def _non_dominated(pts: Sequence[Tuple[float, float]]) -> List[bool]:
+    """Exact weak-dominance filter: point p is dominated iff some q has
+    ``q.cost <= p.cost`` and ``q.value >= p.value`` with at least one
+    strict.  Duplicate (cost, value) points are all kept — neither
+    strictly beats the other."""
+    flags = []
+    for i, (cx, cy) in enumerate(pts):
+        dominated = any(
+            (qx <= cx and qy >= cy) and (qx < cx or qy > cy)
+            for j, (qx, qy) in enumerate(pts) if j != i)
+        flags.append(not dominated)
+    return flags
+
+
+def frontier(sweep_or_rows, x: str = "cost", y: str = "accel_days"
+             ) -> ParetoFrontier:
+    """Compute the Pareto frontier of a sweep on (minimize ``x``,
+    maximize ``y``).
+
+    ``sweep_or_rows`` is a :class:`~repro.core.sweep.SweepResult` or a
+    plain row-dict sequence; rows are aggregated per scenario (mean
+    over seeds) before the dominance test.  Returns every candidate
+    sorted by cost (ties by scenario name) with frontier membership
+    flags."""
+    rows = getattr(sweep_or_rows, "rows", sweep_or_rows)
+    if not rows:
+        raise ValueError("frontier() needs at least one sweep row")
+    agg = _aggregate(rows, x, y)
+    flags = _non_dominated([(c, v) for _n, c, v, _s in agg])
+    points = [ParetoPoint(scenario=name, cost=round(c, 6),
+                          value=round(v, 6), seeds=n, on_frontier=f)
+              for (name, c, v, n), f in zip(agg, flags)]
+    points.sort(key=lambda p: (p.cost, p.scenario))
+    return ParetoFrontier(x=x, y=y, points=tuple(points))
+
+
+def goodput_rows(sweep, *, max_pods: int = 4096, rebuild_s: float = 30.0,
+                 step_time_s: float = 2.0,
+                 checkpoint_period_s: float = 600.0) -> List[dict]:
+    """Augment a trace-carrying sweep's rows with measured
+    ``goodput_fraction``: each lane's :class:`~repro.core.events.
+    CampaignTrace` is replayed into an elastic pod pool
+    (:func:`repro.core.elastic.drive_pool` with a
+    :class:`~repro.core.elastic.SimulatedElasticRunner`), so the
+    frontier's value axis can be delivered training goodput instead of
+    raw GPU-days.  Requires ``collect="trace"``; rows come back copied,
+    in order, ready for :func:`frontier(..., y="goodput_fraction")`."""
+    from repro.core.elastic import (PodPool, SimulatedElasticRunner,
+                                    drive_pool)
+    traces = getattr(sweep, "traces", None)
+    if traces is None:
+        raise ValueError(
+            "goodput_rows() needs a sweep run with collect=\"trace\" "
+            "(SweepResult.traces is None)")
+    out = []
+    for row, trace in zip(sweep.rows, traces):
+        pool = PodPool(max_pods=max_pods)
+        runner = SimulatedElasticRunner(rebuild_s=rebuild_s)
+        report = drive_pool(trace, pool, runner,
+                            step_time_s=step_time_s,
+                            checkpoint_period_s=checkpoint_period_s)
+        row = dict(row)
+        row["goodput_fraction"] = report.goodput_fraction
+        out.append(row)
+    return out

@@ -10,6 +10,8 @@ CI-pinnable:
     PYTHONPATH=src python -m repro.campaigns lint spec.json
     PYTHONPATH=src python -m repro.campaigns trace spec.json \\
         --out trace.jsonl
+    PYTHONPATH=src python -m repro.campaigns diff a.jsonl b.jsonl.gz
+    PYTHONPATH=src python -m repro.campaigns pareto --seeds 2021,2022
     PYTHONPATH=src python -m repro.campaigns paper --out paper.spec.json
 
 ``run`` executes the spec(s) through the ``repro.core.api.run`` front
@@ -18,8 +20,13 @@ otherwise), prints a summary, and optionally writes machine-readable
 JSON/CSV artifacts.  ``trace`` runs one (spec, seed) campaign with
 ``collect="trace"`` and streams the typed event trace
 (``repro.core.events.CampaignTrace``) as JSONL — byte-identical
-whichever engine ran it.  ``paper`` emits the golden paper-replay spec
-(committed at tests/data/paper_replay.spec.json and smoke-run in CI).
+whichever engine ran it (``--stream`` pipes it through the bounded-
+window sink instead of holding it in memory; same bytes).  ``diff``
+compares two serialized traces and exits 1 on any divergence — a CI
+equivalence gate.  ``pareto`` sweeps a candidate grid (default:
+``scenarios.pareto_grid()``) and prints the cost-vs-value Pareto
+frontier.  ``paper`` emits the golden paper-replay spec (committed at
+tests/data/paper_replay.spec.json and smoke-run in CI).
 """
 from __future__ import annotations
 
@@ -156,8 +163,24 @@ def cmd_trace(args) -> int:
     """Run one (spec, seed) campaign with ``collect="trace"`` and write
     the typed event stream as JSONL (stdout or ``--out``; a ``.gz``
     suffix gzips transparently — stage-in events make big-fleet traces
-    long)."""
+    long).  ``--stream`` feeds the events through the bounded-window
+    sink (``collect="stream"``) instead of holding the full trace in
+    memory; the written bytes are identical."""
     spec = _load_spec(args.spec)
+    if args.stream:
+        if not args.out:
+            raise ValueError("--stream writes through a file sink; "
+                             "pass --out (stdout needs the in-memory "
+                             "path)")
+        from repro.core.traceops import JsonlStreamSink
+        sink = JsonlStreamSink(args.out)
+        res = api_run(spec, seeds=args.seed, engine=args.engine,
+                      collect="stream", sink=sink)
+        print(f"# wrote {args.out}", file=sys.stderr)
+        print(f"# trace {spec.name!r} seed={res.seed}: "
+              f"{sink.events_written} events (streamed)",
+              file=sys.stderr)
+        return 0
     res = api_run(spec, seeds=args.seed, engine=args.engine,
                   collect="trace")
     text = res.trace.to_jsonl()
@@ -181,6 +204,68 @@ def cmd_trace(args) -> int:
           f"{len(res.trace)} events "
           + " ".join(f"{k}={v}" for k, v in counts.items()),
           file=sys.stderr)
+    return 0
+
+
+def cmd_diff(args) -> int:
+    """Compare two serialized campaign traces (JSONL, ``.gz``
+    transparently).  Exit 0 when byte-equivalent, 1 on any divergence
+    (header, first-divergence point, per-kind / per-entity counts and
+    digest deltas are reported) — usable directly as a CI equivalence
+    gate.  ``--json PATH`` writes the machine-readable diff (``-`` for
+    stdout, summary moves to stderr)."""
+    from repro.core.traceops import diff_traces, load_trace
+    try:
+        a = load_trace(args.a)
+        b = load_trace(args.b)
+    except (OSError, KeyError, TypeError) as e:
+        raise ValueError(f"cannot load trace: {e}")
+    d = diff_traces(a, b)
+    if args.json:
+        payload = json.dumps(d.to_dict(), indent=2, sort_keys=True) + "\n"
+        if args.json == "-":
+            sys.stdout.write(payload)
+            print(d.summary(), file=sys.stderr)
+            return 0 if d.identical else 1
+        with open(args.json, "w") as f:
+            f.write(payload)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    print(d.summary())
+    return 0 if d.identical else 1
+
+
+def cmd_pareto(args) -> int:
+    """Sweep a candidate grid and print the cost-vs-value Pareto
+    frontier (``analysis.pareto.frontier``).  With no spec files the
+    grid is ``scenarios.pareto_grid()`` — the price-curve x GPU-slicing
+    x data-plane axes; ``--duration-h`` shortens every candidate for
+    smoke runs."""
+    from dataclasses import replace
+    from repro.analysis.pareto import frontier
+    if args.spec:
+        specs = [_load_spec(p).to_spec() for p in args.spec]
+    else:
+        from repro.core.scenarios import pareto_grid
+        specs = [s.to_spec() for s in pareto_grid()]
+    if args.duration_h is not None:
+        specs = [replace(s, duration_h=args.duration_h) for s in specs]
+    seeds = [int(s) for s in args.seeds.split(",")]
+    result = api_run(specs, seeds=seeds if len(seeds) > 1 else seeds[0],
+                     engine=args.engine)
+    front = frontier(result, x=args.x, y=args.y)
+    print(f"pareto frontier over {len(specs)} scenarios x "
+          f"{len(seeds)} seeds (minimize {front.x}, "
+          f"maximize {front.y}):\n")
+    print(front.table())
+    names = ", ".join(p.scenario for p in front.frontier)
+    print(f"\nnon-dominated: {names}")
+    if args.json:
+        payload = {"schema_version": 1, **front.to_dict(),
+                   "seeds": seeds}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json}", file=sys.stderr)
     return 0
 
 
@@ -232,13 +317,51 @@ def main(argv: Optional[List[str]] = None) -> int:
     p_trace.add_argument("spec", help="CampaignSpec JSON file")
     p_trace.add_argument("--seed", default=2021, type=int,
                          help="campaign seed (default: 2021)")
-    # trace is a bit-identity surface: the statistical "jax" engine (and
-    # the redundant "sequential" alias) are deliberately absent
+    # trace is a bit-identity surface, so the redundant "sequential"
+    # alias is absent; "jax" is accepted so the api layer can explain
+    # WHY the statistical engine has no trace (one friendly line,
+    # exit 2) instead of argparse rejecting the word
     p_trace.add_argument("--engine", default="auto",
-                         choices=sorted(ENGINES - {"jax", "sequential"}))
+                         choices=sorted(ENGINES - {"sequential"}))
     p_trace.add_argument("--out", default=None,
                          help="write the JSONL here (default: stdout)")
+    p_trace.add_argument("--stream", action="store_true",
+                         help="stream events through the bounded-window "
+                              "sink instead of holding the trace in "
+                              "memory (needs --out; identical bytes)")
     p_trace.set_defaults(fn=cmd_trace)
+
+    p_diff = sub.add_parser(
+        "diff", help="compare two serialized traces; exit 1 on "
+                     "divergence")
+    p_diff.add_argument("a", help="baseline trace (.jsonl or .jsonl.gz)")
+    p_diff.add_argument("b", help="candidate trace (.jsonl or .jsonl.gz)")
+    p_diff.add_argument("--json", default=None,
+                        help="write the machine-readable diff here "
+                             "('-' for stdout)")
+    p_diff.set_defaults(fn=cmd_diff)
+
+    p_pareto = sub.add_parser(
+        "pareto", help="sweep a candidate grid and print the "
+                       "cost-vs-value Pareto frontier")
+    p_pareto.add_argument("spec", nargs="*",
+                          help="candidate CampaignSpec JSON files "
+                               "(default: scenarios.pareto_grid())")
+    p_pareto.add_argument("--seeds", default="2021",
+                          help="comma-separated seeds (default: 2021)")
+    p_pareto.add_argument("--engine", default="batched",
+                          choices=sorted(ENGINES - {"auto"}))
+    p_pareto.add_argument("--x", default="cost",
+                          help="cost axis, minimized (default: cost)")
+    p_pareto.add_argument("--y", default="accel_days",
+                          help="value axis, maximized "
+                               "(default: accel_days)")
+    p_pareto.add_argument("--duration-h", default=None, type=float,
+                          help="override every candidate's duration "
+                               "(reduced smoke grids)")
+    p_pareto.add_argument("--json", default=None,
+                          help="write the frontier JSON here")
+    p_pareto.set_defaults(fn=cmd_pareto)
 
     p_paper = sub.add_parser("paper",
                              help="emit the paper-replay golden spec")

@@ -107,6 +107,11 @@ def sweep(specs: Sequence[CampaignSpec], seeds: Sequence[int],
     records one typed ``CampaignTrace`` per lane (``SweepResult.traces``
     / ``trace_for``)."""
     check_collect(collect)
+    if collect == "stream":
+        raise ValueError(
+            'collect="stream" feeds ONE campaign through one sink — '
+            'sweeps record per-lane traces with collect="trace" '
+            "(SweepResult.traces) instead")
     _check_engine(engine, SWEEP_ENGINES, "sweep")
     specs = list(specs)
     if not specs:
@@ -162,31 +167,51 @@ def _coerce_seeds(seeds) -> Tuple[List[int], bool]:
 def run(spec_or_specs: Union[CampaignSpec, Sequence[CampaignSpec]],
         seeds: Union[int, Sequence[int]] = 2021,
         engine: str = "auto",
-        collect: str = "summary") -> Union[CampaignResult, SweepResult]:
+        collect: str = "summary",
+        sink=None) -> Union[CampaignResult, SweepResult]:
     """Execute campaign spec(s); see module docstring for dispatch.
 
     ``collect`` selects the results surface: ``"summary"`` (default —
-    end-of-run totals only, the historical behavior) or ``"trace"``,
+    end-of-run totals only, the historical behavior), ``"trace"``,
     which additionally records the typed event stream (every launch /
     stop / preemption / pilot / NAT drop / job completion / timeline
     firing) as a :class:`~repro.core.events.CampaignTrace` on
-    ``CampaignResult.trace`` (solo) or ``SweepResult.traces`` (sweeps).
-    Collection is RNG-free: summary numbers are identical either way,
-    and all engines emit byte-identical serialized traces."""
+    ``CampaignResult.trace`` (solo) or ``SweepResult.traces`` (sweeps),
+    or ``"stream"``, which feeds that same canonical event stream
+    through ``sink`` (a :class:`~repro.core.traceops.TraceSink` — JSONL
+    /gzip file or callback) in bounded tick-windows so the full event
+    list never exists in memory; the streamed bytes are identical to
+    ``collect="trace"`` serialization.  ``"stream"`` is one campaign
+    into one sink: solo-shaped input only.  Collection is RNG-free:
+    summary numbers are identical either way, and all trace-capable
+    engines emit byte-identical serialized traces."""
     check_collect(collect)
     specs, single_spec = _coerce_specs(spec_or_specs)
     seed_list, single_seed = _coerce_seeds(seeds)
     solo = single_spec and len(specs) == 1 and len(seed_list) == 1
     _check_engine(engine, ENGINES, "run")
+    if collect == "stream":
+        if not solo:
+            raise ValueError(
+                'collect="stream" feeds ONE campaign through one sink; '
+                "pass one spec and one seed (for sweeps, use "
+                'collect="trace" and SweepResult.traces)')
+        if sink is None:
+            raise ValueError(
+                'collect="stream" needs a sink= (e.g. '
+                "repro.core.traceops.JsonlStreamSink)")
+    elif sink is not None:
+        raise ValueError('sink= is only meaningful with collect="stream"')
 
     if solo and engine == "batched":     # forced single-lane batched run
         (res, events, trace), = run_batched_detailed(
-            [(specs[0], seed_list[0])], collect=collect)
+            [(specs[0], seed_list[0])], collect=collect,
+            sinks=None if sink is None else [sink])
         return CampaignResult.from_results(
             res, spec=specs[0], seed=seed_list[0], engine="batched",
             events_fired=tuple(events), trace=trace)
     if solo and engine == "jax":         # forced single-lane compiled run
-        if collect == "trace":
+        if collect in ("trace", "stream"):
             raise _no_trace_error()
         from repro.core.sweep_jax import run_jax_detailed
         (res, events, trace), = run_jax_detailed(
@@ -197,7 +222,7 @@ def run(spec_or_specs: Union[CampaignSpec, Sequence[CampaignSpec]],
     if solo:
         eng = None if engine in ("auto", "sequential") else engine
         result, _ctl = run_solo(specs[0], seed_list[0], engine=eng,
-                                collect=collect)
+                                collect=collect, sink=sink)
         return result
 
     return sweep(specs, seed_list,

@@ -214,6 +214,27 @@ def event_from_dict(d: Mapping) -> TraceEvent:
     return cls(**d)
 
 
+# -- canonical JSONL lines (shared by CampaignTrace.to_jsonl and the
+#    streaming sinks in core/traceops.py, so streamed files are
+#    byte-identical to in-memory serialization by construction) ------------
+
+def dump_line(obj: Mapping) -> str:
+    """One canonical compact JSON line: sorted keys, fixed separators,
+    no NaN — equal dicts always serialize to equal bytes."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"),
+                      allow_nan=False)
+
+
+def trace_header(name: str, seed: int, duration_h: float, dt_h: float,
+                 n_events: int) -> dict:
+    """The JSONL meta header dict (first line of every serialized
+    trace; carries the campaign identity, never the engine)."""
+    return {"schema_version": TRACE_SCHEMA_VERSION,
+            "kind": "campaign_trace", "name": name, "seed": int(seed),
+            "duration_h": float(duration_h), "dt_h": float(dt_h),
+            "events": int(n_events)}
+
+
 # -- engine-side collection ------------------------------------------------
 
 class TraceRecorder:
@@ -232,53 +253,67 @@ class TraceRecorder:
         # (t, kind rank, entity key, event) — presorted tuples
         self._raw: List[tuple] = []
 
+    def _push(self, item: tuple):
+        """Collection hook: every record method funnels its presorted
+        (t, rank, key, event) tuple through here.  The base recorder
+        accumulates in memory for :func:`build_trace`; the streaming
+        recorder (core/traceops.py) overrides this to flush bounded
+        windows into a :class:`~repro.core.traceops.TraceSink`."""
+        self._raw.append(item)
+
+    def timeline_fired(self, rec: Mapping):
+        """Engines mirror every ``events_fired`` provenance append here.
+        A no-op for in-memory collection (``build_trace`` folds the
+        timeline provenance in at freeze time); the streaming recorder
+        overrides it to emit the typed timeline event in-band."""
+
     def launched(self, t, instance, provider, region):
         t, i = float(t), int(instance)
-        self._raw.append((t, _KIND_RANK[InstanceLaunched.kind], i,
-                          InstanceLaunched(t, i, provider, region)))
+        self._push((t, _KIND_RANK[InstanceLaunched.kind], i,
+                    InstanceLaunched(t, i, provider, region)))
 
     def stopped(self, t, instance, provider, region):
         t, i = float(t), int(instance)
-        self._raw.append((t, _KIND_RANK[InstanceStopped.kind], i,
-                          InstanceStopped(t, i, provider, region)))
+        self._push((t, _KIND_RANK[InstanceStopped.kind], i,
+                    InstanceStopped(t, i, provider, region)))
 
     def preempted(self, t, instance, provider, region):
         t, i = float(t), int(instance)
-        self._raw.append((t, _KIND_RANK[InstancePreempted.kind], i,
-                          InstancePreempted(t, i, provider, region)))
+        self._push((t, _KIND_RANK[InstancePreempted.kind], i,
+                    InstancePreempted(t, i, provider, region)))
 
     def pilot_registered(self, t, pilot, instance, provider):
         t, p = float(t), int(pilot)
-        self._raw.append((t, _KIND_RANK[PilotRegistered.kind], p,
-                          PilotRegistered(t, p, int(instance), provider)))
+        self._push((t, _KIND_RANK[PilotRegistered.kind], p,
+                    PilotRegistered(t, p, int(instance), provider)))
 
     def nat_drop(self, t, pilot, instance, provider):
         t, p = float(t), int(pilot)
-        self._raw.append((t, _KIND_RANK[NatDrop.kind], p,
-                          NatDrop(t, p, int(instance), provider)))
+        self._push((t, _KIND_RANK[NatDrop.kind], p,
+                    NatDrop(t, p, int(instance), provider)))
 
     def stagein_started(self, t, pilot, gb, cache_hit, provider):
         t, p = float(t), int(pilot)
-        self._raw.append((t, _KIND_RANK[StageInStarted.kind], p,
-                          StageInStarted(t, p, float(gb), bool(cache_hit),
-                                         provider)))
+        self._push((t, _KIND_RANK[StageInStarted.kind], p,
+                    StageInStarted(t, p, float(gb), bool(cache_hit),
+                                   provider)))
 
     def stagein_finished(self, t, pilot):
         t, p = float(t), int(pilot)
-        self._raw.append((t, _KIND_RANK[StageInFinished.kind], p,
-                          StageInFinished(t, p)))
+        self._push((t, _KIND_RANK[StageInFinished.kind], p,
+                    StageInFinished(t, p)))
 
     def egress_billed(self, t, provider, gb, usd):
         t = float(t)
         # provider names are the entity key: unique per tick within the
         # egress rank, so the canonical sort stays total
-        self._raw.append((t, _KIND_RANK[EgressBilled.kind], provider,
-                          EgressBilled(t, provider, float(gb), float(usd))))
+        self._push((t, _KIND_RANK[EgressBilled.kind], provider,
+                    EgressBilled(t, provider, float(gb), float(usd))))
 
     def job_finished(self, t, job, attempts):
         t, j = float(t), int(job)
-        self._raw.append((t, _KIND_RANK[JobFinished.kind], j,
-                          JobFinished(t, j, int(attempts))))
+        self._push((t, _KIND_RANK[JobFinished.kind], j,
+                    JobFinished(t, j, int(attempts))))
 
 
 def _timeline_trace_event(rec: Mapping) -> TraceEvent:
@@ -353,16 +388,10 @@ class CampaignTrace:
         """One meta header line + one compact JSON object per event.
         ``sort_keys`` + fixed separators make the bytes canonical: equal
         traces serialize to equal strings, whichever engine emitted them."""
-        head = {"schema_version": TRACE_SCHEMA_VERSION,
-                "kind": "campaign_trace", "name": self.name,
-                "seed": self.seed, "duration_h": self.duration_h,
-                "dt_h": self.dt_h, "events": len(self.events)}
-        dump = json.dumps
-        lines = [dump(head, sort_keys=True, separators=(",", ":"),
-                      allow_nan=False)]
-        lines.extend(dump(event_to_dict(ev), sort_keys=True,
-                          separators=(",", ":"), allow_nan=False)
-                     for ev in self.events)
+        lines = [dump_line(trace_header(self.name, self.seed,
+                                        self.duration_h, self.dt_h,
+                                        len(self.events)))]
+        lines.extend(dump_line(event_to_dict(ev)) for ev in self.events)
         return "\n".join(lines) + "\n"
 
     @classmethod

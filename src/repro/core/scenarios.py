@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import warnings
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.campaign import (OUTAGE_AT_H, OUTAGE_DURATION_H, PAPER_RAMP,
                                  POST_OUTAGE_TARGET, RampStage, _timeline)
@@ -375,6 +375,44 @@ def planning_grid(price_scales: Sequence[float] = (0.8, 0.9, 1.0,
                      f"-b{int(b / 1000)}k",
                 price_scale=p, budget_floor_fraction=f, budget=b)
             for p in price_scales for f in floors for b in budgets]
+
+
+def pareto_grid(curves: Sequence[Optional[str]] = (None, "drift-up",
+                                                   "azure-squeeze"),
+                slices: Sequence[int] = (1, 4),
+                planes: Sequence[Optional[str]] = (None, "federated"),
+                size_gb: float = 25.0) -> List[CampaignSpec]:
+    """The cost-vs-goodput frontier candidate set: every (market curve
+    x GPU slicing x data plane) paper variant — the axes the repo
+    already prices (``MARKET_CURVES``, ``GpuSlicing``, ``DATA_PLANES``)
+    composed into one sweepable grid for
+    ``analysis.pareto.frontier()`` / the ``campaigns pareto`` CLI.
+    ``None`` entries mean "paper baseline" on that axis; 12 specs by
+    default."""
+    from dataclasses import replace as _replace
+    specs = []
+    for c in curves:
+        for k in slices:
+            for plane in planes:
+                kw = {}
+                if c is not None:
+                    curve = MARKET_CURVES[c]
+                    if curve.provider is not None and k > 1:
+                        # slicing renames catalog providers to "name/k";
+                        # a provider-targeted curve must follow
+                        curve = _replace(curve,
+                                         provider=f"{curve.provider}/{k}")
+                    kw["timeline"] = _sorted_timeline(*PAPER_TIMELINE,
+                                                      curve)
+                if k > 1:
+                    kw["gpu_slicing"] = GpuSlicing(slices=k)
+                if plane is not None:
+                    kw["dataplane"] = DATA_PLANES[plane]
+                    kw["job_input_gb"] = size_gb
+                specs.append(paper_spec(
+                    name=f"par-{c or 'flat'}-s{k}-{plane or 'nodata'}",
+                    **kw))
+    return specs
 
 
 def default_suite() -> List[CampaignSpec]:

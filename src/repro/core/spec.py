@@ -482,6 +482,12 @@ class TimelineController:
         self.log.append(line)
         if event is not None:
             self.events_fired.append(event)
+            if self.sim.recorder is not None:
+                # mirror timeline provenance into the trace recorder
+                # in-band (a no-op for in-memory collection, where
+                # build_trace folds events_fired in at freeze time;
+                # the streaming recorder emits it immediately)
+                self.sim.recorder.timeline_fired(event)
 
     # -- EngineOps (the registry's apply() targets) ------------------------
     def scale_to(self, n: int):
@@ -531,35 +537,52 @@ class TimelineController:
                 f"cap fleet at {self.downscale_target}")
 
     def _apply_cap(self, sim):
-        self.events_fired.append(
-            timeline_registry.apply_budget_cap(self, sim.now))
+        rec = timeline_registry.apply_budget_cap(self, sim.now)
+        self.events_fired.append(rec)
+        if sim.recorder is not None:
+            sim.recorder.timeline_fired(rec)
 
 
 def check_collect(collect: str):
     """Shared validation for the ``collect=`` results knob."""
-    if collect not in ("summary", "trace"):
+    if collect not in ("summary", "trace", "stream"):
         raise ValueError(f"unknown collect mode {collect!r} "
-                         "(expected 'summary' or 'trace')")
+                         "(expected 'summary', 'trace' or 'stream')")
 
 
 def run_solo(spec, seed: int, engine: Optional[str] = None,
-             collect: str = "summary"
+             collect: str = "summary", sink=None
              ) -> Tuple["CampaignResult", TimelineController]:
     """Reference execution of one (spec, seed) campaign on a solo
     ``CloudSimulator`` (array engine by default).  The batched sweep
     engine is pinned lane-by-lane against this path.  With
     ``collect="trace"`` the typed event stream is recorded (RNG-free —
     the campaign itself is unchanged) and returned as
-    ``CampaignResult.trace``."""
+    ``CampaignResult.trace``; with ``collect="stream"`` it is fed
+    through ``sink`` (a :class:`~repro.core.traceops.TraceSink`) in
+    bounded tick-windows instead, and ``CampaignResult.trace`` stays
+    ``None``."""
     spec = spec.to_spec().validate()
     check_collect(collect)
-    rec = TraceRecorder() if collect == "trace" else None
+    if collect == "stream":
+        if sink is None:
+            raise ValueError('collect="stream" needs a sink= '
+                             "(e.g. traceops.JsonlStreamSink)")
+        from repro.core.traceops import StreamingRecorder
+        rec = StreamingRecorder(sink)
+    else:
+        rec = TraceRecorder() if collect == "trace" else None
     sim = CloudSimulator.from_spec(spec, seed, engine=engine, recorder=rec)
     ctl = TimelineController(sim, spec)
     sim.run_until(spec.duration_h)
     results = sim.results()
-    trace = None if rec is None else build_trace(
-        spec.name, seed, spec.duration_h, spec.dt_h, rec, ctl.events_fired)
+    if collect == "stream":
+        rec.finish(spec.name, seed, spec.duration_h, spec.dt_h)
+        trace = None
+    else:
+        trace = None if rec is None else build_trace(
+            spec.name, seed, spec.duration_h, spec.dt_h, rec,
+            ctl.events_fired)
     res = CampaignResult.from_results(
         results, spec=spec, seed=seed, engine=sim.engine_kind,
         events_fired=tuple(ctl.events_fired), log=tuple(ctl.log),

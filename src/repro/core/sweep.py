@@ -215,15 +215,27 @@ def _prepare(sc, seed: int) -> Tuple[tuple, _Lane]:
 class BatchedFleetEngine:
     """B lock-step campaigns in one struct-of-arrays control plane."""
 
-    def __init__(self, lanes: Sequence[_Lane], collect: bool = False):
+    def __init__(self, lanes: Sequence[_Lane], collect: bool = False,
+                 sinks=None):
         self.lanes = list(lanes)
         B = len(self.lanes)
         assert B > 0
         self.B = B
         # per-lane typed event recorders (events.TraceRecorder); RNG-free,
-        # so collecting traces never changes any lane
-        self.recorders: Optional[List[TraceRecorder]] = \
-            [TraceRecorder() for _ in range(B)] if collect else None
+        # so collecting traces never changes any lane.  ``sinks`` swaps
+        # them for streaming recorders (traceops.StreamingRecorder) that
+        # flush bounded tick-windows instead of accumulating.
+        self._streaming = sinks is not None
+        if self._streaming:
+            if len(sinks) != B:
+                raise ValueError(f"need one sink per lane: got "
+                                 f"{len(sinks)} sinks for {B} lanes")
+            from repro.core.traceops import StreamingRecorder
+            self.recorders: Optional[List[TraceRecorder]] = \
+                [StreamingRecorder(s) for s in sinks]
+        else:
+            self.recorders = \
+                [TraceRecorder() for _ in range(B)] if collect else None
         ref = self.lanes[0]
         pairs = ref.pairs
         G = len(pairs)
@@ -645,7 +657,10 @@ class BatchedFleetEngine:
             # this tick, exactly like the solo sim.at(now, ...) insertion
             if self.cap_pending[b]:
                 ops = _LaneOps(self, b, now)
-                fired.append(timeline_registry.apply_budget_cap(ops, now))
+                rec = timeline_registry.apply_budget_cap(ops, now)
+                fired.append(rec)
+                if self.recorders is not None:
+                    self.recorders[b].timeline_fired(rec)
                 self.cap_pending[b] = False
             evs = self.events[b]
             while self.ev_ptr[b] < len(evs) \
@@ -654,7 +669,10 @@ class BatchedFleetEngine:
                 self.ev_ptr[b] += 1
                 if ops is None:
                     ops = _LaneOps(self, b, now)
-                fired.append(apply_op(ops, op_kind, arg, now))
+                rec = apply_op(ops, op_kind, arg, now)
+                fired.append(rec)
+                if self.recorders is not None:
+                    self.recorders[b].timeline_fired(rec)
             self.next_event_t[b] = evs[self.ev_ptr[b]][0] \
                 if self.ev_ptr[b] < len(evs) else np.inf
         self._next_wake = float(self.next_event_t.min())
@@ -1280,8 +1298,9 @@ class BatchedFleetEngine:
     def lane_trace(self, b: int) -> Optional[CampaignTrace]:
         """The lane's typed event trace (``collect`` engines only) —
         byte-identical to the solo engines' trace at the same
-        (spec, seed)."""
-        if self.recorders is None:
+        (spec, seed).  Streaming lanes fed their events to a sink and
+        hold nothing to build from."""
+        if self.recorders is None or self._streaming:
             return None
         ln = self.lanes[b]
         return build_trace(ln.spec.name, ln.seed, self.duration, self.dt,
@@ -1359,13 +1378,24 @@ _MAX_LANES_PER_ENGINE = 64
 
 def run_batched_detailed(lane_specs: Sequence[Tuple[CampaignSpec, int]],
                          max_lanes: int = _MAX_LANES_PER_ENGINE,
-                         collect: str = "summary"
+                         collect: str = "summary", sinks=None
                          ) -> List[Tuple[dict, List[dict],
                                          Optional[CampaignTrace]]]:
     """Run every (spec, seed) lane, batching lock-step-compatible lanes
     into shared engines (chunked to keep the working set in cache);
     returns per-lane ``(results, events_fired, trace)`` in input order
-    (``trace`` is None unless ``collect="trace"``)."""
+    (``trace`` is None unless ``collect="trace"``).  With
+    ``collect="stream"`` each lane's canonical event stream goes to the
+    matching entry of ``sinks`` (one traceops.TraceSink per lane, input
+    order) instead of being held in memory — ``trace`` stays None."""
+    if collect == "stream":
+        if sinks is None or len(sinks) != len(lane_specs):
+            raise ValueError(
+                'collect="stream" needs sinks= with one '
+                "traceops.TraceSink per lane")
+    elif sinks is not None:
+        raise ValueError('sinks= is only meaningful with '
+                         'collect="stream"')
     prepared = [_prepare(sc, seed) for sc, seed in lane_specs]
     batches: Dict[tuple, List[int]] = {}
     for i, (key, _lane) in enumerate(prepared):
@@ -1374,8 +1404,16 @@ def run_batched_detailed(lane_specs: Sequence[Tuple[CampaignSpec, int]],
     for idxs in batches.values():
         for c in range(0, len(idxs), max_lanes):
             chunk = idxs[c:c + max_lanes]
+            chunk_sinks = [sinks[i] for i in chunk] \
+                if sinks is not None else None
             eng = BatchedFleetEngine([prepared[i][1] for i in chunk],
-                                     collect=(collect == "trace")).run()
+                                     collect=(collect == "trace"),
+                                     sinks=chunk_sinks).run()
+            if chunk_sinks is not None:
+                for j in range(len(chunk)):
+                    ln = eng.lanes[j]
+                    eng.recorders[j].finish(ln.spec.name, ln.seed,
+                                            eng.duration, eng.dt)
             for j, i in enumerate(chunk):
                 out[i] = (eng.lane_results(j), eng.lane_events(j),
                           eng.lane_trace(j))

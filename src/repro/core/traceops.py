@@ -1,0 +1,507 @@
+"""Trace analytics: streaming collection and campaign diffing.
+
+The typed :class:`~repro.core.events.CampaignTrace` (byte-identical
+across the solo object, solo array and batched engines) is the repo's
+operational record of a campaign — but until this module it could only
+be held whole in memory and compared by eyeball.  Two new surfaces fix
+that:
+
+**Streaming collection** (``api.run(..., collect="stream", sink=...)``)
+feeds canonicalized events through a bounded-window
+:class:`StreamingRecorder` into a :class:`TraceSink` as the campaign
+runs, so a 100k-instance multi-week trace never exists as one Python
+list.  The stream is *byte-identical* to the in-memory
+``events.build_trace`` path: every engine records all of a tick's
+events before any later tick's (each carries the tick's ``now``), so
+the recorder sees a non-decreasing time stream and can close one
+tick-window at a time; sorting each window by the canonical
+``(t, kind rank, entity id)`` key with a stable sort and concatenating
+windows reproduces ``build_trace``'s single stable global sort exactly
+(equal-keyed events always share a window).  Any out-of-order record is
+an engine bug and raises rather than silently reordering.
+
+**Trace diffing** (:func:`diff_traces`, ``python -m repro.campaigns
+diff a.jsonl b.jsonl.gz``) aligns two traces' entity timelines —
+instances, pilots, jobs — and reports the first divergence point in
+the canonical stream, per-kind added/removed/changed counts, and
+deltas of the trace-derived digests (jobs, accel-hours from integrated
+instance lifetimes — the goodput axis — and the metered egress GB/$,
+the data-plane cost axis; per-GPU-hour billing is priced outside the
+trace).  ``diff_traces(t, t)`` is empty; the CLI exits 1 on any
+divergence, which makes committed traces a CI equivalence gate.
+"""
+from __future__ import annotations
+
+import gzip
+import os
+import shutil
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
+
+from repro.core.events import (CampaignTrace, TraceRecorder, _KIND_RANK,
+                               _timeline_trace_event, dump_line,
+                               event_to_dict, trace_header)
+
+DIFF_SCHEMA_VERSION = 1
+
+
+# -- sinks -----------------------------------------------------------------
+
+class TraceSink:
+    """Receives one campaign's canonical event stream.
+
+    ``emit(ev)`` is called once per trace event, in exactly the order
+    ``CampaignTrace.events`` would hold; ``close(header)`` is called
+    once at end-of-campaign with the JSONL meta header dict (it carries
+    the final event count, which is only known then)."""
+
+    def emit(self, ev):
+        raise NotImplementedError
+
+    def close(self, header: dict):
+        """Finalize the sink; default is a no-op."""
+
+
+class CallbackSink(TraceSink):
+    """Adapter: every event to ``fn(event)``; optional ``on_close``
+    receives the meta header dict."""
+
+    def __init__(self, fn: Callable, on_close: Optional[Callable] = None):
+        self.fn = fn
+        self.on_close = on_close
+        self.events_seen = 0
+
+    def emit(self, ev):
+        self.events_seen += 1
+        self.fn(ev)
+
+    def close(self, header: dict):
+        if self.on_close is not None:
+            self.on_close(header)
+
+
+class JsonlStreamSink(TraceSink):
+    """Streams canonical JSONL trace bytes to ``path`` (a ``.gz``
+    suffix gzips transparently, ``mtime=0`` for byte-reproducible
+    archives — the same convention as ``campaigns trace --out``).
+
+    The JSONL header line carries the total event count, which is only
+    known at end-of-campaign, so event lines are spooled to
+    ``path + ".spool"`` during the run and the final file is assembled
+    at ``close()`` (header + streamed spool copy).  Memory stays
+    O(one tick window) regardless of campaign size; the finished bytes
+    are identical to ``CampaignTrace.to_jsonl()`` by construction —
+    both go through ``events.dump_line`` / ``events.trace_header``."""
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        self._spool_path = self.path + ".spool"
+        self._spool = None
+        self.events_written = 0
+        self.closed = False
+
+    def emit(self, ev):
+        if self.closed:
+            raise ValueError(f"sink {self.path!r} is already closed")
+        if self._spool is None:
+            self._spool = open(self._spool_path, "w", newline="\n")
+        self._spool.write(dump_line(event_to_dict(ev)) + "\n")
+        self.events_written += 1
+
+    def close(self, header: dict):
+        if self.closed:
+            raise ValueError(f"sink {self.path!r} is already closed")
+        if self._spool is not None:
+            self._spool.close()
+            self._spool = None
+        if self.path.endswith(".gz"):
+            out = gzip.GzipFile(self.path, "wb", mtime=0)
+        else:
+            out = open(self.path, "wb")
+        try:
+            out.write((dump_line(header) + "\n").encode("utf-8"))
+            if os.path.exists(self._spool_path):
+                with open(self._spool_path, "rb") as spool:
+                    shutil.copyfileobj(spool, out, 1 << 20)
+        finally:
+            out.close()
+        if os.path.exists(self._spool_path):
+            os.remove(self._spool_path)
+        self.closed = True
+
+
+# -- the streaming recorder ------------------------------------------------
+
+class StreamingRecorder(TraceRecorder):
+    """Drop-in :class:`~repro.core.events.TraceRecorder` that forwards
+    canonicalized events to a :class:`TraceSink` one tick-window at a
+    time instead of accumulating them.
+
+    Correctness rests on the engines' recording discipline (pinned by
+    the differential stream tests): every event is recorded with the
+    tick's ``now``, and ticks advance monotonically, so the recorder
+    sees a non-decreasing ``t`` stream.  Each window holds one ``t``'s
+    events; closing a window stable-sorts it by the canonical
+    ``(t, kind rank, entity id)`` key and emits — the concatenation of
+    sorted windows equals ``build_trace``'s global stable sort because
+    equal-keyed events always land in the same window.  A record with
+    ``t`` earlier than the open window is an engine bug and raises.
+
+    Timeline provenance arrives through :meth:`timeline_fired` (engines
+    mirror every ``events_fired`` append there); the arrival sequence
+    number is the rank-0 tie-break key, matching ``build_trace``'s
+    ``enumerate(events_fired)`` order."""
+
+    __slots__ = ("sink", "_window", "_window_t", "_seq", "count",
+                 "finished")
+
+    def __init__(self, sink: TraceSink):
+        super().__init__()
+        self.sink = sink
+        self._window: List[tuple] = []
+        self._window_t: Optional[float] = None
+        self._seq = 0                   # timeline provenance tie-break
+        self.count = 0                  # events emitted so far
+        self.finished = False
+
+    def _push(self, item: tuple):
+        t = item[0]
+        if self.finished:
+            raise ValueError("StreamingRecorder already finished")
+        if self._window_t is None:
+            self._window_t = t
+        elif t != self._window_t:
+            if t < self._window_t:
+                raise ValueError(
+                    f"out-of-order trace event at t={t} after window "
+                    f"t={self._window_t}: engines must record each "
+                    f"event with its tick's now")
+            self._flush_window()
+            self._window_t = t
+        self._window.append(item)
+
+    def timeline_fired(self, rec: Mapping):
+        ev = _timeline_trace_event(rec)
+        self._push((ev.t, _KIND_RANK[ev.kind], self._seq, ev))
+        self._seq += 1
+
+    def _flush_window(self):
+        w = self._window
+        w.sort(key=lambda it: it[:3])
+        emit = self.sink.emit
+        for it in w:
+            emit(it[3])
+        self.count += len(w)
+        self._window = []
+
+    def finish(self, name: str, seed: int, duration_h: float,
+               dt_h: float) -> int:
+        """Flush the open window and close the sink with the meta
+        header; returns the total event count."""
+        if self.finished:
+            raise ValueError("StreamingRecorder already finished")
+        self._flush_window()
+        self.finished = True
+        self.sink.close(trace_header(name, seed, duration_h, dt_h,
+                                     self.count))
+        return self.count
+
+
+# -- file loading ----------------------------------------------------------
+
+def load_trace(path: str) -> CampaignTrace:
+    """Read a serialized trace from ``path`` (``.gz`` transparently)."""
+    if str(path).endswith(".gz"):
+        with gzip.open(path, "rt", encoding="utf-8") as f:
+            text = f.read()
+    else:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+    return CampaignTrace.from_jsonl(text)
+
+
+# -- trace digests ---------------------------------------------------------
+
+@dataclass(frozen=True)
+class TraceDigest:
+    """Campaign totals derivable from the trace alone.  ``accel_hours``
+    integrates instance lifetimes (launch -> stop/preempt, still-up
+    instances billed to ``duration_h``) — the trace-side goodput axis;
+    ``egress_usd`` is the only dollar figure a trace carries (per-
+    GPU-hour billing rates are priced outside the event stream)."""
+    events: int
+    launches: int
+    preemptions: int
+    nat_drops: int
+    jobs_finished: int
+    accel_hours: float
+    egress_gb: float
+    egress_usd: float
+    cache_hit_fraction: float
+
+    def to_dict(self) -> dict:
+        return {"events": self.events, "launches": self.launches,
+                "preemptions": self.preemptions,
+                "nat_drops": self.nat_drops,
+                "jobs_finished": self.jobs_finished,
+                "accel_hours": self.accel_hours,
+                "egress_gb": self.egress_gb,
+                "egress_usd": self.egress_usd,
+                "cache_hit_fraction": self.cache_hit_fraction}
+
+
+def trace_digest(trace: CampaignTrace) -> TraceDigest:
+    """Compute the :class:`TraceDigest` of one trace."""
+    launches = preempts = drops = jobs = hits = misses = 0
+    egress_gb = egress_usd = 0.0
+    start: Dict[int, float] = {}
+    lifetime = 0.0
+    for ev in trace.events:
+        k = ev.kind
+        if k == "launch":
+            launches += 1
+            start[ev.instance] = ev.t
+        elif k in ("stop", "preempt"):
+            if k == "preempt":
+                preempts += 1
+            t0 = start.pop(ev.instance, None)
+            if t0 is not None:
+                lifetime += ev.t - t0
+        elif k == "nat_drop":
+            drops += 1
+        elif k == "job_done":
+            jobs += 1
+        elif k == "stagein":
+            if ev.cache_hit:
+                hits += 1
+            else:
+                misses += 1
+        elif k == "egress":
+            egress_gb += ev.gb
+            egress_usd += ev.usd
+    # instances still up at end-of-campaign billed to the horizon
+    for t0 in start.values():
+        lifetime += trace.duration_h - t0
+    return TraceDigest(
+        events=len(trace.events), launches=launches,
+        preemptions=preempts, nat_drops=drops, jobs_finished=jobs,
+        accel_hours=round(lifetime, 3), egress_gb=round(egress_gb, 3),
+        egress_usd=round(egress_usd, 3),
+        cache_hit_fraction=round(hits / (hits + misses), 4)
+        if hits + misses else 0.0)
+
+
+# -- the diff engine -------------------------------------------------------
+
+#: kind -> (entity domain, id attribute); price/timeline have no entity
+#: identity and align by their provenance sequence position instead
+_ENTITY_ATTR = {"launch": ("instances", "instance"),
+                "stop": ("instances", "instance"),
+                "preempt": ("instances", "instance"),
+                "pilot": ("pilots", "pilot"),
+                "nat_drop": ("pilots", "pilot"),
+                "stagein": ("pilots", "pilot"),
+                "stagein_done": ("pilots", "pilot"),
+                "job_done": ("jobs", "job"),
+                "egress": ("egress", "provider"),
+                "price": (None, None), "timeline": (None, None)}
+
+_HEADER_FIELDS = ("name", "seed", "duration_h", "dt_h")
+
+
+@dataclass(frozen=True)
+class Divergence:
+    """First canonical-stream position where the traces disagree.
+    ``a`` / ``b`` are the differing events as dicts (None where one
+    stream has already ended); ``t`` is the earlier of the two sides'
+    timestamps — the first simulated moment the campaigns differ."""
+    index: int
+    t: float
+    a: Optional[dict]
+    b: Optional[dict]
+
+    def to_dict(self) -> dict:
+        return {"index": self.index, "t": self.t, "a": self.a,
+                "b": self.b}
+
+
+def _group_by(events, attr: Optional[str]) -> Dict:
+    g: Dict = {}
+    for ev in events:
+        g.setdefault(getattr(ev, attr) if attr else 0, []).append(ev)
+    return g
+
+
+def _aligned_event_counts(ga: Dict, gb: Dict) -> Tuple[int, int, int]:
+    """Per-entity positional alignment: (added, removed, changed) event
+    counts.  A retimed/retargeted event on a shared entity counts as
+    changed; surplus events count as added (b-only) / removed (a-only)."""
+    added = removed = changed = 0
+    for k in set(ga) | set(gb):
+        ea, eb = ga.get(k, ()), gb.get(k, ())
+        n = min(len(ea), len(eb))
+        changed += sum(1 for i in range(n) if ea[i] != eb[i])
+        removed += len(ea) - n
+        added += len(eb) - n
+    return added, removed, changed
+
+
+def _entity_counts(ga: Dict, gb: Dict) -> Tuple[int, int, int]:
+    """(added, removed, changed) at entity granularity: ids only in b,
+    only in a, and shared ids whose timelines differ."""
+    sa, sb = set(ga), set(gb)
+    changed = sum(1 for k in sa & sb if ga[k] != gb[k])
+    return len(sb - sa), len(sa - sb), changed
+
+
+@dataclass(frozen=True)
+class TraceDiff:
+    """Structured comparison of two campaign traces (see
+    :func:`diff_traces`)."""
+    a_meta: dict
+    b_meta: dict
+    header_changes: Dict[str, Tuple]
+    divergence: Optional[Divergence]
+    by_kind: Dict[str, Dict[str, int]]
+    entities: Dict[str, Dict[str, int]]
+    digest_a: TraceDigest = field(repr=False, default=None)
+    digest_b: TraceDigest = field(repr=False, default=None)
+
+    @property
+    def identical(self) -> bool:
+        return self.divergence is None and not self.header_changes
+
+    def deltas(self) -> Dict[str, float]:
+        """b - a per numeric digest field (jobs, accel-hours, egress)."""
+        da, db = self.digest_a.to_dict(), self.digest_b.to_dict()
+        return {k: round(db[k] - da[k], 6) for k in da}
+
+    def to_dict(self) -> dict:
+        """Stable machine-readable form (the ``campaigns diff --json``
+        payload and the committed golden-diff schema)."""
+        return {"schema_version": DIFF_SCHEMA_VERSION,
+                "kind": "trace_diff",
+                "identical": self.identical,
+                "a": dict(self.a_meta), "b": dict(self.b_meta),
+                "header_changes": {k: list(v) for k, v in
+                                   sorted(self.header_changes.items())},
+                "divergence": None if self.divergence is None
+                else self.divergence.to_dict(),
+                "by_kind": {k: dict(v) for k, v in
+                            sorted(self.by_kind.items())},
+                "entities": {k: dict(v) for k, v in
+                             sorted(self.entities.items())},
+                "digest_a": self.digest_a.to_dict(),
+                "digest_b": self.digest_b.to_dict(),
+                "deltas": self.deltas()}
+
+    def summary(self) -> str:
+        """Human-readable report (the ``campaigns diff`` stdout)."""
+        am, bm = self.a_meta, self.b_meta
+        lines = [f"trace a: {am['name']!r} seed={am['seed']} "
+                 f"({am['events']} events)",
+                 f"trace b: {bm['name']!r} seed={bm['seed']} "
+                 f"({bm['events']} events)"]
+        if self.identical:
+            lines.append("traces are identical")
+            return "\n".join(lines)
+        for k, (va, vb) in sorted(self.header_changes.items()):
+            lines.append(f"header {k}: {va!r} -> {vb!r}")
+        if self.divergence is not None:
+            d = self.divergence
+            lines.append(f"first divergence at t={d.t:g}h "
+                         f"(event #{d.index}):")
+            lines.append(f"  a: {d.a}")
+            lines.append(f"  b: {d.b}")
+        if self.by_kind:
+            lines.append("events by kind (+added / -removed / ~changed):")
+            for k, c in sorted(self.by_kind.items()):
+                lines.append(f"  {k:12s} +{c['added']} -{c['removed']} "
+                             f"~{c['changed']}")
+        if self.entities:
+            lines.append("entities (+added / -removed / ~changed):")
+            for k, c in sorted(self.entities.items()):
+                lines.append(f"  {k:12s} +{c['added']} -{c['removed']} "
+                             f"~{c['changed']}")
+        lines.append("digest deltas (b - a): " + ", ".join(
+            f"{k}={v:+g}" for k, v in self.deltas().items() if v))
+        return "\n".join(lines)
+
+
+def diff_traces(a: CampaignTrace, b: CampaignTrace) -> TraceDiff:
+    """Compare two campaign traces.
+
+    Reports (1) the first divergence point in the canonical event
+    stream, (2) per-kind added/removed/changed event counts under
+    per-entity positional alignment (instances by instance id, pilots
+    by pilot id, jobs by job id, egress by provider; price/timeline by
+    provenance order), (3) entity-level added/removed/changed counts
+    per domain, and (4) deltas of the trace-derived digests.
+    ``diff_traces(t, t)`` returns an empty (``identical``) diff."""
+    header_changes = {f: (getattr(a, f), getattr(b, f))
+                      for f in _HEADER_FIELDS
+                      if getattr(a, f) != getattr(b, f)}
+
+    divergence = None
+    n = min(len(a.events), len(b.events))
+    for i in range(n):
+        if a.events[i] != b.events[i]:
+            ea, eb = a.events[i], b.events[i]
+            divergence = Divergence(i, min(ea.t, eb.t),
+                                    event_to_dict(ea), event_to_dict(eb))
+            break
+    if divergence is None and len(a.events) != len(b.events):
+        if len(a.events) > n:
+            ev, d_a, d_b = a.events[n], event_to_dict(a.events[n]), None
+        else:
+            ev, d_a, d_b = b.events[n], None, event_to_dict(b.events[n])
+        divergence = Divergence(n, ev.t, d_a, d_b)
+
+    # partition once per trace, then align per kind
+    part_a: Dict[str, List] = {}
+    part_b: Dict[str, List] = {}
+    for ev in a.events:
+        part_a.setdefault(ev.kind, []).append(ev)
+    for ev in b.events:
+        part_b.setdefault(ev.kind, []).append(ev)
+
+    by_kind: Dict[str, Dict[str, int]] = {}
+    domain_a: Dict[str, Dict] = {}
+    domain_b: Dict[str, Dict] = {}
+    for kind in set(part_a) | set(part_b):
+        domain, attr = _ENTITY_ATTR[kind]
+        ga = _group_by(part_a.get(kind, ()), attr)
+        gb = _group_by(part_b.get(kind, ()), attr)
+        added, removed, changed = _aligned_event_counts(ga, gb)
+        if added or removed or changed:
+            by_kind[kind] = {"added": added, "removed": removed,
+                             "changed": changed}
+        if domain in ("instances", "pilots", "jobs"):
+            for gid, evs in ga.items():
+                domain_a.setdefault(domain, {}).setdefault(
+                    gid, []).extend(evs)
+            for gid, evs in gb.items():
+                domain_b.setdefault(domain, {}).setdefault(
+                    gid, []).extend(evs)
+
+    entities: Dict[str, Dict[str, int]] = {}
+    for domain in set(domain_a) | set(domain_b):
+        # merged-domain per-entity timelines in canonical trace order
+        ga = {k: sorted(v, key=lambda e: (e.t, _KIND_RANK[e.kind]))
+              for k, v in domain_a.get(domain, {}).items()}
+        gb = {k: sorted(v, key=lambda e: (e.t, _KIND_RANK[e.kind]))
+              for k, v in domain_b.get(domain, {}).items()}
+        added, removed, changed = _entity_counts(ga, gb)
+        if added or removed or changed:
+            entities[domain] = {"added": added, "removed": removed,
+                                "changed": changed}
+
+    meta = {tr: {"name": t.name, "seed": t.seed,
+                 "duration_h": t.duration_h, "dt_h": t.dt_h,
+                 "events": len(t.events)}
+            for tr, t in (("a", a), ("b", b))}
+    return TraceDiff(a_meta=meta["a"], b_meta=meta["b"],
+                     header_changes=header_changes,
+                     divergence=divergence, by_kind=by_kind,
+                     entities=entities, digest_a=trace_digest(a),
+                     digest_b=trace_digest(b))

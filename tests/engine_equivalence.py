@@ -151,6 +151,33 @@ def assert_traces_equivalent(spec, seed, engines=("batched",)) -> str:
     return ref
 
 
+def assert_stream_equivalent(spec, seed, tmp_dir,
+                             engines=("array", "object", "batched"),
+                             ref: str = None) -> str:
+    """The streaming contract: ``collect="stream"`` through a gzip
+    :class:`~repro.core.traceops.JsonlStreamSink`, re-read from disk,
+    equals the ``collect="trace"`` serialized bytes on every engine in
+    ``engines``.  ``tmp_dir`` is a writable directory (pytest's
+    ``tmp_path``); pass ``ref`` to reuse already-computed reference
+    JSONL.  Returns the reference JSONL."""
+    import gzip
+    import os
+    from repro.core.traceops import JsonlStreamSink
+    if ref is None:
+        ref = serialized_trace(spec, seed)
+    ref_bytes = ref.encode("utf-8")
+    for engine in engines:
+        path = os.path.join(str(tmp_dir), f"stream-{engine}.jsonl.gz")
+        sink = JsonlStreamSink(path)
+        res = run(spec, seeds=seed, engine=engine, collect="stream",
+                  sink=sink)
+        assert res.trace is None, engine       # streamed, not held
+        assert sink.closed and not os.path.exists(path + ".spool")
+        with gzip.open(path, "rb") as f:
+            assert f.read() == ref_bytes, engine
+    return ref
+
+
 # -- hypothesis strategies (exported only where hypothesis exists) ---------
 
 try:

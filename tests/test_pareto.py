@@ -1,0 +1,171 @@
+"""analysis/pareto.py — frontier correctness on hand-built dominance
+fixtures, seed aggregation, measured-goodput augmentation, the
+``scenarios.pareto_grid()`` candidate set, and the ``campaigns pareto``
+CLI happy path (argument-error regressions live in test_traceops.py
+with the other CLI coverage).
+"""
+import json
+
+import pytest
+
+from repro.analysis.pareto import (ParetoFrontier, ParetoPoint, frontier,
+                                   goodput_rows)
+from repro.campaigns import main as campaigns_main
+from repro.core import scenarios
+from repro.core.api import run, sweep as api_sweep
+from repro.core.spec import lint_spec
+from tests.test_events import SMALL_SPEC
+
+
+def _row(scenario, cost, value, seed=2021, metric="accel_days"):
+    return {"scenario": scenario, "seed": seed, "cost": cost,
+            metric: value}
+
+
+# -- dominance fixtures: the exact non-dominated set -----------------------
+
+def test_frontier_exact_non_dominated_set():
+    rows = [
+        _row("cheap-slow", 100.0, 10.0),     # frontier
+        _row("mid", 200.0, 30.0),            # frontier
+        _row("dear-fast", 400.0, 45.0),      # frontier
+        _row("dominated-1", 250.0, 25.0),    # mid beats it on both
+        _row("dominated-2", 400.0, 30.0),    # mid: cheaper, same value
+        _row("dominated-3", 200.0, 20.0),    # mid: same cost, more value
+    ]
+    front = frontier(rows)
+    assert [p.scenario for p in front.frontier] \
+        == ["cheap-slow", "mid", "dear-fast"]
+    assert {p.scenario for p in front.dominated} \
+        == {"dominated-1", "dominated-2", "dominated-3"}
+    assert len(front.points) == 6            # dominated points are kept
+    assert [p.scenario for p in front.points] \
+        == sorted((p.scenario for p in front.points),
+                  key=lambda n: next(q.cost for q in front.points
+                                     if q.scenario == n))
+
+
+def test_frontier_single_point_and_duplicates():
+    assert frontier([_row("only", 10.0, 1.0)]).frontier[0].on_frontier
+    # exact ties dominate nothing: both stay on the frontier
+    front = frontier([_row("a", 10.0, 5.0), _row("b", 10.0, 5.0)])
+    assert all(p.on_frontier for p in front.points)
+
+
+def test_frontier_strictly_better_point_dominates_everything():
+    rows = [_row("best", 1.0, 100.0)] \
+        + [_row(f"w{i}", 1.0 + i, 100.0 - i) for i in range(1, 5)]
+    front = frontier(rows)
+    assert [p.scenario for p in front.frontier] == ["best"]
+    assert len(front.dominated) == 4
+
+
+def test_frontier_aggregates_seeds_by_mean():
+    rows = [_row("a", 100.0, 10.0, seed=1), _row("a", 300.0, 30.0, seed=2),
+            _row("b", 150.0, 15.0, seed=1), _row("b", 250.0, 35.0, seed=2)]
+    front = frontier(rows)
+    pa = next(p for p in front.points if p.scenario == "a")
+    pb = next(p for p in front.points if p.scenario == "b")
+    assert (pa.cost, pa.value, pa.seeds) == (200.0, 20.0, 2)
+    assert (pb.cost, pb.value, pb.seeds) == (200.0, 25.0, 2)
+    assert pb.on_frontier and not pa.on_frontier    # same cost, more value
+
+
+def test_frontier_axis_selection_and_errors():
+    rows = [_row("a", 10.0, 5.0, metric="jobs_finished")]
+    front = frontier(rows, y="jobs_finished")
+    assert front.y == "jobs_finished" and front.points[0].value == 5.0
+    with pytest.raises(ValueError, match="no 'accel_days'"):
+        frontier(rows)                       # default y missing from rows
+    with pytest.raises(ValueError, match="at least one"):
+        frontier([])
+
+
+def test_frontier_serialization_and_table():
+    front = frontier([_row("a", 10.0, 5.0), _row("b", 20.0, 1.0)])
+    d = front.to_dict()
+    assert json.loads(json.dumps(d)) == d
+    assert d["points"][0] == {"scenario": "a", "cost": 10.0, "value": 5.0,
+                              "seeds": 1, "on_frontier": True}
+    table = front.table()
+    assert "| * | a" in table and "|   | b" in table
+    assert isinstance(front, ParetoFrontier)
+    assert all(isinstance(p, ParetoPoint) for p in front.points)
+
+
+def test_frontier_accepts_sweep_result():
+    res = run([SMALL_SPEC], seeds=[2021, 2022])
+    front = frontier(res)
+    assert front.points[0].scenario == "small"
+    assert front.points[0].seeds == 2
+    assert front.points[0].on_frontier
+
+
+# -- measured goodput from collected traces --------------------------------
+
+def test_goodput_rows_augments_trace_sweeps():
+    res = api_sweep([SMALL_SPEC], [2021], collect="trace")
+    rows = goodput_rows(res)
+    assert len(rows) == 1
+    g = rows[0]["goodput_fraction"]
+    assert 0.0 < g <= 1.0
+    assert res.rows[0] is not rows[0]        # copied, not mutated
+    assert "goodput_fraction" not in res.rows[0]
+    front = frontier(rows, y="goodput_fraction")
+    assert front.points[0].value == round(g, 6)
+
+
+def test_goodput_rows_requires_traces():
+    res = api_sweep([SMALL_SPEC], [2021])
+    with pytest.raises(ValueError, match="collect"):
+        goodput_rows(res)
+
+
+# -- the candidate grid ----------------------------------------------------
+
+def test_pareto_grid_composes_the_three_axes():
+    grid = scenarios.pareto_grid()
+    assert len(grid) == 12                   # 3 curves x 2 slices x 2 planes
+    names = [s.name for s in grid]
+    assert len(set(names)) == 12
+    assert "par-flat-s1-nodata" in names     # the paper baseline corner
+    assert "par-azure-squeeze-s4-federated" in names
+    by_name = {s.name: s for s in grid}
+    assert by_name["par-flat-s1-nodata"].gpu_slicing is None
+    assert by_name["par-flat-s1-nodata"].dataplane is None
+    assert by_name["par-drift-up-s4-federated"].gpu_slicing.slices == 4
+    assert by_name["par-drift-up-s4-federated"].job_input_gb == 25.0
+    for s in grid:
+        assert lint_spec(s) == []            # every candidate lint-clean
+
+
+def test_pareto_grid_axes_are_parameterizable():
+    grid = scenarios.pareto_grid(curves=(None,), slices=(1,),
+                                 planes=(None, "federated"))
+    assert [s.name for s in grid] \
+        == ["par-flat-s1-nodata", "par-flat-s1-federated"]
+
+
+# -- CLI happy path --------------------------------------------------------
+
+def test_cli_pareto_renders_frontier_and_json(tmp_path, capsys):
+    a = tmp_path / "a.spec.json"
+    b = tmp_path / "b.spec.json"
+    a.write_text(SMALL_SPEC.to_json())
+    import dataclasses
+    b.write_text(dataclasses.replace(
+        SMALL_SPEC, name="pricier", price_scale=1.5).to_json())
+    out_json = str(tmp_path / "front.json")
+    rc = campaigns_main(["pareto", str(a), str(b), "--seeds", "2021",
+                         "--json", out_json])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "pareto frontier over 2 scenarios" in out
+    assert "non-dominated: small" in out
+    with open(out_json) as f:
+        payload = json.load(f)
+    assert payload["x"] == "cost" and payload["y"] == "accel_days"
+    scen = {p["scenario"]: p for p in payload["points"]}
+    # same campaign at 1.5x prices: strictly dominated
+    assert scen["small"]["on_frontier"] is True
+    assert scen["pricier"]["on_frontier"] is False

@@ -1,0 +1,272 @@
+"""analysis/ cost-model coverage (previously untested): the roofline
+terms the Pareto tooling trusts for tokens/s-per-dollar inputs.
+
+  * ``count_params`` / ``model_flops`` / ``cache_bytes`` /
+    ``hbm_bytes`` / ``compute_roofline`` pinned per (arch x shape) on
+    two committed ``configs/`` entries — a dense xLSTM and a MoE
+    transformer, exercising both the active/total split and every
+    shape kind,
+  * the HLO text parser (analysis/hlo.py) on a synthetic module with
+    known dot FLOPs, while trip counts, fusion calls and the bf16
+    all-reduce promotion halving,
+  * the artifact renderers (analysis/report.py) on dict fixtures
+    covering ok / skipped / error cells.
+"""
+import json
+
+import pytest
+
+from repro.analysis import roofline as rl
+from repro.analysis.hlo import analyze, parse_module, while_trip_count
+from repro.analysis.report import dryrun_md, fmt_bytes, load, roofline_md
+from repro.configs import get_config, get_shape
+
+XLSTM = "xlstm-350m"
+MOE = "qwen3-moe-30b-a3b"
+
+
+# -- parameter counting: pinned totals -------------------------------------
+
+def test_count_params_pinned_dense_xlstm():
+    total, active = rl.count_params(get_config(XLSTM))
+    assert total == 529_871_872
+    assert active == total                 # dense: every param active
+
+
+def test_count_params_pinned_moe():
+    total, active = rl.count_params(get_config(MOE))
+    assert total == 30_538_727_424         # the "30b" in the name
+    assert active == 3_347_054_592         # the "a3b": top-8 of 128
+    assert active < total
+
+
+# -- model FLOPs per shape kind --------------------------------------------
+
+def test_model_flops_train_prefill_decode():
+    cfg = get_config(MOE)
+    _, active = rl.count_params(cfg)
+    train = get_shape("train_4k")
+    prefill = get_shape("prefill_32k")
+    decode = get_shape("decode_32k")
+    assert rl.model_flops(cfg, train) == 6 * active * train.tokens_per_step
+    assert rl.model_flops(cfg, prefill) \
+        == 2 * active * prefill.tokens_per_step
+    # decode advances one token per sequence
+    assert rl.model_flops(cfg, decode) == 2 * active * decode.global_batch
+    assert rl.model_flops(cfg, train) == 21_057_846_695_165_952
+
+
+def test_model_flops_uses_active_not_total_params():
+    cfg = get_config(MOE)
+    total, active = rl.count_params(cfg)
+    shape = get_shape("decode_32k")
+    assert rl.model_flops(cfg, shape) == 2 * active * shape.global_batch
+    assert rl.model_flops(cfg, shape) < 2 * total * shape.global_batch
+
+
+# -- memory terms ----------------------------------------------------------
+
+def test_cache_bytes_pinned():
+    assert rl.cache_bytes(get_config(XLSTM),
+                          get_shape("decode_32k")) == 12_935_233_536
+    assert rl.cache_bytes(get_config(MOE),
+                          get_shape("decode_32k")) == 412_316_860_416
+
+
+def test_hbm_bytes_decode_touches_active_experts_only():
+    cfg = get_config(MOE)
+    total, active = rl.count_params(cfg)
+    decode = get_shape("decode_32k")
+    hbm = rl.hbm_bytes(cfg, decode, 256)
+    # B=128 tokens x active params each, well below total -> touched
+    # weights are min(total, B * active)
+    touched = min(total, active * decode.global_batch)
+    expected = (touched * 2 + rl.cache_bytes(cfg, decode)) / 256
+    assert hbm == expected == pytest.approx(1_849_196_544.0, abs=1.0)
+
+
+def test_hbm_bytes_train_pinned():
+    assert rl.hbm_bytes(get_config(XLSTM), get_shape("train_4k"), 256) \
+        == pytest.approx(842_562_984.0, abs=1.0)
+    assert rl.hbm_bytes(get_config(MOE), get_shape("train_4k"), 256) \
+        == pytest.approx(5_368_479_744.0, abs=1.0)
+
+
+def test_state_bytes_train_vs_serve():
+    cfg = get_config(XLSTM)
+    total, _ = rl.count_params(cfg)
+    train = rl.state_bytes(cfg, get_shape("train_4k"), 256)
+    serve = rl.state_bytes(cfg, get_shape("decode_32k"), 256)
+    assert train == total * 18.0 / 256
+    assert serve == (total * 2.0
+                     + rl.cache_bytes(cfg, get_shape("decode_32k"))) / 256
+
+
+# -- the roofline itself ---------------------------------------------------
+
+def test_compute_roofline_terms_and_bottleneck():
+    cfg = get_config(XLSTM)
+    shape = get_shape("train_4k")
+    mf = rl.model_flops(cfg, shape)
+    dot_dev = mf / 256 * 1.5               # 1.5x HLO redundancy
+    r = rl.compute_roofline(cfg, shape, 256, dot_dev, 1e9)
+    assert r.compute_s == pytest.approx(dot_dev / rl.PEAK_FLOPS)
+    assert r.memory_s == pytest.approx(
+        rl.hbm_bytes(cfg, shape, 256) / rl.HBM_BW)
+    assert r.collective_s == pytest.approx(1e9 / rl.ICI_BW)
+    assert r.useful_ratio == pytest.approx(1 / 1.5)
+    assert r.bottleneck == "compute"
+    assert r.to_dict()["bottleneck"] == "compute"
+
+
+def test_roofline_bottleneck_flips_with_the_dominant_term():
+    cfg = get_config(MOE)
+    decode = get_shape("decode_32k")
+    mf = rl.model_flops(cfg, decode)
+    r = rl.compute_roofline(cfg, decode, 256, mf / 256, 1e9)
+    # tiny decode FLOPs, big collective -> collective-bound
+    assert r.bottleneck == "collective"
+    r2 = rl.compute_roofline(cfg, decode, 256, mf / 256, 0.0)
+    assert r2.bottleneck == "memory"
+
+
+# -- HLO text parser -------------------------------------------------------
+
+SYNTHETIC_HLO = """\
+HloModule synthetic
+
+%add (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(f32[] %x, f32[] %y)
+}
+
+%layer (p: bf16[128,256], w: bf16[256,512]) -> bf16[128,512] {
+  %p = bf16[128,256]{1,0} parameter(0)
+  %w = bf16[256,512]{1,0} parameter(1)
+  %d = bf16[128,512]{1,0} dot(bf16[128,256]{1,0} %p, bf16[256,512]{1,0} %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %ar = bf16[128,512]{1,0} all-reduce(bf16[128,512]{1,0} %d), to_apply=%add
+}
+
+%body (t: (s32[], bf16[128,256])) -> (s32[], bf16[128,256]) {
+  %t = (s32[], bf16[128,256]) parameter(0)
+  %f = bf16[128,512]{1,0} fusion(bf16[128,256]{1,0} %a, bf16[256,512]{1,0} %wt), kind=kLoop, calls=%layer
+  ROOT %r = (s32[], bf16[128,256]) tuple(%i, %a)
+}
+
+%cond (t: (s32[], bf16[128,256])) -> pred[] {
+  %t = (s32[], bf16[128,256]) parameter(0)
+  %lim = s32[] constant(24)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %lim), direction=LT
+}
+
+ENTRY %main (p0: bf16[128,256], w0: bf16[256,512]) -> bf16[128,512] {
+  %p0 = bf16[128,256]{1,0} parameter(0)
+  %w0 = bf16[256,512]{1,0} parameter(1)
+  %wl = (s32[], bf16[128,256]) while((s32[], bf16[128,256]) %init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"24"}}
+  %d0 = bf16[128,512]{1,0} dot(bf16[128,256]{1,0} %p0, bf16[256,512]{1,0} %w0), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %arp = f32[1024]{0} all-reduce(f32[1024]{0} %g), to_apply=%add_promoted
+  ROOT %out = bf16[128,512]{1,0} add(bf16[128,512]{1,0} %d0, bf16[128,512]{1,0} %f2)
+}
+"""
+
+# one layer dot: 2 * (128*512) * 256 contracted
+_LAYER_FLOPS = 2 * 128 * 512 * 256
+# its bf16 all-reduce payload
+_LAYER_AR = 128 * 512 * 2
+
+
+def test_hlo_parse_module_finds_entry_and_computations():
+    comps, entry = parse_module(SYNTHETIC_HLO)
+    assert entry == "main"
+    assert set(comps) == {"add", "layer", "body", "cond", "main"}
+    assert comps["layer"].symbols["p"] == (128, 256)
+
+
+def test_hlo_analyze_applies_while_trip_multipliers():
+    res = analyze(SYNTHETIC_HLO)
+    # scanned layer x24 trips (via fusion call) + the entry dot
+    assert res["dot_flops"] == 24 * _LAYER_FLOPS + _LAYER_FLOPS
+    # 24 in-loop all-reduces + the promoted f32 one at half wire bytes
+    promoted = 1024 * 4 // 2
+    assert res["collective_bytes"] == 24 * _LAYER_AR + promoted
+    assert res["collective_bytes_by_kind"] \
+        == {"all-reduce": 24 * _LAYER_AR + promoted}
+
+
+def test_hlo_trip_count_falls_back_to_condition_constant():
+    # strip the backend_config annotation: the parser must recover the
+    # trip count from the condition's s32[] constant(24)
+    text = SYNTHETIC_HLO.replace(
+        ', backend_config={"known_trip_count":{"n":"24"}}', "")
+    comps, _entry = parse_module(text)
+    wl = next(i for i in comps["main"].instrs if i.opcode == "while")
+    assert while_trip_count(comps, wl) == 24
+    assert analyze(text)["dot_flops"] == 25 * _LAYER_FLOPS
+
+
+def test_hlo_analyze_empty_module_is_zero():
+    assert analyze("HloModule empty\n") \
+        == {"dot_flops": 0, "collective_bytes": 0,
+            "collective_bytes_by_kind": {}}
+
+
+# -- artifact renderers ----------------------------------------------------
+
+def _cell(arch="xlstm-350m", shape="train_4k", mesh="16x16", status="ok"):
+    return {"arch": arch, "shape": shape, "mesh": mesh, "status": status,
+            "compile_s": 12.3,
+            "memory": {"argument_bytes": 2.5e9, "temp_bytes": 1.5e9},
+            "hlo_parsed": {"dot_flops": 8.0e12,
+                           "collective_bytes": 3.0e8},
+            "roofline": {"compute_s": 0.0406, "memory_s": 0.0031,
+                         "collective_s": 0.006, "bottleneck": "compute",
+                         "hlo_flops_device": 8.0e12,
+                         "model_flops": 1.3e16, "useful_ratio": 0.66}}
+
+
+def test_fmt_bytes_units():
+    assert fmt_bytes(512) == "512B"
+    assert fmt_bytes(2.5e6) == "2.50MB"
+    assert fmt_bytes(3.0e9) == "3.00GB"
+    assert fmt_bytes(1.2e12) == "1.20TB"
+
+
+def test_roofline_md_renders_ok_skipped_and_error_rows():
+    cells = {
+        ("a1", "train_4k", "16x16"): _cell("a1"),
+        ("a2", "train_4k", "16x16"): _cell("a2", status="skipped"),
+        ("a3", "train_4k", "16x16"): _cell("a3", status="error"),
+        ("a4", "train_4k", "2x16x16"): _cell("a4", mesh="2x16x16"),
+    }
+    md = roofline_md(cells)
+    lines = md.splitlines()
+    assert lines[0].startswith("| arch | shape |")
+    assert "| a1 | train_4k | 0.0406 |" in md
+    assert "**compute**" in md and "300.00MB" in md and "2.50GB" in md
+    assert "skipped" in md and "ERROR" in md
+    assert "a4" not in md                   # other mesh filtered out
+    assert "a4" in roofline_md(cells, mesh="2x16x16")
+
+
+def test_dryrun_md_renders_all_statuses():
+    cells = {
+        ("a1", "train_4k", "16x16"): _cell("a1"),
+        ("a2", "train_4k", "16x16"): _cell("a2", status="skipped"),
+        ("a3", "train_4k", "16x16"): _cell("a3", status="boom"),
+    }
+    md = dryrun_md(cells)
+    assert "| a1 | train_4k | 16x16 | ok | 12 | 2.50GB | 1.50GB | 8000 |" \
+        in md
+    assert "SKIP (full attn)" in md and "ERROR" in md
+
+
+def test_load_merges_artifact_files(tmp_path):
+    f1 = [_cell("a1"), _cell("a1", shape="decode_32k")]
+    f2 = [_cell("a2")]
+    (tmp_path / "one.json").write_text(json.dumps(f1))
+    (tmp_path / "two.json").write_text(json.dumps(f2))
+    cells = load(str(tmp_path))
+    assert set(cells) == {("a1", "train_4k", "16x16"),
+                          ("a1", "decode_32k", "16x16"),
+                          ("a2", "train_4k", "16x16")}
