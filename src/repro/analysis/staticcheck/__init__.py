@@ -1,0 +1,78 @@
+"""Engine-contract static analyzer: AST-level drift detection for the
+four-engine invariants.
+
+The simulator's correctness story is a set of *cross-engine contracts*:
+every :class:`~repro.core.spec.CampaignSpec` must be interpreted
+identically by the object, array, batched and jax engines.  Until now
+those contracts were enforced only at runtime — goldens, the seed-2021
+trace sha256, ``campaigns lint --registry`` — which catches drift
+*after* it ships into a failing test.  This package enforces them at
+lint time, on the syntax alone (stdlib ``ast``, no imports of engine
+code, no new dependencies):
+
+  ===== ==============================================================
+  REG   registry completeness — every ``register_event``/
+        ``register_op`` in ``core/timeline.py`` has concrete EngineOps
+        bodies on all adapters (``TimelineController``,
+        ``sweep._LaneOps``, ``sweep_jax.JaxLaneOps``) and provisioner
+        facades
+  RNG   determinism discipline — no global RNG, wall-clock reads or
+        unordered-set iteration inside ``core/``
+  TRC   trace choke-point parity — every TraceRecorder method one
+        trace-capable engine emits, all of them emit
+  KRN   kernel/oracle pairing — every Pallas kernel has a ``ref.py``
+        oracle and a ``tests/test_kernels.py`` exercise
+  ===== ==============================================================
+
+Run it::
+
+    PYTHONPATH=src python -m repro.analysis.staticcheck [--json out.json]
+    PYTHONPATH=src python -m repro.campaigns check
+
+Exit codes mirror ``campaigns diff``: 0 clean, 1 findings, 2 bad
+usage/internal error.  Intentional exceptions are suppressed inline
+(``# staticcheck: ignore[RNG003] — reason``) or via a committed
+baseline file (see :mod:`repro.analysis.staticcheck.baseline`).
+
+The public entry point for tools and tests is :func:`analyze`;
+``overrides`` lets tests inject contract mutations (a deleted adapter
+method, a stray ``np.random.seed``) without touching the tree.
+"""
+from __future__ import annotations
+
+from typing import List, Mapping, Optional
+
+from repro.analysis.staticcheck.determinism import check_determinism
+from repro.analysis.staticcheck.findings import (Finding, RULES,
+                                                 sort_findings)
+from repro.analysis.staticcheck.kernels import check_kernels
+from repro.analysis.staticcheck.registry import check_registry
+from repro.analysis.staticcheck.traceparity import check_trace_parity
+from repro.analysis.staticcheck.tree import SourceTree, find_repo_root
+
+__all__ = ["analyze", "Finding", "RULES", "SourceTree",
+           "find_repo_root"]
+
+#: rule family -> checker (order = report grouping order)
+CHECKERS = (check_registry, check_determinism, check_trace_parity,
+            check_kernels)
+
+
+def analyze(root=None,
+            overrides: Optional[Mapping[str, Optional[str]]] = None,
+            rules: Optional[frozenset] = None) -> List[Finding]:
+    """Run every contract rule over the repository at ``root`` (default:
+    auto-located checkout root) and return the surviving findings in
+    canonical (file, line, rule) order.  Inline suppression comments
+    are honored here; baseline filtering is the CLI's job (so library
+    callers always see the raw contract state)."""
+    tree = SourceTree(root if root is not None else find_repo_root(),
+                      overrides=overrides)
+    findings: List[Finding] = []
+    for checker in CHECKERS:
+        findings.extend(checker(tree))
+    if rules is not None:
+        findings = [f for f in findings if f.rule in rules]
+    findings = [f for f in findings
+                if not tree.is_suppressed(f.file, f.line, f.rule)]
+    return sort_findings(findings)

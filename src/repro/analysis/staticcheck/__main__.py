@@ -1,0 +1,5 @@
+"""``python -m repro.analysis.staticcheck`` entry point."""
+from repro.analysis.staticcheck.cli import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

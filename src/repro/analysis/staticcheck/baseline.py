@@ -1,0 +1,100 @@
+"""Baseline file support: grandfather intentional exceptions.
+
+A baseline is a committed JSON file listing finding fingerprints
+(``rule:file:message`` — no line numbers, so entries survive unrelated
+edits) that the analyzer should not fail on.  Prefer inline
+``# staticcheck: ignore[RULE]`` comments for single-line suppressions —
+the intent lives next to the code; the baseline is for findings with no
+single line to annotate (file-level parity findings) or for adopting
+the analyzer on a tree with known, accepted debt.
+
+Format::
+
+    {
+      "schema_version": 1,
+      "suppressions": [
+        {"rule": "TRC001", "file": "src/...", "match": "<message>",
+         "reason": "why this is intentional"},
+        ...
+      ]
+    }
+
+``match`` is compared against the finding message exactly, or as a
+prefix when it ends with ``*``.
+"""
+from __future__ import annotations
+
+import json
+from typing import List, Optional, Tuple
+
+from repro.analysis.staticcheck.findings import Finding
+
+SCHEMA_VERSION = 1
+
+
+class BaselineError(ValueError):
+    pass
+
+
+def load_baseline(path: str) -> List[dict]:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except OSError as e:
+        raise BaselineError(f"cannot read baseline {path}: {e}")
+    except json.JSONDecodeError as e:
+        raise BaselineError(f"baseline {path} is not valid JSON: {e}")
+    if not isinstance(data, dict) or "suppressions" not in data:
+        raise BaselineError(
+            f"baseline {path} must be an object with a 'suppressions' "
+            "list")
+    sups = data["suppressions"]
+    for s in sups:
+        if not isinstance(s, dict) or not {"rule", "file"} <= set(s):
+            raise BaselineError(
+                f"baseline {path}: each suppression needs at least "
+                "'rule' and 'file' keys")
+    return sups
+
+
+def _matches(sup: dict, finding: Finding) -> bool:
+    if sup["rule"] != finding.rule or sup["file"] != finding.file:
+        return False
+    match = sup.get("match")
+    if match is None:
+        return True
+    if match.endswith("*"):
+        return finding.message.startswith(match[:-1])
+    return finding.message == match
+
+
+def apply_baseline(findings: List[Finding], suppressions: List[dict]
+                   ) -> Tuple[List[Finding], List[dict]]:
+    """(kept findings, unused suppressions).  Unused entries are
+    surfaced so stale baselines shrink instead of rotting."""
+    used = [False] * len(suppressions)
+    kept: List[Finding] = []
+    for f in findings:
+        hit = False
+        for i, sup in enumerate(suppressions):
+            if _matches(sup, f):
+                used[i] = True
+                hit = True
+        if not hit:
+            kept.append(f)
+    unused = [s for s, u in zip(suppressions, used) if not u]
+    return kept, unused
+
+
+def write_baseline(path: str, findings: List[Finding],
+                   reason: Optional[str] = None) -> None:
+    payload = {
+        "schema_version": SCHEMA_VERSION,
+        "suppressions": [
+            {"rule": f.rule, "file": f.file, "match": f.message,
+             **({"reason": reason} if reason else {})}
+            for f in findings],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")

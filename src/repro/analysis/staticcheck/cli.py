@@ -1,0 +1,161 @@
+"""CLI for the engine-contract static analyzer.
+
+::
+
+    PYTHONPATH=src python -m repro.analysis.staticcheck
+    PYTHONPATH=src python -m repro.analysis.staticcheck --json out.json
+    PYTHONPATH=src python -m repro.analysis.staticcheck \\
+        --baseline .staticcheck-baseline.json
+    PYTHONPATH=src python -m repro.analysis.staticcheck --list-rules
+    PYTHONPATH=src python -m repro.analysis.staticcheck \\
+        --rules RNG001,RNG002
+
+Exit codes mirror ``campaigns diff``: **0** clean, **1** at least one
+finding, **2** bad arguments / unreadable baseline.  ``--json`` writes
+the machine-readable findings payload (``-`` for stdout; the human
+summary moves to stderr) — the same finding shape ``campaigns lint
+--json`` emits, so CI asserts on one schema.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.analysis.staticcheck import RULES, analyze, find_repo_root
+from repro.analysis.staticcheck.baseline import (BaselineError,
+                                                 apply_baseline,
+                                                 load_baseline,
+                                                 write_baseline)
+from repro.analysis.staticcheck.findings import Finding
+
+#: default committed baseline location (repo-root-relative); absent
+#: file simply means "no baseline"
+DEFAULT_BASELINE = ".staticcheck-baseline.json"
+
+
+def payload(findings: List[Finding], checked_root: str) -> dict:
+    counts = {}
+    for f in findings:
+        counts[f.rule] = counts.get(f.rule, 0) + 1
+    return {
+        "schema_version": 1,
+        "tool": "repro.analysis.staticcheck",
+        "root": checked_root,
+        "ok": not findings,
+        "counts": dict(sorted(counts.items())),
+        "findings": [f.to_dict() for f in findings],
+    }
+
+
+def add_arguments(ap: argparse.ArgumentParser) -> None:
+    """Install the analyzer's options on ``ap`` — shared between the
+    standalone ``python -m repro.analysis.staticcheck`` entry point and
+    the ``campaigns check`` subcommand (one flag surface, two spellings).
+    """
+    ap.add_argument("--root", default=None,
+                    help="repository root (default: auto-located)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the findings JSON here ('-' for stdout)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="baseline file of accepted findings (default: "
+                         f"{DEFAULT_BASELINE} at the root, if present)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any baseline file (report everything)")
+    ap.add_argument("--write-baseline", default=None, metavar="PATH",
+                    help="write the current findings as a baseline and "
+                         "exit 0")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.staticcheck",
+        description="AST-level drift detection for the four-engine "
+                    "contracts (registry completeness, RNG discipline, "
+                    "trace parity, kernel/oracle pairing).")
+    add_arguments(ap)
+    return run(ap.parse_args(argv))
+
+
+def run(args: argparse.Namespace) -> int:
+    if args.list_rules:
+        for rule, desc in sorted(RULES.items()):
+            print(f"{rule}  {desc}")
+        return 0
+
+    try:
+        root = args.root or str(find_repo_root())
+    except FileNotFoundError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    rules = None
+    if args.rules:
+        rules = frozenset(r.strip() for r in args.rules.split(",")
+                          if r.strip())
+        unknown = sorted(rules - set(RULES))
+        if unknown:
+            print(f"error: unknown rule id(s) {unknown}; see "
+                  "--list-rules", file=sys.stderr)
+            return 2
+
+    findings = analyze(root, rules=rules)
+
+    if args.write_baseline:
+        write_baseline(args.write_baseline, findings)
+        print(f"# wrote {args.write_baseline} "
+              f"({len(findings)} suppression(s))", file=sys.stderr)
+        return 0
+
+    unused: List[dict] = []
+    if not args.no_baseline:
+        from pathlib import Path
+        bl_path = args.baseline or str(Path(root) / DEFAULT_BASELINE)
+        bl_exists = Path(bl_path).is_file()
+        if args.baseline and not bl_exists:
+            print(f"error: baseline {bl_path} not found",
+                  file=sys.stderr)
+            return 2
+        if bl_exists:
+            try:
+                sups = load_baseline(bl_path)
+            except BaselineError as e:
+                print(f"error: {e}", file=sys.stderr)
+                return 2
+            findings, unused = apply_baseline(findings, sups)
+
+    pay = payload(findings, root)
+    if unused:
+        pay["unused_suppressions"] = unused
+    text = json.dumps(pay, indent=2, sort_keys=True) + "\n"
+    if args.json == "-":
+        sys.stdout.write(text)
+    elif args.json:
+        with open(args.json, "w") as f:
+            f.write(text)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+    out = sys.stderr if args.json == "-" else sys.stdout
+    for f in findings:
+        print(f.render(), file=out)
+    for s in unused:
+        print(f"note: unused baseline suppression {s['rule']} "
+              f"{s['file']} — remove it", file=out)
+    n = len(findings)
+    checked = ", ".join(sorted({f.rule[:3] for f in findings})) \
+        if findings else "REG, RNG, TRC, KRN"
+    if n:
+        print(f"staticcheck: {n} finding(s) [{checked}]", file=out)
+        return 1
+    print(f"staticcheck: OK ({len(RULES)} rules, families {checked})",
+          file=out)
+    return 0
+
+
+if __name__ == "__main__":                       # pragma: no cover
+    raise SystemExit(main())

@@ -1,0 +1,154 @@
+"""Rule family RNG — determinism discipline inside ``core/``.
+
+Every ``core/`` module feeds at least one of the bit-identity
+contracts: lane-vs-solo reproducibility (``tests/test_sweep.py``),
+byte-identical traces (the seed-2021 sha256 pin) and the goldens.  One
+stray global-RNG draw, wall-clock read or unordered-set iteration in a
+tick path silently breaks all three — at golden-regeneration time, not
+review time.  This family flags the syntactic forms that can do that:
+
+  * RNG001 — ``np.random.*`` global-state calls (``seed``, ``rand``,
+    ``shuffle``, ...).  Explicitly-seeded constructors
+    (``default_rng``, ``PCG64``, ``SeedSequence``, ...) are the
+    sanctioned idiom and stay silent.
+  * RNG002 — stdlib ``random`` module calls (module-global Mersenne
+    state); ``random.Random(seed)`` instances are allowed.
+  * RNG003 — wall-clock reads (``time.time``/``monotonic``/
+    ``perf_counter``, ``datetime.now``...).  Engine time is ``sim.now``;
+    real-runner wall timing must be suppressed with a comment so the
+    intent is recorded.
+  * RNG004 — direct iteration over a set literal / ``set(...)`` call
+    (``for x in {...}``): Python set order is not deterministic across
+    runs for str/object elements.  Sort first (``sorted(...)``).
+
+Suppress intentional uses inline::
+
+    t0 = time.time()   # staticcheck: ignore[RNG003] — real wall clock
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.staticcheck.findings import Finding
+from repro.analysis.staticcheck.tree import SourceTree, dotted
+
+#: modules under the determinism contract
+CORE_GLOB = "src/repro/core/*.py"
+
+#: np.random constructors that take an explicit seed — allowed
+NP_RANDOM_SAFE = frozenset({
+    "default_rng", "Generator", "PCG64", "PCG64DXSM", "MT19937",
+    "Philox", "SFC64", "SeedSequence", "BitGenerator",
+})
+
+#: wall-clock callables by dotted suffix
+WALL_CLOCK = frozenset({
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns", "time.clock_gettime",
+    "datetime.now", "datetime.utcnow", "datetime.today", "date.today",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.date.today",
+})
+
+
+def _iter_over_set(node: ast.AST) -> bool:
+    """Is this expression an unordered set flowing straight into
+    iteration?  (Set literals, set comprehensions, ``set(...)`` /
+    ``frozenset(...)`` calls and set-algebra on them.)"""
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in ("set", "frozenset"):
+        return True
+    if isinstance(node, ast.BinOp) \
+            and isinstance(node.op, (ast.BitOr, ast.BitAnd, ast.Sub,
+                                     ast.BitXor)):
+        # {...} - other / set(a) | set(b): still a set
+        return _iter_over_set(node.left) or _iter_over_set(node.right)
+    return False
+
+
+def _scan_module(tree: SourceTree, rel: str, mod: ast.Module
+                 ) -> List[Finding]:
+    out: List[Finding] = []
+    has_import_random = any(
+        isinstance(n, ast.Import) and any(a.name == "random"
+                                          for a in n.names)
+        for n in ast.walk(mod))
+
+    for node in ast.walk(mod):
+        if isinstance(node, ast.ImportFrom) and node.module == "random":
+            names = sorted(a.name for a in node.names
+                           if a.name != "Random")
+            if names:
+                out.append(Finding(
+                    rel, node.lineno, "RNG002",
+                    f"`from random import {', '.join(names)}` pulls "
+                    "module-global RNG state into an engine module",
+                    hint="use the per-lane np.random.default_rng(seed) "
+                         "streams (or random.Random(seed))"))
+            continue
+
+        if isinstance(node, ast.Call):
+            name = dotted(node.func)
+            if name is None:
+                continue
+            parts = name.split(".")
+            # -- RNG001: numpy global RNG ------------------------------
+            if len(parts) >= 3 and parts[-2] == "random" \
+                    and parts[0] in ("np", "numpy"):
+                fn = parts[-1]
+                if fn not in NP_RANDOM_SAFE:
+                    out.append(Finding(
+                        rel, node.lineno, "RNG001",
+                        f"global numpy RNG call `{name}(...)` — shared "
+                        "state breaks per-lane bit-reproducibility",
+                        hint="draw from the engine's seeded "
+                             "np.random.default_rng(seed) generator"))
+                continue
+            # -- RNG002: stdlib random module --------------------------
+            if has_import_random and len(parts) == 2 \
+                    and parts[0] == "random" and parts[1] != "Random":
+                out.append(Finding(
+                    rel, node.lineno, "RNG002",
+                    f"stdlib `{name}(...)` uses the module-global "
+                    "Mersenne state",
+                    hint="use the engine's seeded generator (or a "
+                         "random.Random(seed) instance)"))
+                continue
+            # -- RNG003: wall clock ------------------------------------
+            if name in WALL_CLOCK or any(name.endswith("." + w)
+                                         for w in WALL_CLOCK):
+                out.append(Finding(
+                    rel, node.lineno, "RNG003",
+                    f"wall-clock call `{name}()` in a core module — "
+                    "simulated time is `sim.now`",
+                    hint="pass time in explicitly; suppress with "
+                         "`# staticcheck: ignore[RNG003]` if this is "
+                         "deliberate real-runner timing"))
+
+        # -- RNG004: unordered-set iteration ---------------------------
+        iters: List[ast.AST] = []
+        if isinstance(node, ast.For):
+            iters.append(node.iter)
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            iters.extend(gen.iter for gen in node.generators)
+        for it in iters:
+            if _iter_over_set(it):
+                out.append(Finding(
+                    rel, it.lineno, "RNG004",
+                    "iterating an unordered set — element order can "
+                    "differ across processes (str hashes are salted)",
+                    hint="wrap in sorted(...) to pin the order"))
+    return out
+
+
+def check_determinism(tree: SourceTree) -> List[Finding]:
+    out: List[Finding] = []
+    for rel in tree.glob(CORE_GLOB):
+        mod = tree.parse(rel)
+        if mod is not None:
+            out.extend(_scan_module(tree, rel, mod))
+    return out

@@ -1,0 +1,75 @@
+"""The finding record and rule catalog shared by every staticcheck rule.
+
+A :class:`Finding` is one contract violation at one location; its
+``rule`` id is stable (baselines and inline suppressions key on it) and
+shares the ``ABC123`` shape with the ``SPEC``-prefixed ids that
+``spec.lint_spec`` findings carry, so ``campaigns lint --json`` and
+``campaigns check --json`` payloads have one schema.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    """One static-analysis finding, sortable into the canonical
+    (file, line, rule) report order."""
+    file: str                      # repo-relative posix path
+    line: int                      # 1-based; 0 when file-level
+    rule: str                      # stable id, e.g. "REG002"
+    message: str
+    hint: str = field(default="", compare=False)
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    def fingerprint(self) -> str:
+        """Line-number-free identity used by the baseline file (so a
+        baselined finding survives unrelated edits above it)."""
+        return f"{self.rule}:{self.file}:{self.message}"
+
+    def render(self) -> str:
+        loc = f"{self.file}:{self.line}" if self.line else self.file
+        out = f"{loc}: {self.rule} {self.message}"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out
+
+
+#: the rule catalog: id -> one-line description (the README's table and
+#: ``--list-rules`` both render this)
+RULES: Dict[str, str] = {
+    # (a) registry completeness — the four-engine EngineOps contract
+    "REG001": "registered event compiles to an op with no registered "
+              "handler",
+    "REG002": "op requires an EngineOps member missing on an engine "
+              "adapter (event not implemented for all engines)",
+    "REG003": "op requires a provisioner-facade member missing on a "
+              "solo provisioner",
+    "REG004": "ENGINE_ADAPTERS / PROVISIONER_FACADES metadata names an "
+              "unresolvable module or class",
+    # (b) RNG / determinism discipline inside core/
+    "RNG001": "global numpy RNG call (np.random.*) in a core engine "
+              "module — breaks bit-identical lanes",
+    "RNG002": "stdlib random-module call in a core engine module",
+    "RNG003": "wall-clock call (time.time/monotonic/perf_counter, "
+              "datetime.now) in a core engine module",
+    "RNG004": "iteration over an unordered set in a core engine module "
+              "— iteration order is not deterministic",
+    # (c) trace choke-point parity across the trace-capable engines
+    "TRC001": "TraceRecorder method invoked by some but not all "
+              "trace-capable engines",
+    "TRC002": "call to a method that does not exist on "
+              "events.TraceRecorder",
+    "TRC003": "api.TRACE_ENGINES and the analyzer's engine-module map "
+              "disagree",
+    # (d) kernel / oracle pairing
+    "KRN001": "Pallas kernel has no matching oracle in kernels/ref.py",
+    "KRN002": "Pallas kernel is not exercised by tests/test_kernels.py",
+}
+
+
+def sort_findings(findings: List[Finding]) -> List[Finding]:
+    return sorted(findings)

@@ -1,0 +1,131 @@
+"""Rule family KRN — kernel / oracle pairing.
+
+Every Pallas kernel in ``kernels/`` exists twice by contract: the
+kernel itself and a pure-``jnp`` oracle in ``kernels/ref.py`` that
+``tests/test_kernels.py`` sweeps it against (interpret mode on CPU).
+A kernel that lands without its oracle or its test exercise is
+unverifiable on every platform that can't run the compiled path — the
+exact drift the differential harness exists to prevent.
+
+Statically enforced:
+
+  * KRN001 — every public ``*_kernel`` function in a kernel module has
+    a ``*_ref`` oracle in ``ref.py`` whose name matches at an
+    underscore boundary (``mlstm_chunk_kernel`` pairs with
+    ``mlstm_ref``; ``campaign_bill_kernel`` with
+    ``campaign_bill_ref``).
+  * KRN002 — the kernel (or an ``ops.py`` wrapper that calls it) is
+    referenced by name in ``tests/test_kernels.py``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis.staticcheck.findings import Finding
+from repro.analysis.staticcheck.tree import SourceTree
+
+KERNEL_GLOB = "src/repro/kernels/*.py"
+REF = "src/repro/kernels/ref.py"
+OPS = "src/repro/kernels/ops.py"
+KERNEL_TESTS = "tests/test_kernels.py"
+NON_KERNEL_FILES = {"src/repro/kernels/__init__.py", REF, OPS}
+
+
+def _public_functions(tree: SourceTree, rel: str,
+                      suffix: str) -> Dict[str, int]:
+    """Top-level public ``*suffix`` functions -> def lineno."""
+    mod = tree.parse(rel)
+    if mod is None:
+        return {}
+    return {n.name: n.lineno for n in mod.body
+            if isinstance(n, ast.FunctionDef)
+            and not n.name.startswith("_")
+            and n.name.endswith(suffix)}
+
+
+def _names_referenced(tree: SourceTree, rel: str) -> Set[str]:
+    """Every Name id and Attribute attr in a module (how tests refer to
+    ``ops.flash_attention`` / ``ref.mlstm_ref``)."""
+    mod = tree.parse(rel)
+    if mod is None:
+        return set()
+    out: Set[str] = set()
+    for node in ast.walk(mod):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            out.add(node.attr)
+    return out
+
+
+def _base_match(kernel_base: str, ref_base: str) -> bool:
+    """Name pairing at an underscore boundary, either direction."""
+    return (kernel_base == ref_base
+            or kernel_base.startswith(ref_base + "_")
+            or ref_base.startswith(kernel_base + "_"))
+
+
+def _ops_wrappers(tree: SourceTree,
+                  kernel_names: Set[str]) -> Dict[str, List[str]]:
+    """kernel name -> ops.py wrapper function names that call it."""
+    out: Dict[str, List[str]] = {}
+    mod = tree.parse(OPS)
+    if mod is None:
+        return out
+    for fn in mod.body:
+        if not isinstance(fn, ast.FunctionDef) \
+                or fn.name.startswith("_"):
+            continue
+        for node in ast.walk(fn):
+            name = None
+            if isinstance(node, ast.Name):
+                name = node.id
+            elif isinstance(node, ast.Attribute):
+                name = node.attr
+            if name in kernel_names:
+                out.setdefault(name, []).append(fn.name)
+    return out
+
+
+def check_kernels(tree: SourceTree) -> List[Finding]:
+    findings: List[Finding] = []
+    kernels: List[Tuple[str, str, int]] = []   # (name, file, line)
+    for rel in tree.glob(KERNEL_GLOB):
+        if rel in NON_KERNEL_FILES:
+            continue
+        for name, line in sorted(_public_functions(tree, rel,
+                                                   "_kernel").items()):
+            kernels.append((name, rel, line))
+    if not kernels:
+        return findings
+
+    refs = _public_functions(tree, REF, "_ref")
+    ref_bases = {r[: -len("_ref")] for r in refs}
+    test_names = _names_referenced(tree, KERNEL_TESTS)
+    wrappers = _ops_wrappers(tree, {k for k, _f, _l in kernels})
+
+    for name, rel, line in kernels:
+        base = name[: -len("_kernel")]
+        if not any(_base_match(base, rb) for rb in sorted(ref_bases)):
+            findings.append(Finding(
+                rel, line, "KRN001",
+                f"kernel `{name}` has no `{base}_ref` oracle in "
+                "kernels/ref.py",
+                hint="add a pure-jnp reference implementation; the "
+                     "kernel is unverifiable without one"))
+        exercised = name in test_names or any(
+            w in test_names for w in wrappers.get(name, []))
+        if not exercised:
+            via = wrappers.get(name)
+            hint = ("reference it (or its ops.py wrapper "
+                    f"{', '.join(sorted(set(via)))}) in a "
+                    "tests/test_kernels.py sweep vs the oracle"
+                    if via else
+                    "add an ops.py wrapper and a tests/test_kernels.py "
+                    "sweep vs the oracle")
+            findings.append(Finding(
+                rel, line, "KRN002",
+                f"kernel `{name}` is never exercised by "
+                "tests/test_kernels.py", hint=hint))
+    return findings

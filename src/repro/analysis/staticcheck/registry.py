@@ -1,0 +1,202 @@
+"""Rule family REG — registry completeness (the four-engine contract).
+
+The runtime drift guard (``timeline.registry_findings``, surfaced as
+``campaigns lint --registry``) hasattr-checks the live adapter classes;
+this is its static twin: the same checks on the *syntax* of
+``core/timeline.py`` and the adapter modules, without importing or
+executing any engine code.  An event registered without a
+``JaxLaneOps`` method body is caught here even if ``sweep_jax`` no
+longer imports (the exact situation the runtime check cannot see).
+
+What is read, all statically:
+
+  * every ``register_op(OpSpec(kind=..., requires=(...),
+    prov_requires=(...)))`` call — the EngineOps/provisioner members an
+    op depends on;
+  * every ``register_event(EventType(kind=X.kind, ops=(...)))`` call —
+    which ops each event compiles to (``X.kind`` resolved from the
+    event dataclass's ``kind = "..."`` class attribute);
+  * the ``ENGINE_ADAPTERS`` / ``PROVISIONER_FACADES`` literal metadata
+    in ``core/timeline.py`` — the single source of truth for *which*
+    classes implement the contract (``campaigns lint --registry``
+    resolves the same dicts at runtime).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.staticcheck.findings import Finding
+from repro.analysis.staticcheck.tree import (SourceTree, call_kwargs,
+                                             class_members, find_class,
+                                             literal_str_tuple, module_path,
+                                             module_str_dicts)
+
+TIMELINE = "src/repro/core/timeline.py"
+
+
+def _registration_calls(mod: ast.Module, fn_name: str):
+    """Top-level ``fn_name(Ctor(...))`` calls -> the inner ctor call."""
+    for node in ast.walk(mod):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id == fn_name and node.args
+                and isinstance(node.args[0], ast.Call)):
+            yield node.args[0]
+
+
+def _class_kind_consts(mod: ast.Module) -> Dict[str, str]:
+    """``ClassName -> kind`` for every class with ``kind = "..."``."""
+    out: Dict[str, str] = {}
+    for node in mod.body:
+        if isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if (isinstance(sub, ast.Assign)
+                        and any(isinstance(t, ast.Name) and t.id == "kind"
+                                for t in sub.targets)
+                        and isinstance(sub.value, ast.Constant)
+                        and isinstance(sub.value.value, str)):
+                    out[node.name] = sub.value.value
+    return out
+
+
+def parse_registry(tree: SourceTree):
+    """(ops, events, adapters, facades, findings): the registry as data.
+
+    ``ops``: op kind -> (requires, prov_requires, line);
+    ``events``: event kind -> (op kinds, line);
+    ``adapters``/``facades``: name -> "module:Class" from the metadata
+    dicts in core/timeline.py.
+    """
+    findings: List[Finding] = []
+    mod = tree.parse(TIMELINE)
+    if mod is None:
+        findings.append(Finding(TIMELINE, 0, "REG004",
+                                "cannot parse core/timeline.py"))
+        return {}, {}, {}, {}, findings
+
+    kinds = _class_kind_consts(mod)
+    ops: Dict[str, Tuple[Tuple[str, ...], Tuple[str, ...], int]] = {}
+    for call in _registration_calls(mod, "register_op"):
+        kw = call_kwargs(call)
+        kind_node = kw.get("kind")
+        if not (isinstance(kind_node, ast.Constant)
+                and isinstance(kind_node.value, str)):
+            continue
+        requires = literal_str_tuple(kw.get("requires", ast.Tuple([], None))) \
+            or ()
+        prov = literal_str_tuple(kw.get("prov_requires",
+                                        ast.Tuple([], None))) or ()
+        ops[kind_node.value] = (requires, prov, call.lineno)
+
+    events: Dict[str, Tuple[Tuple[str, ...], int]] = {}
+    for call in _registration_calls(mod, "register_event"):
+        kw = call_kwargs(call)
+        kind_node = kw.get("kind")
+        kind: Optional[str] = None
+        if isinstance(kind_node, ast.Constant) \
+                and isinstance(kind_node.value, str):
+            kind = kind_node.value
+        elif (isinstance(kind_node, ast.Attribute)
+              and kind_node.attr == "kind"
+              and isinstance(kind_node.value, ast.Name)):
+            kind = kinds.get(kind_node.value.id)
+        if kind is None:
+            continue
+        op_names = literal_str_tuple(kw.get("ops", ast.Tuple([], None))) \
+            or ()
+        events[kind] = (op_names, call.lineno)
+
+    dicts = module_str_dicts(mod)
+    adapters = dicts.get("ENGINE_ADAPTERS", {})
+    facades = dicts.get("PROVISIONER_FACADES", {})
+    if not adapters:
+        findings.append(Finding(
+            TIMELINE, 0, "REG004",
+            "core/timeline.py has no literal ENGINE_ADAPTERS metadata "
+            "dict (the analyzer and `campaigns lint --registry` both "
+            "read it)",
+            hint='declare ENGINE_ADAPTERS = {"solo": '
+                 '"repro.core.spec:TimelineController", ...}'))
+    return ops, events, adapters, facades, findings
+
+
+def _resolve_members(tree: SourceTree, ref: str, role: str,
+                     findings: List[Finding]):
+    """``"repro.core.spec:TimelineController"`` -> (rel_path, line,
+    member set) or None (REG004 queued)."""
+    module, _, cls_name = ref.partition(":")
+    rel = module_path(module)
+    mod = tree.parse(rel)
+    if mod is None:
+        findings.append(Finding(
+            TIMELINE, 0, "REG004",
+            f"{role} {ref!r}: module {module!r} has no parseable "
+            f"source at {rel}"))
+        return None
+    cls = find_class(mod, cls_name)
+    if cls is None:
+        findings.append(Finding(
+            rel, 0, "REG004",
+            f"{role} {ref!r}: class {cls_name!r} not found in {rel}"))
+        return None
+    return rel, cls.lineno, class_members(cls)
+
+
+def check_registry(tree: SourceTree) -> List[Finding]:
+    ops, events, adapters, facades, findings = parse_registry(tree)
+
+    # which events need each op (for actionable messages)
+    op_events: Dict[str, List[str]] = {}
+    for kind, (op_names, line) in sorted(events.items()):
+        for op in op_names:
+            if op not in ops:
+                findings.append(Finding(
+                    TIMELINE, line, "REG001",
+                    f"event {kind!r} compiles to op {op!r} which has no "
+                    "register_op entry",
+                    hint="add a register_op(OpSpec(kind=...)) block in "
+                         "core/timeline.py"))
+            else:
+                op_events.setdefault(op, []).append(kind)
+
+    resolved = {}
+    for engine, ref in sorted(adapters.items()):
+        resolved[engine] = _resolve_members(tree, ref, "engine adapter",
+                                            findings)
+    prov_resolved = {}
+    for name, ref in sorted(facades.items()):
+        prov_resolved[name] = _resolve_members(tree, ref,
+                                               "provisioner facade",
+                                               findings)
+
+    for op, (requires, prov_requires, _line) in sorted(ops.items()):
+        evs = sorted(op_events.get(op, []))
+        for engine, res in sorted(resolved.items()):
+            if res is None:
+                continue
+            rel, cls_line, members = res
+            missing = sorted(m for m in requires if m not in members)
+            if missing:
+                findings.append(Finding(
+                    rel, cls_line, "REG002",
+                    f"the {engine!r} adapter lacks EngineOps member(s) "
+                    f"{missing} required by op {op!r} (event(s): "
+                    f"{', '.join(evs) or op})",
+                    hint="add the method/attribute so every engine "
+                         "interprets the event; see EngineOps in "
+                         "core/timeline.py"))
+        for name, res in sorted(prov_resolved.items()):
+            if res is None:
+                continue
+            rel, cls_line, members = res
+            missing = sorted(m for m in prov_requires
+                             if m not in members)
+            if missing:
+                findings.append(Finding(
+                    rel, cls_line, "REG003",
+                    f"the {name!r} provisioner facade lacks member(s) "
+                    f"{missing} required by op {op!r} (event(s): "
+                    f"{', '.join(evs) or op})",
+                    hint="solo engines drive this op through "
+                         "sim.prov — both facades need the body"))
+    return findings

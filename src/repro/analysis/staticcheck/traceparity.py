@@ -1,0 +1,225 @@
+"""Rule family TRC — trace choke-point parity across engines.
+
+The trace contract (ROADMAP, PR 5): every engine that claims
+``collect="trace"`` support (``api.TRACE_ENGINES``) must invoke the
+same set of RNG-free :class:`~repro.core.events.TraceRecorder` methods
+at its choke points, because the sha256-pinned byte-identity of
+serialized traces only needs *set* identity per tick — but it needs
+every engine to emit every kind.  The classic failure mode is a new
+event kind instrumented in two of the three engines: nothing crashes,
+the property tests may not cover the surface, and the first symptom is
+a failed sha256 pin at golden-regeneration time.
+
+This family compares, statically, the recorder methods each engine's
+modules call:
+
+  * the engine -> module map below mirrors the instrumentation notes in
+    ROADMAP.md (object: provisioner/overlay/simulator; array: fleet;
+    batched: sweep), with ``SHARED_MODULES`` (spec.py's
+    TimelineController, dataplane.py's bill hook) counted toward every
+    engine because all engines route through them;
+  * ``api.TRACE_ENGINES`` is evaluated from ``core/api.py``'s literal
+    set algebra (no import), and checked against the map — adding a
+    trace-capable engine without teaching this rule where its
+    instrumentation lives is itself a finding (TRC003).
+
+A *recorder call* is any ``X.method(...)`` whose receiver chain ends in
+an attribute/name called ``recorder`` or ``recorders`` — the repo-wide
+naming convention for ``events.TraceRecorder`` handles.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from repro.analysis.staticcheck.findings import Finding
+from repro.analysis.staticcheck.tree import (SourceTree, eval_engine_sets,
+                                             find_class)
+
+API = "src/repro/core/api.py"
+EVENTS = "src/repro/core/events.py"
+TRACEOPS = "src/repro/core/traceops.py"
+
+#: engine name (canonical) -> modules holding its recorder choke points
+ENGINE_MODULES: Dict[str, tuple] = {
+    "object": ("src/repro/core/provisioner.py",
+               "src/repro/core/overlay.py",
+               "src/repro/core/simulator.py"),
+    "array": ("src/repro/core/fleet.py",),
+    "batched": ("src/repro/core/sweep.py",),
+}
+
+#: modules every engine routes through (timeline provenance mirroring in
+#: spec.TimelineController; egress billing in dataplane.bill)
+SHARED_MODULES = ("src/repro/core/spec.py",
+                  "src/repro/core/dataplane.py")
+
+#: api engine names that are aliases of a canonical engine above
+ENGINE_ALIASES = {"sequential": "array", "auto": None}
+
+
+def _class_public_methods(tree: SourceTree, rel: str,
+                          cls_name: str) -> Set[str]:
+    mod = tree.parse(rel)
+    if mod is None:
+        return set()
+    cls = find_class(mod, cls_name)
+    if cls is None:
+        return set()
+    return {n.name for n in cls.body
+            if isinstance(n, ast.FunctionDef)
+            and not n.name.startswith("_")}
+
+
+def recorder_methods(tree: SourceTree) -> Set[str]:
+    """Public method names of events.TraceRecorder — the trace-event
+    emission surface that must stay engine-parallel (TRC001)."""
+    return _class_public_methods(tree, EVENTS, "TraceRecorder")
+
+
+def lifecycle_methods(tree: SourceTree) -> Set[str]:
+    """Extra public methods of traceops.StreamingRecorder (``finish``
+    and friends): legal to call on a recorder handle (no TRC002) but
+    lifecycle plumbing, not event emission — exempt from parity."""
+    return _class_public_methods(tree, TRACEOPS, "StreamingRecorder")
+
+
+def _recorder_rooted(node: ast.AST) -> bool:
+    """Does this receiver expression end in ``recorder``/``recorders``
+    (possibly through subscripts: ``self.recorders[b]``)?"""
+    if isinstance(node, ast.Name):
+        return node.id in ("recorder", "recorders")
+    if isinstance(node, ast.Attribute):
+        return node.attr in ("recorder", "recorders")
+    if isinstance(node, ast.Subscript):
+        return _recorder_rooted(node.value)
+    return False
+
+
+def recorder_calls(tree: SourceTree, rel: str) -> Dict[str, List[int]]:
+    """``method -> [linenos]`` of recorder-rooted calls in a module."""
+    out: Dict[str, List[int]] = {}
+    mod = tree.parse(rel)
+    if mod is None:
+        return out
+    for node in ast.walk(mod):
+        if isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and _recorder_rooted(node.func.value):
+            out.setdefault(node.func.attr, []).append(node.lineno)
+    return out
+
+
+def check_trace_parity(tree: SourceTree) -> List[Finding]:
+    findings: List[Finding] = []
+    legal = recorder_methods(tree)
+    lifecycle = lifecycle_methods(tree) - legal
+    if not legal:
+        findings.append(Finding(
+            EVENTS, 0, "TRC003",
+            "cannot find the events.TraceRecorder class — the trace "
+            "parity rule has no method surface to check against"))
+        return findings
+
+    # -- TRACE_ENGINES vs the module map (TRC003) -------------------------
+    api_mod = tree.parse(API)
+    declared: Set[str] = set()
+    if api_mod is None:
+        findings.append(Finding(
+            API, 0, "TRC003", "cannot parse core/api.py to evaluate "
+            "TRACE_ENGINES"))
+    else:
+        sets = eval_engine_sets(api_mod)
+        trace_engines = sets.get("TRACE_ENGINES")
+        if trace_engines is None:
+            findings.append(Finding(
+                API, 0, "TRC003",
+                "TRACE_ENGINES is not statically evaluable from "
+                "core/api.py's literal set algebra",
+                hint="keep SOLO_ENGINES/SWEEP_ENGINES/TRACE_ENGINES as "
+                     "literal frozenset expressions"))
+        else:
+            for eng in sorted(trace_engines):
+                canon = ENGINE_ALIASES.get(eng, eng)
+                if canon is None:
+                    continue
+                declared.add(canon)
+                if canon not in ENGINE_MODULES:
+                    findings.append(Finding(
+                        API, 0, "TRC003",
+                        f"api.TRACE_ENGINES claims trace support for "
+                        f"{eng!r} but the analyzer's ENGINE_MODULES map "
+                        "has no instrumentation modules for it",
+                        hint="teach repro.analysis.staticcheck."
+                             "traceparity.ENGINE_MODULES where the new "
+                             "engine's recorder choke points live"))
+            for canon in sorted(ENGINE_MODULES):
+                if canon not in declared:
+                    findings.append(Finding(
+                        API, 0, "TRC003",
+                        f"ENGINE_MODULES lists engine {canon!r} but "
+                        "api.TRACE_ENGINES does not claim trace support "
+                        "for it"))
+
+    # -- per-engine recorder method sets ----------------------------------
+    shared: Dict[str, List[int]] = {}
+    shared_where: Dict[str, str] = {}
+    for rel in SHARED_MODULES:
+        for meth, lines in recorder_calls(tree, rel).items():
+            shared.setdefault(meth, []).extend(lines)
+            shared_where.setdefault(meth, rel)
+
+    engine_meths: Dict[str, Dict[str, str]] = {}   # engine -> meth -> file
+    for engine, modules in sorted(ENGINE_MODULES.items()):
+        meths: Dict[str, str] = {m: shared_where[m] for m in shared}
+        for rel in modules:
+            if not tree.exists(rel):
+                findings.append(Finding(
+                    rel, 0, "TRC003",
+                    f"engine {engine!r} instrumentation module {rel} "
+                    "does not exist"))
+                continue
+            for meth, lines in recorder_calls(tree, rel).items():
+                meths.setdefault(meth, rel)
+                # -- TRC002: calls outside the TraceRecorder surface ---
+                if meth not in legal and meth not in lifecycle:
+                    for ln in lines:
+                        findings.append(Finding(
+                            rel, ln, "TRC002",
+                            f"recorder call `.{meth}(...)` has no "
+                            "matching method on events.TraceRecorder",
+                            hint="add the method (and its trace event "
+                                 "kind) to core/events.py, or fix the "
+                                 "typo"))
+        engine_meths[engine] = meths
+    for meth, lines in sorted(shared.items()):
+        if meth not in legal and meth not in lifecycle:
+            rel = shared_where[meth]
+            for ln in lines:
+                findings.append(Finding(
+                    rel, ln, "TRC002",
+                    f"recorder call `.{meth}(...)` has no matching "
+                    "method on events.TraceRecorder",
+                    hint="add the method (and its trace event kind) to "
+                         "core/events.py, or fix the typo"))
+
+    # -- TRC001: parity ----------------------------------------------------
+    all_meths = sorted({m for d in engine_meths.values() for m in d}
+                       & legal)
+    for meth in all_meths:
+        have = sorted(e for e, d in engine_meths.items() if meth in d)
+        miss = sorted(e for e in engine_meths if meth not in
+                      engine_meths[e])
+        if miss:
+            for engine in miss:
+                anchor = ENGINE_MODULES[engine][0]
+                findings.append(Finding(
+                    anchor, 0, "TRC001",
+                    f"TraceRecorder.{meth} is emitted by engine(s) "
+                    f"{', '.join(have)} but never by the {engine!r} "
+                    "engine — serialized traces will diverge on the "
+                    "first such event",
+                    hint=f"instrument the {engine!r} engine's choke "
+                         "point (see the PR-5 trace note in ROADMAP.md) "
+                         "or remove the kind everywhere"))
+    return findings

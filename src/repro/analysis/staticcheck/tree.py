@@ -1,0 +1,288 @@
+"""Source-tree model for the engine-contract static analyzer.
+
+Everything the rules need from the repository is funneled through
+:class:`SourceTree`: file discovery, cached ``ast`` parses, inline
+suppression comments and a handful of AST helpers (dotted-name
+rendering, class-member collection, a tiny evaluator for the literal
+``frozenset`` algebra in ``core/api.py``).  The tree never *imports*
+repository code — every contract is checked on the syntax alone, so a
+drifted engine is caught even when it no longer imports.
+
+``overrides`` maps repo-relative paths to replacement source text
+(``None`` deletes the file).  The rule tests use it to seed contract
+mutations — an event without a ``JaxLaneOps`` body, a stray
+``np.random.seed`` — without touching the working tree.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Mapping, Optional, Set, Tuple
+
+#: inline suppression: ``# staticcheck: ignore[RULE1,RULE2] — reason``
+_SUPPRESS_RE = re.compile(
+    r"#\s*staticcheck:\s*ignore\[([A-Z0-9_,\s]+)\]")
+
+#: rule-id shape shared with the SPEC/lint prefixes (see spec.lint_spec)
+RULE_ID_RE = re.compile(r"^[A-Z]{3,5}\d{3}$")
+
+
+def find_repo_root(start: Optional[Path] = None) -> Path:
+    """Walk up from this file (or ``start``) to the checkout root — the
+    first directory holding both ``src`` and ``tests``."""
+    here = (start or Path(__file__)).resolve()
+    for cand in [here] + list(here.parents):
+        if (cand / "src").is_dir() and (cand / "tests").is_dir():
+            return cand
+    raise FileNotFoundError(
+        "cannot locate the repository root (no ancestor of "
+        f"{here} contains both src/ and tests/); pass --root")
+
+
+class SourceTree:
+    """A parse-cached view of the repository's Python sources."""
+
+    def __init__(self, root, overrides: Optional[Mapping[str, Optional[str]]]
+                 = None):
+        self.root = Path(root)
+        self.overrides: Dict[str, Optional[str]] = {
+            self._norm(k): v for k, v in (overrides or {}).items()}
+        self._src: Dict[str, Optional[str]] = {}
+        self._ast: Dict[str, Optional[ast.Module]] = {}
+        self._suppress: Dict[str, Dict[int, Set[str]]] = {}
+
+    @staticmethod
+    def _norm(rel: str) -> str:
+        return str(rel).replace("\\", "/").lstrip("./")
+
+    # -- file access -------------------------------------------------------
+    def read(self, rel: str) -> Optional[str]:
+        rel = self._norm(rel)
+        if rel not in self._src:
+            if rel in self.overrides:
+                self._src[rel] = self.overrides[rel]
+            else:
+                p = self.root / rel
+                try:
+                    self._src[rel] = p.read_text(encoding="utf-8")
+                except (OSError, UnicodeDecodeError):
+                    self._src[rel] = None
+        return self._src[rel]
+
+    def exists(self, rel: str) -> bool:
+        return self.read(rel) is not None
+
+    def parse(self, rel: str) -> Optional[ast.Module]:
+        rel = self._norm(rel)
+        if rel not in self._ast:
+            text = self.read(rel)
+            if text is None:
+                self._ast[rel] = None
+            else:
+                try:
+                    self._ast[rel] = ast.parse(text, filename=rel)
+                except SyntaxError:
+                    self._ast[rel] = None
+        return self._ast[rel]
+
+    def glob(self, pattern: str) -> List[str]:
+        """Repo-relative posix paths matching ``pattern``, overrides
+        merged in (an override of a non-existent path adds a file; a
+        ``None`` override deletes one)."""
+        found = {self._norm(str(p.relative_to(self.root)))
+                 for p in self.root.glob(pattern) if p.is_file()}
+        import fnmatch
+        for rel, text in self.overrides.items():
+            if text is None:
+                found.discard(rel)
+            elif fnmatch.fnmatch(rel, pattern):
+                found.add(rel)
+        return sorted(found)
+
+    # -- suppressions ------------------------------------------------------
+    def suppressions(self, rel: str) -> Dict[int, Set[str]]:
+        """``lineno -> {rule ids}`` for ``# staticcheck: ignore[...]``
+        comments (1-based, the line the comment sits on)."""
+        rel = self._norm(rel)
+        if rel not in self._suppress:
+            out: Dict[int, Set[str]] = {}
+            text = self.read(rel)
+            if text is not None:
+                for i, line in enumerate(text.splitlines(), start=1):
+                    m = _SUPPRESS_RE.search(line)
+                    if m:
+                        ids = {s.strip() for s in m.group(1).split(",")}
+                        out[i] = {s for s in ids if s}
+            self._suppress[rel] = out
+        return self._suppress[rel]
+
+    def is_suppressed(self, rel: str, line: int, rule: str) -> bool:
+        sup = self.suppressions(rel)
+        for ln in (line, line - 1):      # same line or the line above
+            ids = sup.get(ln)
+            if ids and (rule in ids or "*" in ids):
+                return True
+        return False
+
+
+# -- AST helpers -----------------------------------------------------------
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """Render ``a.b.c`` attribute/name chains; None for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def find_class(mod: ast.Module, name: str) -> Optional[ast.ClassDef]:
+    for node in mod.body:
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node
+    return None
+
+
+def class_members(cls: ast.ClassDef) -> Set[str]:
+    """Statically visible members of a class: methods/properties,
+    class-level assignments and ``self.X = ...`` in ``__init__`` —
+    exactly what a runtime ``hasattr`` on a constructed instance would
+    see for the adapter classes the registry drift guard checks."""
+    out: Set[str] = set()
+    for node in cls.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.add(node.name)
+            if node.name == "__init__":
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Assign):
+                        for tgt in sub.targets:
+                            if (isinstance(tgt, ast.Attribute)
+                                    and isinstance(tgt.value, ast.Name)
+                                    and tgt.value.id == "self"):
+                                out.add(tgt.attr)
+                    elif isinstance(sub, ast.AnnAssign):
+                        tgt = sub.target
+                        if (isinstance(tgt, ast.Attribute)
+                                and isinstance(tgt.value, ast.Name)
+                                and tgt.value.id == "self"):
+                            out.add(tgt.attr)
+        elif isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    out.add(tgt.id)
+                elif isinstance(tgt, (ast.Tuple, ast.List)):
+                    out.update(e.id for e in tgt.elts
+                               if isinstance(e, ast.Name))
+        elif isinstance(node, ast.AnnAssign):
+            if isinstance(node.target, ast.Name):
+                out.add(node.target.id)
+    # __slots__ entries are attributes too (sweep._LaneOps)
+    for node in cls.body:
+        if (isinstance(node, ast.Assign)
+                and any(isinstance(t, ast.Name) and t.id == "__slots__"
+                        for t in node.targets)
+                and isinstance(node.value, (ast.Tuple, ast.List, ast.Set))):
+            out.update(e.value for e in node.value.elts
+                       if isinstance(e, ast.Constant)
+                       and isinstance(e.value, str))
+    return out
+
+
+def literal_str_tuple(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """A ``("a", "b")`` literal as a tuple of strings, else None."""
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.append(e.value)
+            else:
+                return None
+        return tuple(out)
+    return None
+
+
+def call_kwargs(call: ast.Call) -> Dict[str, ast.AST]:
+    return {kw.arg: kw.value for kw in call.keywords if kw.arg}
+
+
+def eval_engine_sets(mod: ast.Module) -> Dict[str, frozenset]:
+    """Evaluate the literal set algebra of module-level assignments —
+    enough for ``core/api.py``'s engine sets (``frozenset({...})``,
+    ``NAME | {...}``, ``frozenset(NAME - {...})``) without importing the
+    module."""
+    env: Dict[str, frozenset] = {}
+
+    def ev(node: ast.AST) -> Optional[frozenset]:
+        if isinstance(node, ast.Set):
+            vals = [e.value for e in node.elts
+                    if isinstance(e, ast.Constant)]
+            return frozenset(vals) if len(vals) == len(node.elts) else None
+        if isinstance(node, ast.Name):
+            return env.get(node.id)
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in ("frozenset", "set") \
+                and len(node.args) == 1 and not node.keywords:
+            return ev(node.args[0])
+        if isinstance(node, ast.BinOp):
+            left, right = ev(node.left), ev(node.right)
+            if left is None or right is None:
+                return None
+            if isinstance(node.op, ast.BitOr):
+                return left | right
+            if isinstance(node.op, ast.Sub):
+                return left - right
+            if isinstance(node.op, ast.BitAnd):
+                return left & right
+        return None
+
+    for node in mod.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            val = ev(node.value)
+            if val is not None:
+                env[node.targets[0].id] = val
+    return env
+
+
+def literal_str_dict(node: ast.AST) -> Optional[Dict[str, str]]:
+    """A ``{"k": "v"}`` literal as a str->str dict, else None."""
+    if isinstance(node, ast.Dict):
+        out: Dict[str, str] = {}
+        for k, v in zip(node.keys, node.values):
+            if (isinstance(k, ast.Constant) and isinstance(k.value, str)
+                    and isinstance(v, ast.Constant)
+                    and isinstance(v.value, str)):
+                out[k.value] = v.value
+            else:
+                return None
+        return out
+    return None
+
+
+def module_str_dicts(mod: ast.Module) -> Dict[str, Dict[str, str]]:
+    """Every module-level ``NAME = {"k": "v", ...}`` literal dict
+    (plain or annotated assignment)."""
+    out: Dict[str, Dict[str, str]] = {}
+    for node in mod.body:
+        target = value = None
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            target, value = node.targets[0].id, node.value
+        elif isinstance(node, ast.AnnAssign) \
+                and isinstance(node.target, ast.Name) \
+                and node.value is not None:
+            target, value = node.target.id, node.value
+        if target is not None:
+            d = literal_str_dict(value)
+            if d is not None:
+                out[target] = d
+    return out
+
+
+def module_path(module: str) -> str:
+    """``repro.core.spec`` -> ``src/repro/core/spec.py``."""
+    return "src/" + module.replace(".", "/") + ".py"

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
 from typing import List, Optional
 
@@ -112,51 +113,100 @@ def _registry_findings() -> List[str]:
     registered event must compile to ops every engine implements —
     including "jax", whose :class:`~repro.core.sweep_jax.JaxLaneOps`
     consumes the ops through the compiled-timeline segment splitter
-    (per-segment parameter planes) rather than at tick time."""
-    from repro.core.fleet import ArrayProvisionerView
-    from repro.core.provisioner import MultiCloudProvisioner
-    from repro.core.spec import TimelineController
-    from repro.core.sweep import _LaneOps
-    from repro.core.sweep_jax import JaxLaneOps
-    from repro.core.timeline import registry_findings
-    return registry_findings(
-        {"solo": TimelineController, "batched": _LaneOps,
-         "jax": JaxLaneOps},
-        {"object": MultiCloudProvisioner, "array": ArrayProvisionerView})
+    (per-segment parameter planes) rather than at tick time.  The
+    adapter roster is the ``ENGINE_ADAPTERS``/``PROVISIONER_FACADES``
+    metadata in core/timeline.py — the same literal dicts the static
+    analyzer (``campaigns check``) reads without importing."""
+    from repro.core.timeline import (ENGINE_ADAPTERS, PROVISIONER_FACADES,
+                                     registry_findings, resolve_adapters)
+    return registry_findings(resolve_adapters(ENGINE_ADAPTERS),
+                             resolve_adapters(PROVISIONER_FACADES))
+
+
+#: every lint finding leads with its stable rule id (``SPEC014: ...``,
+#: ``REG002: ...``) — split it back out for the --json payload
+_RULE_PREFIX_RE = re.compile(r"^([A-Z]{3,5}\d{3}):\s+(.*)$", re.DOTALL)
+
+
+def _lint_finding(path: str, text: str) -> dict:
+    """One ``campaigns lint`` finding in the ``campaigns check --json``
+    shape (file/line/rule/message/hint) — one schema for both gates."""
+    m = _RULE_PREFIX_RE.match(text)
+    rule, message = (m.group(1), m.group(2)) if m else ("SPEC000", text)
+    return {"file": path, "line": 0, "rule": rule,
+            "message": message, "hint": ""}
 
 
 def cmd_lint(args) -> int:
     """Spec-level validation: report every finding (unsorted/duplicate
     event times, negative prices/targets, unknown catalog/provider
     names) and exit 1 if any spec has one.  ``--registry`` additionally
-    fails on timeline events registered for fewer than all engines."""
+    fails on timeline events registered for fewer than all engines.
+    ``--json PATH`` writes the machine-readable findings (``-`` for
+    stdout, human summary moves to stderr) — same finding shape as
+    ``campaigns check --json``."""
+    as_json = getattr(args, "json", None)
+    out = sys.stderr if as_json == "-" else sys.stdout
     bad = 0
+    collected: List[dict] = []
     if getattr(args, "registry", False):
         findings = _registry_findings()
+        collected.extend(_lint_finding("src/repro/core/timeline.py", f)
+                         for f in findings)
         if findings:
             bad += 1
             for f in findings:
-                print(f"registry: {f}")
+                print(f"registry: {f}", file=out)
         else:
             from repro.core.timeline import REGISTRY
             print(f"registry: OK ({len(REGISTRY)} event kinds on "
-                  "all engines)")
+                  "all engines)", file=out)
     for path in args.spec:
         try:
             spec = _load_spec(path)
         except (OSError, ValueError, KeyError, TypeError) as e:
-            print(f"{path}: ERROR: cannot load spec: {e}")
+            print(f"{path}: ERROR: cannot load spec: {e}", file=out)
+            collected.append(_lint_finding(
+                path, f"SPEC100: cannot load spec: {e}"))
             bad += 1
             continue
         findings = lint_spec(spec)
+        collected.extend(_lint_finding(path, f) for f in findings)
         if findings:
             bad += 1
             for f in findings:
-                print(f"{path}: {f}")
+                print(f"{path}: {f}", file=out)
         else:
             print(f"{path}: OK ({spec.name!r}, "
-                  f"{len(spec.timeline)} timeline events)")
+                  f"{len(spec.timeline)} timeline events)", file=out)
+    if as_json:
+        counts: dict = {}
+        for f in collected:
+            counts[f["rule"]] = counts.get(f["rule"], 0) + 1
+        payload = json.dumps({
+            "schema_version": 1,
+            "tool": "repro.campaigns lint",
+            "specs": list(args.spec),
+            "ok": not bad,
+            "counts": dict(sorted(counts.items())),
+            "findings": collected,
+        }, indent=2, sort_keys=True) + "\n"
+        if as_json == "-":
+            sys.stdout.write(payload)
+        else:
+            with open(as_json, "w") as f:
+                f.write(payload)
+            print(f"# wrote {as_json}", file=sys.stderr)
     return 1 if bad else 0
+
+
+def cmd_check(args) -> int:
+    """Engine-contract static analysis (``repro.analysis.staticcheck``):
+    AST-level drift detection for registry completeness, RNG discipline,
+    trace parity and kernel/oracle pairing.  Exit codes mirror ``diff``:
+    0 clean, 1 findings, 2 bad arguments."""
+    from repro.analysis.staticcheck.cli import run as staticcheck_run
+    return staticcheck_run(args)
 
 
 def cmd_trace(args) -> int:
@@ -309,7 +359,18 @@ def main(argv: Optional[List[str]] = None) -> int:
                         help="also check the timeline-event registry: "
                              "fail on events registered for fewer than "
                              "all engines")
+    p_lint.add_argument("--json", default=None, metavar="PATH",
+                        help="write machine-readable findings here "
+                             "('-' for stdout; same shape as "
+                             "`check --json`)")
     p_lint.set_defaults(fn=cmd_lint)
+
+    p_check = sub.add_parser(
+        "check", help="engine-contract static analysis (AST-level "
+                      "drift detection; exit 1 on findings)")
+    from repro.analysis.staticcheck.cli import add_arguments
+    add_arguments(p_check)
+    p_check.set_defaults(fn=cmd_check)
 
     p_trace = sub.add_parser(
         "trace", help="run one campaign and emit its typed event trace "

@@ -144,9 +144,13 @@ def outage_grid(times_h: Sequence[float] = (60.0, 252.0, 300.0),
                 durations_h: Sequence[float] = (2.0, 12.0)
                 ) -> List[CampaignSpec]:
     """What if the CE had died earlier / stayed down longer?"""
+    # keep the declared timeline time-sorted (lint SPEC103): the outage
+    # lands mid-ramp, not appended after the 192 h ramp steps
     return [paper_spec(name=f"outage-t{int(t)}-d{int(d)}",
-                       timeline=PAPER_RAMP_EVENTS + (
-                           CEOutage(t, d, POST_OUTAGE_TARGET),))
+                       timeline=tuple(sorted(
+                           PAPER_RAMP_EVENTS + (
+                               CEOutage(t, d, POST_OUTAGE_TARGET),),
+                           key=lambda ev: ev.at_h)))
             for t in times_h for d in durations_h]
 
 

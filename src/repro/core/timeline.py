@@ -272,6 +272,39 @@ REGISTRY: Dict[str, EventType] = {}
 OPS: Dict[str, OpSpec] = {}
 _DESCRIBE: Dict[str, OpSpec] = {}          # record "event" -> op
 
+#: THE adapter roster — which class implements :class:`EngineOps` for
+#: each engine, as ``"module:Class"`` strings.  Two consumers read this
+#: single source of truth: ``campaigns lint --registry`` resolves the
+#: classes at runtime (:func:`resolve_adapters` + hasattr drift checks)
+#: and the static analyzer (``repro.analysis.staticcheck``, rule REG002)
+#: reads the *literal* dict from this file's AST without importing
+#: engine code — so keep the values plain string literals.  A new
+#: engine's adapter is registered by adding one line here.
+ENGINE_ADAPTERS: Dict[str, str] = {
+    "solo": "repro.core.spec:TimelineController",
+    "batched": "repro.core.sweep:_LaneOps",
+    "jax": "repro.core.sweep_jax:JaxLaneOps",
+}
+
+#: the solo provisioner facades ops with ``prov_requires`` depend on
+#: (same literal-string contract as :data:`ENGINE_ADAPTERS`; rule
+#: REG003 reads it statically)
+PROVISIONER_FACADES: Dict[str, str] = {
+    "object": "repro.core.provisioner:MultiCloudProvisioner",
+    "array": "repro.core.fleet:ArrayProvisionerView",
+}
+
+
+def resolve_adapters(refs: Mapping[str, str]) -> Dict[str, type]:
+    """Import the ``"module:Class"`` values of an adapter roster —
+    the runtime half of the metadata contract above."""
+    import importlib
+    out: Dict[str, type] = {}
+    for name, ref in refs.items():
+        module, _, cls = ref.partition(":")
+        out[name] = getattr(importlib.import_module(module), cls)
+    return out
+
 
 def register_op(op: OpSpec) -> OpSpec:
     if op.kind in OPS:
@@ -499,7 +532,8 @@ register_event(EventType(
     compile=lambda ev: [(ev.at_h, "scale", ev.target)],
     ops=("scale",),
     lint=lambda ev, at, kp: (
-        [f"{at}: negative target {ev.target}"] if ev.target < 0 else []),
+        [f"SPEC110: {at}: negative target {ev.target}"]
+        if ev.target < 0 else []),
     lint_times=_anchor_times, decode=_identity, validate=_no_validate,
     strategy=lambda st: st.builds(SetTarget, at_h=_st_times(st),
                                   target=st.integers(0, 600)),
@@ -509,9 +543,10 @@ register_event(EventType(
 def _lint_outage(ev, at, known_providers):
     out = []
     if ev.duration_h <= 0:
-        out.append(f"{at}: outage duration must be positive")
+        out.append(f"SPEC111: {at}: outage duration must be positive")
     if ev.resume_target < 0:
-        out.append(f"{at}: negative resume_target {ev.resume_target}")
+        out.append(f"SPEC112: {at}: negative resume_target "
+                   f"{ev.resume_target}")
     return out
 
 
@@ -534,7 +569,7 @@ register_event(EventType(
     compile=lambda ev: [(ev.at_h, "price", ev.factor)],
     ops=("price",),
     lint=lambda ev, at, kp: (
-        [f"{at}: factor must be positive, got {ev.factor}"]
+        [f"SPEC113: {at}: factor must be positive, got {ev.factor}"]
         if ev.factor <= 0 else []),
     lint_times=_anchor_times, decode=_identity, validate=_no_validate,
     strategy=lambda st: st.builds(PriceShift, at_h=_st_times(st),
@@ -545,9 +580,10 @@ register_event(EventType(
 def _lint_floor(ev, at, known_providers):
     out = []
     if not 0.0 <= ev.fraction <= 1.0:
-        out.append(f"{at}: fraction {ev.fraction} outside [0, 1]")
+        out.append(f"SPEC114: {at}: fraction {ev.fraction} "
+                   "outside [0, 1]")
     if ev.downscale_target < 0:
-        out.append(f"{at}: negative downscale_target "
+        out.append(f"SPEC115: {at}: negative downscale_target "
                    f"{ev.downscale_target}")
     return out
 
@@ -572,7 +608,7 @@ register_event(EventType(
     compile=lambda ev: [(ev.at_h, "capacity", ev.factor)],
     ops=("capacity",),
     lint=lambda ev, at, kp: (
-        [f"{at}: factor must be positive, got {ev.factor}"]
+        [f"SPEC113: {at}: factor must be positive, got {ev.factor}"]
         if ev.factor <= 0 else []),
     lint_times=_anchor_times, decode=_identity, validate=_no_validate,
     strategy=lambda st: st.builds(
@@ -584,18 +620,19 @@ register_event(EventType(
 def _lint_price_curve(ev, at, known_providers):
     out = []
     if not ev.points:
-        out.append(f"{at}: empty curve (no points)")
+        out.append(f"SPEC116: {at}: empty curve (no points)")
     pt = None
     for t, f in ev.points:
         if f <= 0:
-            out.append(f"{at}: non-positive price factor {f} at t={t}")
+            out.append(f"SPEC117: {at}: non-positive price factor {f} "
+                       f"at t={t}")
         if pt is not None and t <= pt:
-            out.append(f"{at}: curve points not strictly "
+            out.append(f"SPEC118: {at}: curve points not strictly "
                        f"time-sorted ({t} after {pt})")
         pt = t
     if ev.provider is not None and known_providers is not None \
             and ev.provider not in known_providers:
-        out.append(f"{at}: unknown provider {ev.provider!r} "
+        out.append(f"SPEC119: {at}: unknown provider {ev.provider!r} "
                    f"(catalog has {sorted(known_providers)})")
     return out
 
@@ -622,13 +659,14 @@ register_event(EventType(
 def _lint_workload_curve(ev, at, known_providers):
     out = []
     if not ev.points:
-        out.append(f"{at}: empty curve (no points)")
+        out.append(f"SPEC116: {at}: empty curve (no points)")
     pt = None
     for t, f in ev.points:
         if f < 0:
-            out.append(f"{at}: negative request-rate factor {f} at t={t}")
+            out.append(f"SPEC117: {at}: negative request-rate factor "
+                       f"{f} at t={t}")
         if pt is not None and t <= pt:
-            out.append(f"{at}: curve points not strictly "
+            out.append(f"SPEC118: {at}: curve points not strictly "
                        f"time-sorted ({t} after {pt})")
         pt = t
     return out
@@ -658,14 +696,14 @@ def _lint_origin_provider(provider, at, known_providers) -> List[str]:
     bases = {p.split("/", 1)[0] for p in known_providers}
     if provider in known_providers or provider in bases:
         return []
-    return [f"{at}: unknown provider {provider!r} "
+    return [f"SPEC119: {at}: unknown provider {provider!r} "
             f"(catalog has {sorted(known_providers)})"]
 
 
 def _lint_origin_outage(ev, at, known_providers):
     out = []
     if ev.duration_h <= 0:
-        out.append(f"{at}: outage duration must be positive")
+        out.append(f"SPEC111: {at}: outage duration must be positive")
     out.extend(_lint_origin_provider(ev.provider, at, known_providers))
     return out
 
@@ -673,7 +711,8 @@ def _lint_origin_outage(ev, at, known_providers):
 def _lint_origin_degrade(ev, at, known_providers):
     out = []
     if ev.factor <= 0:
-        out.append(f"{at}: factor must be positive, got {ev.factor}")
+        out.append(f"SPEC113: {at}: factor must be positive, "
+                   f"got {ev.factor}")
     out.extend(_lint_origin_provider(ev.provider, at, known_providers))
     return out
 
@@ -808,30 +847,30 @@ def lint_timeline(timeline: Sequence, duration_h: float,
         at = f"timeline[{i}] {type(ev).__name__}"
         et = REGISTRY.get(getattr(ev, "kind", None))
         if et is None or type(ev) is not et.cls:
-            out.append(f"{at}: unknown timeline event")
+            out.append(f"SPEC101: {at}: unknown timeline event")
             continue
         t0 = ev.at_h
         if t0 < 0:
-            out.append(f"{at}: negative event time {t0}")
+            out.append(f"SPEC102: {at}: negative event time {t0}")
         if prev_t is not None and t0 < prev_t:
-            out.append(f"{at}: event times not sorted "
+            out.append(f"SPEC103: {at}: event times not sorted "
                        f"({t0} after {prev_t})")
         prev_t = max(t0, prev_t) if prev_t is not None else t0
         # dead events never execute: anchor for plain events, every
         # breakpoint for curves
         for t in et.lint_times(ev):
             if t >= duration_h:
-                out.append(f"{at}: fires at t={t} h, at/after the "
-                           f"campaign end ({duration_h} h) — never "
+                out.append(f"SPEC104: {at}: fires at t={t} h, at/after "
+                           f"the campaign end ({duration_h} h) — never "
                            "executes")
         if not et.is_curve:
             seen_times[t0] = seen_times.get(t0, 0) + 1
         out.extend(et.lint(ev, at, known_providers))
     for t, n in seen_times.items():
         if n > 1:
-            out.append(f"timeline: {n} events share t={t} h — they "
-                       "execute in declaration order; split the times "
-                       "if that overlap is unintended")
+            out.append(f"SPEC105: timeline: {n} events share t={t} h — "
+                       "they execute in declaration order; split the "
+                       "times if that overlap is unintended")
     return out
 
 
@@ -856,24 +895,27 @@ def registry_findings(engines: Mapping[str, type],
         for op_kind in et.ops:
             op = OPS.get(op_kind)
             if op is None:
-                out.append(f"event {kind!r}: compiled op {op_kind!r} "
-                           "has no registered handler")
+                # rule ids shared with the static analyzer: this is the
+                # runtime (hasattr) twin of staticcheck's REG family
+                out.append(f"REG001: event {kind!r}: compiled op "
+                           f"{op_kind!r} has no registered handler")
                 continue
             for engine, cls in sorted(engines.items()):
                 missing = sorted(a for a in op.requires
                                  if not hasattr(cls, a))
                 if missing:
                     out.append(
-                        f"event {kind!r}: op {op_kind!r} needs EngineOps "
-                        f"member(s) {missing} missing on the {engine} "
-                        f"adapter ({cls.__module__}.{cls.__name__})")
+                        f"REG002: event {kind!r}: op {op_kind!r} needs "
+                        f"EngineOps member(s) {missing} missing on the "
+                        f"{engine} adapter "
+                        f"({cls.__module__}.{cls.__name__})")
             for prov, cls in sorted((provisioners or {}).items()):
                 missing = sorted(a for a in op.prov_requires
                                  if not hasattr(cls, a))
                 if missing:
                     out.append(
-                        f"event {kind!r}: op {op_kind!r} needs "
-                        f"provisioner member(s) {missing} missing on the "
-                        f"{prov} facade "
+                        f"REG003: event {kind!r}: op {op_kind!r} needs "
+                        f"provisioner member(s) {missing} missing on "
+                        f"the {prov} facade "
                         f"({cls.__module__}.{cls.__name__})")
     return out

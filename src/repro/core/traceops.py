@@ -337,7 +337,7 @@ def _aligned_event_counts(ga: Dict, gb: Dict) -> Tuple[int, int, int]:
     counts.  A retimed/retargeted event on a shared entity counts as
     changed; surplus events count as added (b-only) / removed (a-only)."""
     added = removed = changed = 0
-    for k in set(ga) | set(gb):
+    for k in sorted(set(ga) | set(gb), key=repr):
         ea, eb = ga.get(k, ()), gb.get(k, ())
         n = min(len(ea), len(eb))
         changed += sum(1 for i in range(n) if ea[i] != eb[i])
@@ -468,7 +468,7 @@ def diff_traces(a: CampaignTrace, b: CampaignTrace) -> TraceDiff:
     by_kind: Dict[str, Dict[str, int]] = {}
     domain_a: Dict[str, Dict] = {}
     domain_b: Dict[str, Dict] = {}
-    for kind in set(part_a) | set(part_b):
+    for kind in sorted(set(part_a) | set(part_b)):
         domain, attr = _ENTITY_ATTR[kind]
         ga = _group_by(part_a.get(kind, ()), attr)
         gb = _group_by(part_b.get(kind, ()), attr)
@@ -485,7 +485,7 @@ def diff_traces(a: CampaignTrace, b: CampaignTrace) -> TraceDiff:
                     gid, []).extend(evs)
 
     entities: Dict[str, Dict[str, int]] = {}
-    for domain in set(domain_a) | set(domain_b):
+    for domain in sorted(set(domain_a) | set(domain_b)):
         # merged-domain per-entity timelines in canonical trace order
         ga = {k: sorted(v, key=lambda e: (e.t, _KIND_RANK[e.kind]))
               for k, v in domain_a.get(domain, {}).items()}

@@ -1,0 +1,355 @@
+"""The engine-contract static analyzer (repro.analysis.staticcheck).
+
+Covers the PR-10 tentpole:
+
+  * the committed tree is clean — ``analyze()`` returns no findings
+    (the same gate CI runs),
+  * each rule family catches its seeded contract mutation, injected
+    through ``overrides`` without touching the working tree: an event
+    left unimplemented on ``JaxLaneOps`` (REG002), a stray
+    ``np.random.seed`` in core (RNG001), a recorder choke point removed
+    from one engine (TRC001), a Pallas kernel landing without its
+    oracle or test exercise (KRN001/KRN002),
+  * per-rule positive *and* negative fixtures (the sanctioned idioms —
+    ``default_rng``, ``random.Random``, ``sorted(set(...))`` — stay
+    silent),
+  * inline ``# staticcheck: ignore[...]`` suppressions and the
+    baseline file (apply/unused/write round trip),
+  * the CLI surfaces: exit codes 0/1/2, ``--json`` payload schema,
+    ``--rules`` filtering, ``--list-rules``, and the ``campaigns
+    check`` / ``campaigns lint --json`` front doors sharing one
+    findings schema.
+"""
+import json
+
+import pytest
+
+from repro.analysis.staticcheck import RULES, analyze, find_repo_root
+from repro.analysis.staticcheck.baseline import (apply_baseline,
+                                                 load_baseline,
+                                                 write_baseline)
+from repro.analysis.staticcheck.cli import main as staticcheck_main
+from repro.analysis.staticcheck.findings import Finding
+
+ROOT = str(find_repo_root())
+
+# a synthetic module matched by the determinism rule's core/ glob; the
+# file does not exist on disk — overrides add it
+SYNTH = "src/repro/core/_synthetic_fixture.py"
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+# -- the committed tree is the contract ------------------------------------
+
+def test_committed_tree_is_clean():
+    assert analyze(ROOT) == []
+
+
+def test_rule_catalog_families():
+    assert {r[:3] for r in RULES} == {"REG", "RNG", "TRC", "KRN"}
+    # ids share the lint SPEC id shape: family + 3 digits
+    assert all(len(r) == 6 and r[3:].isdigit() for r in RULES)
+
+
+# -- seeded contract mutations (the acceptance matrix) ---------------------
+
+def test_reg002_event_without_jax_adapter_body():
+    # gut sweep_jax.py: JaxLaneOps loses every EngineOps body.  The
+    # module would no longer even import — the static rule still sees it.
+    gutted = "class JaxLaneOps:\n    pass\n"
+    findings = analyze(ROOT, overrides={
+        "src/repro/core/sweep_jax.py": gutted})
+    reg2 = [f for f in findings if f.rule == "REG002"]
+    assert reg2, findings
+    assert all(f.file == "src/repro/core/sweep_jax.py" for f in reg2)
+    assert any("'jax' adapter" in f.message for f in reg2)
+    # scale_to is required by the set_target op on every adapter
+    assert any("scale_to" in f.message for f in reg2)
+
+
+def test_rng001_global_numpy_rng_in_core():
+    fleet = open(f"{ROOT}/src/repro/core/fleet.py").read()
+    findings = analyze(ROOT, overrides={
+        "src/repro/core/fleet.py":
+            fleet + "\n\ndef _warmup():\n    np.random.seed(0)\n"})
+    rng = [f for f in findings if f.rule == "RNG001"]
+    assert len(rng) == 1
+    assert rng[0].file == "src/repro/core/fleet.py"
+    assert "np.random.seed" in rng[0].message
+    # trailing newline + two blank lines + the def line put the call
+    # four lines past the original last line
+    assert rng[0].line == len(fleet.splitlines()) + 4
+
+
+def test_trc001_recorder_call_removed_from_one_engine():
+    # disconnect the array engine's nat_drop choke point (the call's
+    # receiver no longer ends in `recorder`, so the call disappears
+    # from the engine's emission set)
+    fleet = open(f"{ROOT}/src/repro/core/fleet.py").read()
+    assert "self.recorder.nat_drop(" in fleet
+    findings = analyze(ROOT, overrides={
+        "src/repro/core/fleet.py": fleet.replace(
+            "self.recorder.nat_drop(", "self._nat_drop_disabled(")})
+    trc = [f for f in findings if f.rule == "TRC001"]
+    assert len(trc) == 1
+    assert trc[0].file == "src/repro/core/fleet.py"
+    assert "nat_drop" in trc[0].message and "'array'" in trc[0].message
+
+
+def test_krn001_krn002_kernel_without_oracle_or_test():
+    findings = analyze(ROOT, overrides={
+        "src/repro/kernels/fancy.py":
+            "def fancy_kernel(x_ref, o_ref):\n"
+            "    o_ref[...] = x_ref[...]\n"})
+    assert rules_of(findings) == {"KRN001", "KRN002"}
+    assert all(f.file == "src/repro/kernels/fancy.py" for f in findings)
+    assert any("fancy_ref" in f.message for f in findings)
+
+
+# -- per-rule synthetic fixtures (positive + negative) ---------------------
+
+def test_rng_rules_flag_the_bad_forms():
+    findings = analyze(ROOT, overrides={SYNTH: (
+        "import random\n"
+        "import time\n"
+        "import numpy as np\n\n"
+        "def bad():\n"
+        "    a = np.random.rand(3)\n"            # RNG001
+        "    b = random.random()\n"              # RNG002
+        "    t = time.time()\n"                  # RNG003
+        "    for x in {1, 2, 3}:\n"              # RNG004
+        "        pass\n"
+        "    return a, b, t\n")}, rules=frozenset(
+            {"RNG001", "RNG002", "RNG003", "RNG004"}))
+    mine = [f for f in findings if f.file == SYNTH]
+    assert [f.rule for f in mine] == ["RNG001", "RNG002", "RNG003",
+                                      "RNG004"]
+    assert [f.line for f in mine] == [6, 7, 8, 9]
+
+
+def test_rng_rules_stay_silent_on_the_sanctioned_idioms():
+    findings = analyze(ROOT, overrides={SYNTH: (
+        "import random\n"
+        "import numpy as np\n\n"
+        "def good(seed):\n"
+        "    rng = np.random.default_rng(seed)\n"
+        "    r = random.Random(seed)\n"
+        "    for x in sorted({3, 1, 2}):\n"
+        "        pass\n"
+        "    for y in sorted(set('ab') | set('cd')):\n"
+        "        pass\n"
+        "    return rng, r\n")})
+    assert [f for f in findings if f.file == SYNTH] == []
+
+
+def test_rng002_from_import_and_set_algebra_iteration():
+    findings = analyze(ROOT, overrides={SYNTH: (
+        "from random import shuffle\n\n"
+        "def bad(a, b):\n"
+        "    for k in set(a) | set(b):\n"
+        "        pass\n")})
+    mine = [f for f in findings if f.file == SYNTH]
+    assert [f.rule for f in mine] == ["RNG002", "RNG004"]
+
+
+def test_trc002_unknown_recorder_method():
+    fleet = open(f"{ROOT}/src/repro/core/fleet.py").read()
+    findings = analyze(ROOT, overrides={
+        "src/repro/core/fleet.py": fleet.replace(
+            "self.recorder.nat_drop(", "self.recorder.nat_dropped(")})
+    assert {"TRC001", "TRC002"} <= rules_of(findings)
+
+
+def test_trc003_trace_engine_without_instrumentation_map():
+    api = open(f"{ROOT}/src/repro/core/api.py").read()
+    assert 'TRACE_ENGINES = frozenset(SWEEP_ENGINES - {"jax"})' in api
+    findings = analyze(ROOT, overrides={
+        "src/repro/core/api.py": api.replace(
+            'TRACE_ENGINES = frozenset(SWEEP_ENGINES - {"jax"})',
+            'TRACE_ENGINES = frozenset(SWEEP_ENGINES)')})
+    trc3 = [f for f in findings if f.rule == "TRC003"]
+    assert len(trc3) == 1 and "'jax'" in trc3[0].message
+
+
+def test_reg001_event_compiling_to_unregistered_op():
+    timeline = open(f"{ROOT}/src/repro/core/timeline.py").read()
+    findings = analyze(ROOT, overrides={
+        "src/repro/core/timeline.py": timeline.replace(
+            'ops=("scale",),', 'ops=("scale", "warp"),', 1)})
+    reg1 = [f for f in findings if f.rule == "REG001"]
+    assert len(reg1) == 1 and "'warp'" in reg1[0].message
+
+
+def test_reg004_missing_adapter_metadata():
+    timeline = open(f"{ROOT}/src/repro/core/timeline.py").read()
+    findings = analyze(ROOT, overrides={
+        "src/repro/core/timeline.py": timeline.replace(
+            "ENGINE_ADAPTERS", "ENGINE_ADAPTERS_RENAMED")})
+    assert "REG004" in rules_of(findings)
+
+
+# -- suppressions ----------------------------------------------------------
+
+def test_inline_suppression_same_line_and_line_above():
+    base = ("import numpy as np\n\n"
+            "def f():\n")
+    same = base + ("    np.random.rand()  "
+                   "# staticcheck: ignore[RNG001]\n")
+    above = base + ("    # staticcheck: ignore[RNG001] — fixture\n"
+                    "    np.random.rand()\n")
+    wrong = base + ("    np.random.rand()  "
+                    "# staticcheck: ignore[RNG002]\n")
+    for text, want in ((same, []), (above, []), (wrong, ["RNG001"])):
+        findings = analyze(ROOT, overrides={SYNTH: text})
+        assert [f.rule for f in findings if f.file == SYNTH] == want
+
+
+def test_baseline_round_trip(tmp_path):
+    f1 = Finding("src/a.py", 3, "TRC001", "engine gap")
+    f2 = Finding("src/b.py", 9, "RNG001", "np.random.rand")
+    path = tmp_path / "base.json"
+    write_baseline(str(path), [f1], reason="accepted debt")
+    sups = load_baseline(str(path))
+    assert sups[0]["reason"] == "accepted debt"
+    kept, unused = apply_baseline([f1, f2], sups)
+    assert kept == [f2] and unused == []
+    # prefix match + unused surfacing
+    kept, unused = apply_baseline(
+        [f2], [{"rule": "RNG001", "file": "src/b.py", "match": "np.*"},
+               {"rule": "TRC001", "file": "src/a.py"}])
+    assert kept == [] and unused == [{"rule": "TRC001",
+                                      "file": "src/a.py"}]
+
+
+# -- CLI surfaces ----------------------------------------------------------
+
+def test_cli_exit_0_and_json_payload(tmp_path, capsys):
+    out = tmp_path / "findings.json"
+    assert staticcheck_main(["--root", ROOT, "--json", str(out)]) == 0
+    assert "staticcheck: OK" in capsys.readouterr().out
+    payload = json.loads(out.read_text())
+    assert payload["schema_version"] == 1
+    assert payload["ok"] is True
+    assert payload["findings"] == [] and payload["counts"] == {}
+
+
+def test_cli_exit_1_on_findings(tmp_path, capsys):
+    bad = tmp_path / "repo"
+    (bad / "src" / "repro" / "core").mkdir(parents=True)
+    (bad / "tests").mkdir()
+    (bad / "src" / "repro" / "core" / "loose.py").write_text(
+        "import numpy as np\nnp.random.seed(7)\n")
+    assert staticcheck_main(["--root", str(bad), "--rules", "RNG001",
+                             "--json", "-"]) == 1
+    cap = capsys.readouterr()
+    payload = json.loads(cap.out)
+    assert payload["ok"] is False
+    assert payload["counts"] == {"RNG001": 1}
+    (f,) = payload["findings"]
+    assert f["rule"] == "RNG001" and f["line"] == 2
+    assert "staticcheck: 1 finding(s)" in cap.err
+
+
+def test_cli_exit_2_on_unknown_rule(capsys):
+    assert staticcheck_main(["--root", ROOT,
+                             "--rules", "NOPE999"]) == 2
+    assert "unknown rule" in capsys.readouterr().err
+
+
+def test_cli_baseline_flow(tmp_path, capsys):
+    bad = tmp_path / "repo"
+    (bad / "src" / "repro" / "core").mkdir(parents=True)
+    (bad / "tests").mkdir()
+    (bad / "src" / "repro" / "core" / "loose.py").write_text(
+        "import numpy as np\nnp.random.seed(7)\n")
+    base = tmp_path / "base.json"
+    args = ["--root", str(bad), "--rules", "RNG001"]
+    assert staticcheck_main(args + ["--write-baseline",
+                                    str(base)]) == 0
+    # baselined finding no longer fails the gate ...
+    assert staticcheck_main(args + ["--baseline", str(base)]) == 0
+    # ... --no-baseline reports the raw state again
+    assert staticcheck_main(args + ["--no-baseline"]) == 1
+    # the default committed baseline is picked up from the root
+    capsys.readouterr()
+    (bad / ".staticcheck-baseline.json").write_text(base.read_text())
+    assert staticcheck_main(args) == 0
+    # fixing the finding surfaces the now-stale suppression
+    (bad / "src" / "repro" / "core" / "loose.py").write_text("x = 1\n")
+    assert staticcheck_main(args) == 0
+    assert "unused baseline suppression" in capsys.readouterr().out
+    # a *requested* baseline that is missing is a usage error
+    assert staticcheck_main(args + ["--baseline",
+                                    str(tmp_path / "no.json")]) == 2
+
+
+def test_cli_list_rules(capsys):
+    assert staticcheck_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    assert all(r in out for r in RULES)
+
+
+# -- the campaigns front doors ---------------------------------------------
+
+def test_campaigns_check_clean(capsys):
+    from repro import campaigns as cli
+    assert cli.main(["check", "--root", ROOT]) == 0
+    assert "staticcheck: OK" in capsys.readouterr().out
+
+
+def test_campaigns_lint_json_shares_the_findings_schema(tmp_path,
+                                                        capsys):
+    from repro import campaigns as cli
+    from repro.core.spec import CampaignSpec, SetTarget
+    bad = CampaignSpec(name="bad", duration_h=24.0,
+                       timeline=(SetTarget(6.0, -5),))
+    p = tmp_path / "bad.spec.json"
+    p.write_text(bad.to_json())
+    assert cli.main(["lint", str(p), "--json", "-"]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["ok"] is False
+    assert payload["counts"] == {"SPEC110": 1}
+    (f,) = payload["findings"]
+    # the exact field set `campaigns check --json` emits
+    assert set(f) == {"file", "line", "rule", "message", "hint"}
+    assert f["rule"] == "SPEC110" and f["file"] == str(p)
+    assert "negative target" in f["message"]
+
+
+def test_campaigns_lint_json_registry_and_file(tmp_path, capsys):
+    from repro import campaigns as cli
+    from repro.core.spec import paper_spec
+    good = tmp_path / "good.spec.json"
+    good.write_text(paper_spec().to_json())
+    out = tmp_path / "findings.json"
+    assert cli.main(["lint", str(good), "--registry",
+                     "--json", str(out)]) == 0
+    payload = json.loads(out.read_text())
+    assert payload["ok"] is True and payload["findings"] == []
+    assert "OK" in capsys.readouterr().out
+
+
+def test_spec_rule_ids_are_stable_and_catalogued():
+    from repro.core.spec import SPEC_RULES, CampaignSpec, lint_spec
+    from repro.core.timeline import SetTarget
+    findings = lint_spec(CampaignSpec(
+        name="bad", catalog="warp", duration_h=-1.0,
+        timeline=(SetTarget(6.0, -5), SetTarget(6.0, 7))))
+    ids = {f.split(":", 1)[0] for f in findings}
+    # every finding leads with a catalogued SPEC id
+    assert ids <= set(SPEC_RULES)
+    assert {"SPEC001", "SPEC002", "SPEC110"} <= ids
+
+
+def test_registry_findings_carry_reg_ids():
+    from repro.core import timeline
+
+    class HalfEngine:
+        pass
+
+    findings = timeline.registry_findings({"half": HalfEngine})
+    assert findings
+    assert all(f.startswith("REG00") for f in findings)
